@@ -1,0 +1,67 @@
+"""Kernel microbenchmarks.
+
+On this CPU container Pallas runs in interpret mode (functional, not
+performant), so the wall-clock numbers that matter here are the XLA-compiled
+equivalents of the kernels' MATH: int8 counting GEMM vs fp32 GEMM, and the
+bit-packing density. The Pallas kernels themselves are timed once for
+regression tracking (interpret-mode latency).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import random_boolean
+from repro.kernels import ops
+from repro.kernels.packed_xnor import pack_bits
+
+
+def _time(fn, *args, reps=5):
+    fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.time() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    M = K = N = 512
+    x8 = random_boolean(jax.random.PRNGKey(0), (M, K))
+    w8 = random_boolean(jax.random.PRNGKey(1), (K, N))
+    xf = x8.astype(jnp.float32)
+    wf = w8.astype(jnp.float32)
+
+    f_int8 = jax.jit(lambda a, b: jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32))
+    f_fp32 = jax.jit(lambda a, b: a @ b)
+    t_int8 = _time(f_int8, x8, w8)
+    t_fp32 = _time(f_fp32, xf, wf)
+    rows.append(("kernels/xla_int8_counting_gemm_512", t_int8,
+                 f"speedup_vs_fp32={t_fp32/t_int8:.2f}x"))
+    rows.append(("kernels/xla_fp32_gemm_512", t_fp32, ""))
+
+    # bit-packing density (weights bytes on the wire / in HBM)
+    packed = pack_bits(w8, axis=0)
+    rows.append(("kernels/pack_density", 0.0,
+                 f"{w8.size / packed.nbytes:.1f}bool_per_byte"))
+
+    # Pallas interpret-mode latencies (regression tracking only)
+    t_pal = _time(lambda a, b: ops.boolean_matmul(
+        a, b, block_m=128, block_n=128, block_k=128), x8, w8, reps=2)
+    rows.append(("kernels/pallas_boolean_matmul_interp", t_pal,
+                 "interpret-mode"))
+    t_px = _time(lambda a, b: ops.packed_xnor_matmul(
+        a, b, k_valid=K, block_m=128, block_n=128, block_kw=16),
+        pack_bits(x8, -1), pack_bits(w8, 0), reps=2)
+    rows.append(("kernels/pallas_packed_xnor_interp", t_px,
+                 "interpret-mode"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,58 @@
+"""§Roofline reader: aggregates results/dryrun/*.json into the roofline
+table (per arch × shape × mesh: three terms, bottleneck, MODEL_FLOPS
+ratio)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(tag="baseline"):
+    rows = []
+    for f in sorted(RESULTS.glob(f"*__{tag}.json")):
+        d = json.loads(f.read_text())
+        rows.append(d)
+    return rows
+
+
+def table(tag="baseline"):
+    out = []
+    for d in load(tag):
+        name = f"{d['arch']}×{d['shape']}×{d['mesh']}"
+        if d.get("status") == "skipped":
+            out.append((f"roofline/{name}", 0.0, "SKIP(full-attention@500k)"))
+            continue
+        if d.get("status") == "error":
+            out.append((f"roofline/{name}", 0.0, "ERROR"))
+            continue
+        r = d["roofline"]
+        mem_gib = d.get("peak_bytes_per_device", 0) / 2 ** 30
+        derived = (f"c={r['compute_s']:.3f}s m={r['memory_s']:.3f}s "
+                   f"n={r['collective_s']:.3f}s dom={r['bottleneck']} "
+                   f"useful={d.get('useful_flops_ratio', 0):.2f} "
+                   f"mem={mem_gib:.1f}GiB")
+        out.append((f"roofline/{name}", d.get("compile_s", 0) * 1e6, derived))
+    return out
+
+
+def run():
+    rows = table()
+    # optimized-variant rows (per-cell knobs: scatter MoE etc) side-by-side
+    for d in load("optimized"):
+        if d.get("status") != "ok":
+            continue
+        r = d["roofline"]
+        name = f"{d['arch']}×{d['shape']}×{d['mesh']}[optimized]"
+        rows.append((f"roofline/{name}", d.get("compile_s", 0) * 1e6,
+                     f"c={r['compute_s']:.3f}s m={r['memory_s']:.3f}s "
+                     f"n={r['collective_s']:.3f}s dom={r['bottleneck']} "
+                     f"useful={d.get('useful_flops_ratio', 0):.2f} "
+                     f"mem={d.get('peak_bytes_per_device',0)/2**30:.1f}GiB"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,35 @@
+"""Benchmark harness — one module per paper table + roofline + kernels.
+Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_kernels, roofline, table2_cifar_vgg,
+                            table3_superres, table5_imagenet_energy,
+                            table7_bert_glue)
+    modules = [
+        ("table2", table2_cifar_vgg),
+        ("table3", table3_superres),
+        ("table5", table5_imagenet_energy),
+        ("table7", table7_bert_glue),
+        ("kernels", bench_kernels),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            for row in mod.run():
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception as e:
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name}/ERROR,0,{type(e).__name__}", flush=True)
+        print(f"{name}/_wall_s,{(time.time()-t0)*1e6:.0f},", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Table 2 analog: VGG-SMALL on CIFAR10 — accuracy + training-iteration
+energy vs the FP baseline (Cons.% columns), on Ascend / V100 / TPU-v5e.
+
+Accuracy: reduced VGG on synthetic CIFAR-like data (offline container),
+Boolean vs FP under the same step budget. Energy: the App-E analytic model
+over the FULL VGG-SMALL layer shapes (exact Table-2 setting).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.bold_vgg_small import CONFIG as VGG_FULL, SMOKE as VGG_SMOKE
+from repro.core import adam, boolean_optimizer
+from repro.energy import ASCEND, TPU_V5E, V100, ConvShape, LinearShape, \
+    training_energy
+from repro.vision import vgg_init, vgg_loss
+
+
+def vgg_small_layers(batch: int = 100):
+    """VGG-SMALL conv stack (paper: 6 convs 128/256/512 + FC) on 32x32."""
+    layers, hw, cin = [], 32, 3
+    for cout in (128, 128, 256, 256, 512, 512):
+        layers.append(ConvShape(N=batch, M=cout, C=cin, HI=hw, WI=hw,
+                                HF=3, WF=3))
+        if cout != cin:
+            pass
+        cin = cout
+        if cout in (128, 256, 512) and layers and len(layers) % 2 == 0:
+            hw //= 2
+    layers.append(LinearShape(N=batch, Cin=512 * 4 * 4, Cout=1024))
+    layers.append(LinearShape(N=batch, Cin=1024, Cout=10))
+    return layers
+
+
+def energy_rows():
+    layers = vgg_small_layers()
+    rows = []
+    for hw in (ASCEND, V100, TPU_V5E):
+        fp = training_energy(layers, hw, "fp32", "fp32")["total_pj"]
+        bnn = training_energy(layers, hw, "bool", "bool",
+                              latent_weights=True)["total_pj"]
+        bold = training_energy(layers, hw, "bool", "bool",
+                               latent_weights=False)["total_pj"]
+        rows.append((hw.name, 100.0, 100.0 * bnn / fp, 100.0 * bold / fp))
+    return rows
+
+
+def accuracy_run(boolean: bool, steps: int = 80):
+    cfg = VGG_SMOKE.scaled(boolean=boolean)
+    key = jax.random.PRNGKey(0)
+    kx, ky, kc = jax.random.split(key, 3)
+    labels = jax.random.randint(ky, (2048,), 0, cfg.n_classes)
+    centers = jax.random.normal(kc, (cfg.n_classes, 3))
+    imgs = centers[labels][:, None, None, :] + 0.4 * jax.random.normal(
+        kx, (2048, cfg.input_hw, cfg.input_hw, 3))
+
+    params = vgg_init(jax.random.PRNGKey(1), cfg)
+    bool_t = jax.tree.map(lambda p: p if p.dtype == jnp.int8 else None, params)
+    fp_t = jax.tree.map(lambda p: None if p.dtype == jnp.int8 else p, params)
+    bopt, fopt = boolean_optimizer(6.0), adam(2e-3)
+    bstate, fstate = bopt.init(bool_t), fopt.init(fp_t)
+
+    def merge(b, f):
+        return jax.tree.map(lambda x, y: x if y is None else y, b, f,
+                            is_leaf=lambda v: v is None)
+
+    @jax.jit
+    def step(bool_t, fp_t, bstate, fstate, x, y):
+        pf = merge(jax.tree.map(
+            lambda p: p.astype(jnp.float32) if p is not None else None,
+            bool_t, is_leaf=lambda v: v is None), fp_t)
+        (loss, acc), g = jax.value_and_grad(
+            lambda pf_: vgg_loss(pf_, cfg, x, y), has_aux=True)(pf)
+        bg = jax.tree.map(lambda p, gi: gi if p is not None else None,
+                          bool_t, g, is_leaf=lambda v: v is None)
+        fg = jax.tree.map(lambda p, gi: gi if p is not None else None,
+                          fp_t, g, is_leaf=lambda v: v is None)
+        bool_t, bstate = bopt.update(bg, bstate, bool_t)
+        fp_t, fstate = fopt.update(fg, fstate, fp_t)
+        return bool_t, fp_t, bstate, fstate, loss, acc
+
+    acc = 0.0
+    t0 = time.time()
+    for s in range(steps):
+        i = (s * 64) % (2048 - 64)
+        bool_t, fp_t, bstate, fstate, loss, acc = step(
+            bool_t, fp_t, bstate, fstate, imgs[i:i + 64], labels[i:i + 64])
+    dt = (time.time() - t0) / steps
+    return float(acc), dt
+
+
+def run():
+    rows = []
+    acc_bold, dt_bold = accuracy_run(boolean=True)
+    acc_fp, dt_fp = accuracy_run(boolean=False)
+    rows.append(("table2/acc_boolean_vgg", dt_bold * 1e6, f"{acc_bold:.3f}"))
+    rows.append(("table2/acc_fp_vgg", dt_fp * 1e6, f"{acc_fp:.3f}"))
+    for hw, fp_pct, bnn_pct, bold_pct in energy_rows():
+        rows.append((f"table2/energy_{hw}_bold_vs_fp_pct", 0.0,
+                     f"{bold_pct:.2f}"))
+        rows.append((f"table2/energy_{hw}_bnnlatent_vs_fp_pct", 0.0,
+                     f"{bnn_pct:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,49 @@
+"""Table 5 analog: RESNET18/ImageNet training-iteration energy — B⊕LD vs
+BNN-latent-weight vs FP baseline, per hardware (the paper's Cons.% columns),
+from the App-E analytic model over the exact ResNet18 layer shapes."""
+from __future__ import annotations
+
+from repro.energy import ASCEND, TPU_V5E, V100, ConvShape, LinearShape, \
+    training_energy
+
+
+def resnet18_layers(batch: int = 256, base: int = 64):
+    """ResNet18 conv shapes at 224x224 (Base column scales filters)."""
+    L = []
+    L.append(ConvShape(N=batch, M=base, C=3, HI=224, WI=224, HF=7, WF=7,
+                       stride=2))
+    hw, cin = 56, base
+    for stage, cout_mult in enumerate((1, 2, 4, 8)):
+        cout = base * cout_mult
+        for blk in range(2):
+            stride = 2 if (stage > 0 and blk == 0) else 1
+            L.append(ConvShape(N=batch, M=cout, C=cin, HI=hw, WI=hw,
+                               HF=3, WF=3, stride=stride))
+            if stride == 2:
+                hw //= 2
+            L.append(ConvShape(N=batch, M=cout, C=cout, HI=hw, WI=hw,
+                               HF=3, WF=3))
+            cin = cout
+    L.append(LinearShape(N=batch, Cin=base * 8, Cout=1000))
+    return L
+
+
+def run():
+    rows = []
+    for base, tag in ((64, "base64"), (256, "base256")):
+        layers = resnet18_layers(base=base)
+        for hw in (ASCEND, V100, TPU_V5E):
+            fp = training_energy(layers, hw, "fp32", "fp32")["total_pj"]
+            bnn = training_energy(layers, hw, "bool", "bool",
+                                  latent_weights=True)["total_pj"]
+            bold = training_energy(layers, hw, "bool", "bool")["total_pj"]
+            rows.append((f"table5/{tag}_{hw.name}_bold_vs_fp_pct", 0.0,
+                         f"{100*bold/fp:.2f}"))
+            rows.append((f"table5/{tag}_{hw.name}_bnn_vs_fp_pct", 0.0,
+                         f"{100*bnn/fp:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,98 @@
+"""Paper §4.3 adaptability scenario: train Boolean VGG on task A, then
+fine-tune the SAME native-Boolean weights on task B (the edge/on-device
+training story — Table 6 REF C→F/H).
+
+Synthetic CIFAR-like tasks (class-conditional blob images) stand in for
+CIFAR10/100 in this offline container; the mechanism (Boolean fine-tuning
+with flip-rule optimization from a Boolean init) is the paper's.
+
+    PYTHONPATH=src python examples/finetune_boolean_cnn.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.bold_vgg_small import SMOKE as VGG_SMOKE
+from repro.core import adam, boolean_optimizer
+from repro.vision import vgg_init, vgg_apply, vgg_loss
+
+
+def synthetic_task(key, n, hw, n_classes, shift=0.0):
+    """Class-conditional Gaussian-blob images."""
+    kx, ky, kc = jax.random.split(key, 3)
+    labels = jax.random.randint(ky, (n,), 0, n_classes)
+    centers = jax.random.normal(kc, (n_classes, 3)) + shift
+    base = centers[labels][:, None, None, :]
+    imgs = base + 0.4 * jax.random.normal(kx, (n, hw, hw, 3))
+    return jnp.clip(imgs, -3, 3), labels
+
+
+def split_params(params):
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    bool_t = jax.tree.map(lambda p: p if p.dtype == jnp.int8 else None, params)
+    fp_t = jax.tree.map(lambda p: None if p.dtype == jnp.int8 else p, params)
+    return bool_t, fp_t
+
+
+def train(params, cfg, xs, ys, steps, eta, fp_lr, tag):
+    bopt, fopt = boolean_optimizer(eta), adam(fp_lr)
+    bool_t, fp_t = split_params(params)
+    bstate, fstate = bopt.init(bool_t), fopt.init(fp_t)
+
+    def merge(b, f):
+        return jax.tree.map(lambda x, y: x if y is None else y, b, f,
+                            is_leaf=lambda v: v is None)
+
+    @jax.jit
+    def step(bool_t, fp_t, bstate, fstate, x, y):
+        def loss_fn(pf):
+            return vgg_loss(pf, cfg, x, y)
+        pf = merge(jax.tree.map(
+            lambda p: p.astype(jnp.float32) if p is not None else None,
+            bool_t, is_leaf=lambda v: v is None), fp_t)
+        (loss, acc), g = jax.value_and_grad(loss_fn, has_aux=True)(pf)
+        bg = jax.tree.map(lambda p, gi: gi if p is not None else None,
+                          bool_t, g, is_leaf=lambda v: v is None)
+        fg = jax.tree.map(lambda p, gi: gi if p is not None else None,
+                          fp_t, g, is_leaf=lambda v: v is None)
+        bool_t2, bstate2 = bopt.update(bg, bstate, bool_t)
+        fp_t2, fstate2 = fopt.update(fg, fstate, fp_t)
+        return bool_t2, fp_t2, bstate2, fstate2, loss, acc
+
+    n = xs.shape[0]
+    bs = 64
+    for s in range(steps):
+        i = (s * bs) % (n - bs)
+        bool_t, fp_t, bstate, fstate, loss, acc = step(
+            bool_t, fp_t, bstate, fstate, xs[i:i + bs], ys[i:i + bs])
+        if s % 20 == 0:
+            print(f"[{tag}] step {s:3d} loss {float(loss):.3f} "
+                  f"acc {float(acc):.3f}")
+    return merge(bool_t, fp_t), float(acc)
+
+
+def main():
+    cfg = VGG_SMOKE
+    key = jax.random.PRNGKey(0)
+    xa, ya = synthetic_task(jax.random.PRNGKey(1), 2048, cfg.input_hw,
+                            cfg.n_classes)
+    xb, yb = synthetic_task(jax.random.PRNGKey(2), 2048, cfg.input_hw,
+                            cfg.n_classes, shift=1.5)
+
+    params = vgg_init(key, cfg)
+    params_a, acc_a = train(params, cfg, xa, ya, 100, eta=6.0, fp_lr=2e-3,
+                            tag="task-A scratch")
+    # fine-tune the trained Boolean weights on task B (REF F scenario)
+    _, acc_ab = train(params_a, cfg, xb, yb, 60, eta=3.0, fp_lr=1e-3,
+                      tag="task-B finetune")
+    # control: task B from random init with the same budget
+    params2 = vgg_init(jax.random.PRNGKey(9), cfg)
+    _, acc_b = train(params2, cfg, xb, yb, 60, eta=6.0, fp_lr=2e-3,
+                     tag="task-B scratch")
+    print(f"\ntask-A acc {acc_a:.3f} | task-B finetuned {acc_ab:.3f} "
+          f"vs scratch {acc_b:.3f}")
+    print("Boolean fine-tuning from a trained Boolean init works natively "
+          "(paper Table 6).")
+
+
+if __name__ == "__main__":
+    main()

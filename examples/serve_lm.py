@@ -1,0 +1,51 @@
+"""Serve a B⊕LD LM with batched requests: prefill + greedy decode on int8
+Boolean weights (optionally with the int8-quantized KV cache).
+
+    PYTHONPATH=src python examples/serve_lm.py --batch 4 --gen 24
+"""
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--kv-quant", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_smoke
+    from repro.models import lm_init
+    from repro.serve import ServeEngine
+
+    cfg = get_smoke(args.arch).scaled(kv_cache_quant=args.kv_quant)
+    params, _ = lm_init(jax.random.PRNGKey(0), cfg)
+    nbytes = sum(p.size * p.dtype.itemsize for p in jax.tree.leaves(params))
+    print(f"[serve] {cfg.name}: resident weights {nbytes/2**20:.1f} MiB "
+          f"(Boolean leaves stored int8)")
+
+    engine = ServeEngine(cfg, params, max_len=args.prompt_len + args.gen)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    # warmup (compile)
+    engine.generate(prompts, 2)
+    t0 = time.time()
+    out = engine.generate(prompts, args.gen)
+    dt = time.time() - t0
+    print(f"[serve] batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen}: {args.batch*args.gen/dt:.1f} tok/s")
+    for b in range(min(args.batch, 2)):
+        print(f"[serve] request {b}: {out[b, :12].tolist()} ...")
+    # greedy decode is deterministic — same prompt, same continuation
+    out2 = engine.generate(prompts, args.gen)
+    assert (out == out2).all()
+    print("[serve] determinism check passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Regenerate the §Dry-run / §Roofline markdown tables from results/dryrun."""
+import glob
+import json
+import sys
+from pathlib import Path
+
+RES = Path("results/dryrun")
+
+
+def fmt(x, nd=3):
+    return f"{x:.{nd}f}"
+
+
+def rows(tag):
+    out = []
+    for f in sorted(RES.glob(f"*__{tag}.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def dryrun_table(tag="baseline"):
+    print("| arch | shape | mesh | status | compile s | bytes/device GiB "
+          "| HLO GFLOPs/dev | coll GiB/dev | collective mix |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for d in rows(tag):
+        if d.get("status") == "skipped":
+            print(f"| {d['arch']} | {d['shape']} | {d['mesh']} | SKIP"
+                  f" | — | — | — | — | full-attention @500k |")
+            continue
+        if d.get("status") != "ok":
+            print(f"| {d['arch']} | {d['shape']} | {d['mesh']} | ERROR |"
+                  " — | — | — | — | — |")
+            continue
+        c = d["collectives"]
+        mix = " ".join(f"{k.split('-')[-1][:4]}:{v/2**30:.2f}"
+                       for k, v in c.items()
+                       if k in ("all-reduce", "all-gather", "reduce-scatter",
+                                "all-to-all", "collective-permute") and v)
+        print(f"| {d['arch']} | {d['shape']} | {d['mesh']} | ok | "
+              f"{d.get('compile_s','—')} | "
+              f"{d.get('peak_bytes_per_device',0)/2**30:.2f} | "
+              f"{d['analytic']['flops_per_device']/1e9:.0f} | "
+              f"{c['total']/2**30:.2f} | {mix or '—'} |")
+
+
+def roofline_table(tag="baseline"):
+    print("| arch | shape | mesh | compute s | memory s | collective s | "
+          "bottleneck | MODEL/HLO flops | fits 16 GiB |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for d in rows(tag):
+        if d.get("status") != "ok":
+            continue
+        r = d["roofline"]
+        fits = "✅" if d.get("peak_bytes_per_device", 1 << 60) < 16 * 2**30 \
+            else f"❌ {d['peak_bytes_per_device']/2**30:.1f}"
+        print(f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+              f"{fmt(r['compute_s'])} | {fmt(r['memory_s'])} | "
+              f"{fmt(r['collective_s'])} | **{r['bottleneck']}** | "
+              f"{d.get('useful_flops_ratio',0):.2f} | {fits} |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "both"
+    tag = sys.argv[2] if len(sys.argv) > 2 else "baseline"
+    if which in ("dryrun", "both"):
+        dryrun_table(tag)
+        print()
+    if which in ("roofline", "both"):
+        roofline_table(tag)

@@ -1,0 +1,32 @@
+"""arctic-480b [moe]: 35L d_model=7168 56H (GQA kv=8) expert d_ff=4864
+vocab=32000, MoE 128 experts top-2 + dense residual FFN
+[hf:Snowflake/snowflake-arctic-base].
+
+Largest weight volume in the pool (~482B params). With B⊕LD int8 Boolean
+experts + bf16 accumulators the full *training* state is ~5.7 GB/chip on a
+256-chip pod; the BNN/fp32-latent equivalent would need ~23 GB/chip and not
+fit (DESIGN.md §6).
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,
+    vocab_size=32_000,
+    n_experts=128,
+    top_k=2,
+    moe_dense_residual=True,
+    dense_ff=4864,
+    # moe_impl: einsum default; scatter per cell (§Perf #6/#15).
+)
+
+SMOKE = CONFIG.scaled(
+    name="arctic-480b-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=64, dense_ff=64,
+    vocab_size=128, n_experts=8, top_k=2, attn_chunk=64, remat=False,
+)

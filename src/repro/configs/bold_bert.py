@@ -1,0 +1,26 @@
+"""Paper's own: Boolean BERT-base (§4.3 BERT fine-tuning / Table 7).
+
+BERT-base geometry (12L, 768, 12H, 3072, vocab 30522). NOTE: the framework's
+unified LM is causal-decoder-shaped; for the GLUE-analog benchmark
+(benchmarks/table7_bert_glue.py) a bidirectional pooling head is built from
+the same Boolean blocks. This config exists so the paper's own transformer
+is a first-class --arch selection.
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="bold-bert",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=30_522,
+)
+
+SMOKE = CONFIG.scaled(
+    name="bold-bert-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab_size=128, attn_chunk=64, remat=False,
+)

@@ -1,0 +1,30 @@
+"""Paper's own: VGG-SMALL on CIFAR10 (§4.1, Tables 2/6/9).
+
+A CNN, not an LM — consumed by the vision substrate
+(repro/vision/vgg.py) and the Table-2/6 benchmarks; not part of the LM
+dry-run grid.
+"""
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class VGGConfig:
+    name: str = "bold-vgg-small"
+    # (channels, n_convs) per stage, 2x2 maxpool between stages — VGG-SMALL.
+    stages: Tuple[Tuple[int, int], ...] = ((128, 2), (256, 2), (512, 2))
+    input_hw: int = 32
+    in_channels: int = 3
+    n_classes: int = 10
+    fc_dim: int = 1024
+    boolean: bool = True
+    with_bn: bool = False       # paper evaluates both (Table 2)
+
+    def scaled(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+CONFIG = VGGConfig()
+
+SMOKE = CONFIG.scaled(name="bold-vgg-small-smoke",
+                      stages=((16, 1), (32, 1)), input_hw=16, fc_dim=64)

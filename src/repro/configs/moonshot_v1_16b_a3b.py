@@ -1,0 +1,30 @@
+"""moonshot-v1-16b-a3b [moe]: 48L d_model=2048 16H (kv=16) expert d_ff=1408
+vocab=163840, MoE 64 experts top-6 [hf:moonshotai/Moonlight-16B-A3B].
+
+Boolean expert weights (int8) cut the dominant expert memory 4× vs bf16 —
+the flagship B⊕LD MoE integration. Routers stay FP.
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab_size=163_840,
+    n_experts=64,
+    top_k=6,
+    # moe_impl: einsum default (paper-era GShard). §Perf measured scatter
+    # better on SINGLE-POD cells (train compute −95 %, prefill mem −65 %)
+    # but worse on multi-pod memory — select per cell via
+    # --variant '{"moe_impl": "scatter"}' (EXPERIMENTS.md §Perf #1/#10/#15).
+)
+
+SMOKE = CONFIG.scaled(
+    name="moonshot-v1-16b-a3b-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=64,
+    vocab_size=128, n_experts=8, top_k=2, attn_chunk=64, remat=False,
+)

@@ -1,0 +1,13 @@
+"""B⊕LD core: Boolean variation calculus, Boolean layers, Boolean optimizer."""
+from .variation import (TRUE, FALSE, ZERO, BOOL_DTYPE, xnor, xor, neg,
+                        project, embed, magnitude, delta, variation_bool,
+                        variation_bool_num, variation_int,
+                        partial_variation, aggregate,
+                        booleanize, random_boolean, is_boolean)
+from .scaling import preactivation_alpha, backward_scale, backward_scale_conv
+from .activation import boolean_activation, boolean_activation_inference
+from .boolean_linear import boolean_dense, boolean_dense_inference
+from .boolean_conv import boolean_conv2d
+from .optimizer import (Optimizer, BooleanOptState, AdamState, HybridState,
+                        boolean_optimizer, adam, hybrid_optimizer,
+                        cosine_schedule, is_boolean_leaf)

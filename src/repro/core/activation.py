@@ -1,0 +1,79 @@
+"""Boolean threshold activation (paper §3.1 Forward Activation, Appendix C).
+
+Forward: the unique binary activation family — threshold at τ:
+    y = T (+1) if s ≥ τ else F (−1).
+
+Backward (App C.1): the upstream signal is optionally re-weighted by a
+function inversely proportional to Δ = |s − τ|; the paper's choice is
+tanh'(αΔ) = 1 − tanh²(α(s−τ)) with α = π / (2√(3m)) matching the
+pre-activation spread (App C.3, Eq 24). This is a *re-weighting of the
+variation signal*, not a latent-weight STE: weights stay native Boolean.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .scaling import preactivation_alpha
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def boolean_activation(s, tau, fan_in: int, hard_backward: bool = False):
+    """Threshold activation with tanh'-reweighted backward.
+
+    Args:
+      s: pre-activation (counting of TRUEs, any real dtype).
+      tau: threshold (scalar or broadcastable; fixed or learned).
+      fan_in: m, the counting range of ``s`` — sets α = π/(2√(3m)).
+      hard_backward: if True, pass the signal through un-reweighted
+        (identity mask); used in ablations.
+
+    Returns ±1 in ``s.dtype``.
+    """
+    y, _ = _act_fwd(s, tau, fan_in, hard_backward)
+    return y
+
+
+def _act_fwd(s, tau, fan_in, hard_backward):
+    d = s - tau
+    y = jnp.where(d >= 0, 1, -1).astype(jnp.asarray(s).dtype)
+    return y, (d, jnp.shape(tau))
+
+
+def _act_bwd(fan_in, hard_backward, res, g):
+    d, tau_shape = res
+    dtype = d.dtype
+    if hard_backward:
+        mask = jnp.ones_like(d, dtype=jnp.float32)
+    else:
+        alpha = preactivation_alpha(fan_in)
+        t = jnp.tanh(alpha * d.astype(jnp.float32))
+        mask = 1.0 - t * t  # tanh'(αΔ)
+    gm = g.astype(jnp.float32) * mask
+    gs = gm.astype(dtype)
+    # δLoss/δτ: the threshold shifts opposite to s — reduce the broadcasted
+    # dims so the cotangent matches τ's shape (scalar or per-channel).
+    extra = gm.ndim - len(tau_shape)
+    gtau = -jnp.sum(gm, axis=tuple(range(extra)))
+    for i, n in enumerate(tau_shape):
+        if n == 1 and gtau.shape[i] != 1:
+            gtau = jnp.sum(gtau, axis=i, keepdims=True)
+    gtau = gtau.astype(dtype)
+    return gs, gtau
+
+
+boolean_activation.defvjp(_act_fwd, _act_bwd)
+
+
+def boolean_activation_inference(s, tau=0.0, dtype=jnp.int8):
+    """Pure forward threshold producing int8 ±1 (serving path, no vjp)."""
+    return jnp.where(s >= tau, 1, -1).astype(dtype)
+
+
+__all__ = [
+    "boolean_activation",
+    "boolean_activation_inference",
+]

@@ -1,0 +1,53 @@
+"""Boolean 2-D convolution (paper's CNN experiments: VGG-SMALL, EDSR, ResNet18).
+
+Same variation calculus as the dense layer — conv is a structured counting
+GEMM, so the embedded forward is a standard conv and the backward is the
+vote-aggregated variation (Remark C.1/C.2: backward is the full conv with the
+180°-rotated kernel, which is exactly the conv VJP). The custom_vjp applies
+the App-C backward variance normalization (Eq 43/47).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .scaling import backward_scale_conv
+
+_DN = ("NHWC", "HWIO", "NHWC")
+
+
+def _conv(x, w, stride, padding):
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=_DN, preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def boolean_conv2d(x, w, stride: int = 1, padding: str = "SAME",
+                   bwd_norm: bool = True, sign_backward: bool = False):
+    """x: (N,H,W,Cin) real or ±1; w: (kh,kw,Cin,Cout) ±1 Boolean view."""
+    return _conv(x, w, stride, padding)
+
+
+def _bc_fwd(x, w, stride, padding, bwd_norm, sign_backward):
+    return _conv(x, w, stride, padding), (x, w)
+
+
+def _bc_bwd(stride, padding, bwd_norm, sign_backward, res, z):
+    x, w = res
+    _, pullback = jax.vjp(lambda x_, w_: _conv(x_, w_, stride, padding), x, w)
+    gx, gw = pullback(z)
+    if bwd_norm:
+        kh, kw, _, cout = w.shape
+        gx = (gx.astype(jnp.float32)
+              * backward_scale_conv(cout, kh, kw, stride)).astype(x.dtype)
+    if sign_backward:
+        gx = jnp.where(gx >= 0, 1.0, -1.0).astype(x.dtype)
+    return gx, gw.astype(w.dtype)
+
+
+boolean_conv2d.defvjp(_bc_fwd, _bc_bwd)

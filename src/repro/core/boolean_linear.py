@@ -1,0 +1,115 @@
+"""Boolean linear layer (paper §3.1 Eq 1, §3.3 Eqs 3-8) as a JAX custom-vjp.
+
+Semantics (L = xnor): the neuron output is the counting of TRUEs,
+    s_j = w0_j + Σ_i xnor(x_i, w_ij),
+which under the ±1 embedding (Prop A.2) is exactly a multiply-accumulate:
+    s = x · e(W) + b.
+
+Backward (Eqs 4-8), for a real upstream signal Z (the default; the paper's
+Table 6 trains with 16-bit G):
+    δLoss/δx  =  Z · e(W)ᵀ        (Eq 6/8 — aggregation over fan-out j)
+    δLoss/δW  =  Zᵀ · e(X)        (Eq 5/7 — vote aggregation over batch k)
+i.e. precisely the standard linear VJP evaluated on the embedded Booleans —
+this is the content of the paper's isomorphism. The custom_vjp exists to
+(a) force fp32 accumulation of the vote counts, (b) apply the App-C.4
+backward variance normalization √(2/n), and (c) optionally *booleanize* the
+outgoing signal (1-bit backprop between Boolean layers, paper Alg 6).
+
+The weight argument is the bf16 ±1 *view* of the stored int8 Boolean weight
+(see DESIGN.md §2 "changed assumptions"): no persistent FP latent weight
+exists; the view is bitwise-determined by the Boolean weight and the returned
+weight-gradient feeds the flip-rule optimizer, never a weight update.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .scaling import backward_scale
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def boolean_dense(x, w, b, bwd_norm: bool = True, sign_backward: bool = False,
+                  reduce_bf16: bool = False):
+    """y = x @ w (+ b) with Boolean-variation backward.
+
+    Args:
+      x: (..., m) activations — real-valued or ±1 Boolean (mixed-type Def 3.5).
+      w: (m, n) ±1 Boolean weight view (bf16/f32).
+      b: (n,) real bias (the counting offset w₀; mixed Boolean-real neuron) or None-like
+         zero array — always real, owned by the FP optimizer.
+      bwd_norm: apply √(2/n) App-C.4 variance normalization to δLoss/δx.
+      sign_backward: project the outgoing δLoss/δx to ±1 (Boolean backprop
+        signal, Alg 6) — magnitudes are carried by the vote aggregation of the
+        *next* layer upstream.
+      reduce_bf16: emit the contraction (and its activation-grad transpose)
+        in bf16 so row-parallel cross-shard psums carry bf16 instead of f32
+        — halves TP collective traffic (§Perf hillclimb). Per-shard MXU
+        accumulation stays fp32; only the inter-chip partials narrow.
+    """
+    y, _ = _bd_fwd(x, w, b, bwd_norm, sign_backward, reduce_bf16)
+    return y
+
+
+def _bd_fwd(x, w, b, bwd_norm, sign_backward, reduce_bf16):
+    pref = x.dtype if reduce_bf16 else jnp.float32
+    y = jnp.dot(x, w, preferred_element_type=pref).astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y, (x, w, b is None)
+
+
+def _bd_bwd(bwd_norm, sign_backward, reduce_bf16, res, z):
+    x, w, no_bias = res
+    m, n = w.shape
+    zf = z.astype(jnp.float32)
+    # Eq 6/8: upstream signal, aggregated over fan-out.
+    if reduce_bf16:
+        gx = jnp.dot(z.astype(x.dtype), w.astype(x.dtype).T,
+                     preferred_element_type=x.dtype).astype(jnp.float32)
+    else:
+        gx = jnp.dot(zf, w.astype(jnp.float32).T,
+                     preferred_element_type=jnp.float32)
+    if bwd_norm:
+        gx = gx * backward_scale(n)
+    if sign_backward:
+        gx = jnp.where(gx >= 0, 1.0, -1.0)
+    gx = gx.astype(x.dtype)
+    # Eq 5/7: weight votes, aggregated over all batch-like dims (fp32 counts).
+    xf = x.astype(jnp.float32).reshape(-1, m)
+    zf2 = zf.reshape(-1, n)
+    gw = jnp.dot(xf.T, zf2, preferred_element_type=jnp.float32)
+    gw = gw.astype(w.dtype)
+    gb = None if no_bias else jnp.sum(zf2, axis=0).astype(w.dtype)
+    return gx, gw, gb
+
+
+boolean_dense.defvjp(_bd_fwd, _bd_bwd)
+
+
+def boolean_dense_inference(x, w_int8, b=None, *, use_kernel: bool = False):
+    """Serving-path Boolean dense on stored int8 ±1 weights.
+
+    If ``x`` is int8 ±1 the contraction runs as int8×int8→int32 (the MXU
+    path; on TPU this hits the 2× int8 throughput). Real ``x`` uses the
+    mixed-type rule xnor(w, x) = e(w)·x.
+    """
+    if use_kernel and x.dtype == jnp.int8:
+        from repro.kernels import ops as kops
+
+        y = kops.boolean_matmul(x, w_int8)
+    elif x.dtype == jnp.int8:
+        y = jax.lax.dot_general(
+            x, w_int8,
+            (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+    else:
+        y = jnp.dot(x, w_int8.astype(x.dtype),
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y

@@ -1,0 +1,190 @@
+"""Boolean optimizer (paper Alg 1 / Alg 8) + hybrid FP optimizer.
+
+Per Boolean weight w ∈ {±1} with vote signal q = δLoss/δw:
+    m ← β·m + η·q                       (Eq 10 accumulator)
+    flip where  xnor(m, w) = T  ⇔  m·w ≥ 1   (Eq 9 / Alg 8 line `accum*(2p-1)>=1`)
+    w ← ¬w  and  m ← 0 on flip
+    β ← (#unchanged)/(#total) per layer      (Eq 11 — Hebbian auto-regularization)
+
+No FP latent weights: the *stored* parameter is int8 ±1; ``m`` is optimizer
+state that is reset on flip (analogous to momentum, not a shadow weight).
+
+FP leaves (embedding, lm_head, norms, biases, thresholds) are trained with a
+self-contained Adam (the paper's setup: "first and last layers remain in FP
+and are optimized using an Adam optimizer").
+
+The partition rule is structural: **int8 leaves are Boolean**, everything
+else is FP. Both transforms are pure functions over pytrees and shard
+trivially under pjit (all ops elementwise).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> value
+
+
+def _as_schedule(v: Union[float, Schedule]) -> Schedule:
+    if callable(v):
+        return v
+    return lambda step: jnp.asarray(v, jnp.float32)
+
+
+def is_boolean_leaf(p) -> bool:
+    return hasattr(p, "dtype") and p.dtype == jnp.int8
+
+
+class BooleanOptState(NamedTuple):
+    accum: PyTree          # bf16 accumulators, like boolean leaves
+    ratio: PyTree          # per-layer β (f32 scalar per boolean leaf)
+    flips: PyTree          # last-step flip count per leaf (f32 scalar, telemetry)
+    step: jnp.ndarray
+
+
+class AdamState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    step: jnp.ndarray
+
+
+class HybridState(NamedTuple):
+    boolean: BooleanOptState
+    adam: AdamState
+
+
+class Optimizer(NamedTuple):
+    """Functional optimizer: update() returns NEW PARAMS (not deltas) —
+    Boolean flips are not expressible as additive updates."""
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple]
+
+
+def boolean_optimizer(eta: Union[float, Schedule],
+                      accum_dtype=jnp.bfloat16) -> Optimizer:
+    """Optimizer over int8 ±1 leaves only (others must be filtered out)."""
+    eta_fn = _as_schedule(eta)
+
+    def init(params: PyTree) -> BooleanOptState:
+        accum = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+        ratio = jax.tree.map(lambda p: jnp.ones((), jnp.float32), params)
+        flips = jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params)
+        return BooleanOptState(accum, ratio, flips, jnp.zeros((), jnp.int32))
+
+    def update(votes: PyTree, state: BooleanOptState, params: PyTree):
+        eta = eta_fn(state.step).astype(jnp.float32)
+
+        def leaf(w, q, m, beta):
+            # Accumulate (Eq 10) in f32, store back at accum_dtype.
+            m32 = beta * m.astype(jnp.float32) + eta * q.astype(jnp.float32)
+            wf = w.astype(jnp.float32)
+            flip = (m32 * wf) >= 1.0          # xnor(m, w) = T  (Eq 9)
+            new_w = jnp.where(flip, -w, w)
+            new_m = jnp.where(flip, 0.0, m32).astype(accum_dtype)
+            n_flip = jnp.sum(flip.astype(jnp.float32))
+            new_beta = 1.0 - n_flip / float(w.size)   # Eq 11, per-layer basis
+            return new_w, new_m, new_beta, n_flip
+
+        out = jax.tree.map(leaf, params, votes, state.accum, state.ratio)
+        # tree of 4-tuples -> 4 trees
+        is_leaf = lambda x: isinstance(x, tuple) and len(x) == 4 and not isinstance(x[0], tuple)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is_leaf)
+        new_accum = jax.tree.map(lambda t: t[1], out, is_leaf=is_leaf)
+        new_ratio = jax.tree.map(lambda t: t[2], out, is_leaf=is_leaf)
+        new_flips = jax.tree.map(lambda t: t[3], out, is_leaf=is_leaf)
+        return new_params, BooleanOptState(new_accum, new_ratio, new_flips,
+                                           state.step + 1)
+
+    return Optimizer(init, update)
+
+
+def adam(lr: Union[float, Schedule], b1=0.9, b2=0.999, eps=1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = _as_schedule(lr)
+
+    def init(params: PyTree) -> AdamState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(jax.tree.map(zeros, params),
+                         jax.tree.map(zeros, params),
+                         jnp.zeros((), jnp.int32))
+
+    def update(grads: PyTree, state: AdamState, params: PyTree):
+        step = state.step + 1
+        lr = lr_fn(state.step).astype(jnp.float32)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def leaf(p, g, mu, nu):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            upd = lr * (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+            return (p.astype(jnp.float32) - upd).astype(p.dtype), mu, nu
+
+        out = jax.tree.map(leaf, params, grads, state.mu, state.nu)
+        is_leaf = lambda x: isinstance(x, tuple) and len(x) == 3 and not isinstance(x[0], tuple)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is_leaf)
+        new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=is_leaf)
+        new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=is_leaf)
+        return new_params, AdamState(new_mu, new_nu, step)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid: Boolean flips for int8 leaves, Adam for FP leaves — the paper's
+# full training recipe in one transform.
+# ---------------------------------------------------------------------------
+def _split(params: PyTree):
+    bool_tree = jax.tree.map(lambda p: p if is_boolean_leaf(p) else None, params)
+    fp_tree = jax.tree.map(lambda p: None if is_boolean_leaf(p) else p, params)
+    return bool_tree, fp_tree
+
+
+def _merge(bool_tree: PyTree, fp_tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda b, f: b if f is None else f,
+                        bool_tree, fp_tree,
+                        is_leaf=lambda x: x is None)
+
+
+def hybrid_optimizer(eta: Union[float, Schedule],
+                     fp_lr: Union[float, Schedule],
+                     accum_dtype=jnp.bfloat16,
+                     weight_decay: float = 0.0) -> Optimizer:
+    bopt = boolean_optimizer(eta, accum_dtype)
+    fopt = adam(fp_lr, weight_decay=weight_decay)
+
+    def init(params: PyTree) -> HybridState:
+        bool_tree, fp_tree = _split(params)
+        return HybridState(bopt.init(bool_tree), fopt.init(fp_tree))
+
+    def update(grads: PyTree, state: HybridState, params: PyTree):
+        bool_p, fp_p = _split(params)
+        bool_g = jax.tree.map(lambda p, g: g if p is not None else None,
+                              bool_p, grads, is_leaf=lambda x: x is None)
+        fp_g = jax.tree.map(lambda p, g: g if p is not None else None,
+                            fp_p, grads, is_leaf=lambda x: x is None)
+        new_bool, bstate = bopt.update(bool_g, state.boolean, bool_p)
+        new_fp, fstate = fopt.update(fp_g, state.adam, fp_p)
+        return _merge(new_bool, new_fp), HybridState(bstate, fstate)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Schedules (cosine, as used throughout the paper's experiments).
+# ---------------------------------------------------------------------------
+def cosine_schedule(base: float, total_steps: int, warmup: int = 0,
+                    floor: float = 0.0) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0) if warmup else 1.0
+        t = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return base * warm * cos
+    return fn

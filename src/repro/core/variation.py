@@ -1,0 +1,137 @@
+"""Boolean variation calculus (paper §3.2, Appendix A) on the ±1 embedding.
+
+The paper's Prop A.2 establishes the isomorphism ({T,F}, xnor) ≅ ({±1}, ×)
+under e(T)=+1, e(F)=-1, e(0)=0. All tensor math in this framework lives in the
+embedded domain: Boolean tensors are ±1-valued (int8 storage, any float view),
+``xnor`` is elementwise multiply, ``xor`` is negated multiply, and the Boolean
+neuron's counting-of-TRUEs is a plain accumulate.
+
+The reference variation operators below operate on {-1, 0, +1} arrays
+("three-valued logic" M = B ∪ {0}, Def 3.1) and exist to state truth-table
+tests and the variation definitions verbatim; the hot path never calls them.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Canonical logic constants in the embedded domain.
+TRUE = 1
+FALSE = -1
+ZERO = 0  # the third value of M (Def 3.1)
+
+BOOL_DTYPE = jnp.int8  # storage dtype for Boolean weights
+
+
+# ---------------------------------------------------------------------------
+# Embedded-domain connectives (hot path) — Prop A.3.
+# ---------------------------------------------------------------------------
+def xnor(a, b):
+    """xnor in the embedded domain: elementwise product (Prop A.3 (1)-(2)).
+
+    Covers all mixed-type cases of Def 3.5: for a ∈ L, x ∈ N the magnitude is
+    |a||x| and the logic part is xnor of logic parts — exactly ``e(a)*x``.
+    """
+    return a * b
+
+
+def xor(a, b):
+    """xor = ¬xnor (Prop A.3 (5))."""
+    return -(a * b)
+
+
+def neg(a):
+    """Logic negation: ¬T=F, ¬F=T, ¬0=0 — i.e. arithmetic negation."""
+    return -a
+
+
+# ---------------------------------------------------------------------------
+# Type conversion (Def A.1).
+# ---------------------------------------------------------------------------
+def project(x):
+    """p: N → L. Sign with p(0)=0 (Def A.1 Eq 13)."""
+    return jnp.sign(x)
+
+
+def embed(a, dtype=jnp.float32):
+    """e: L → N. Identity on {-1,0,1} with a numeric dtype (Def A.1 Eq 14)."""
+    return jnp.asarray(a, dtype)
+
+
+def magnitude(x):
+    """|x| (Def 3.4): absolute value; logic values have magnitude 1 (or 0)."""
+    return jnp.abs(x)
+
+
+# ---------------------------------------------------------------------------
+# Variation operators (Defs 3.7, 3.8, 3.10, 3.12) — reference semantics.
+# ---------------------------------------------------------------------------
+def delta(a, b):
+    """δ(a→b) for logic values (Def 3.7): T if b>a, 0 if b=a, F if b<a.
+
+    In the embedded domain F < T becomes -1 < +1 so δ is sign(b - a).
+    """
+    return jnp.sign(b - a)
+
+
+def variation_bool(f, x):
+    """f'(x) for f: B→B at Boolean x (Def 3.8): xnor(δ(x→¬x), δf(x→¬x)).
+
+    ``f`` must be vectorized over ±1 arrays. Reference implementation used by
+    the truth-table tests; O(2 evals).
+    """
+    nx = neg(x)
+    return xnor(delta(x, nx), delta(f(x), f(nx)))
+
+
+def variation_bool_num(f, x):
+    """f'(x) for f: B→N (Prop A.5): xnor(δ(x→¬x), δf(x→¬x)) where the
+    variation in the numeric codomain keeps magnitude: δf = f(¬x) − f(x),
+    and the mixed-type xnor is e(a)·v (Prop A.3(1))."""
+    nx = neg(x)
+    return xnor(delta(x, nx), f(nx) - f(x))
+
+
+def variation_int(f, x):
+    """f'(x) for f: Z→D (Def 3.10): δf(x → x+1) = f(x+1) - f(x) embedded."""
+    return f(x + 1) - f(x)
+
+
+def partial_variation(f, x, i):
+    """Partial variation of multivariate f: B^n→D w.r.t. coordinate i
+    (Def 3.12): xnor(δ(x_i→¬x_i), δ(f(x)→f(x_¬i)))."""
+    x = jnp.asarray(x)
+    xi = x[..., i]
+    x_flip = x.at[..., i].set(neg(xi))
+    return xnor(delta(xi, neg(xi)), delta(f(x), f(x_flip)))
+
+
+# ---------------------------------------------------------------------------
+# Aggregation (Eqs 7-8): vote counting #T - #F on a variation tensor.
+# In the embedded domain both reduce to a plain sum along the axis.
+# ---------------------------------------------------------------------------
+def aggregate(q, axis):
+    """Σ 1(q=T)|q| − Σ 1(q=F)|q| — in the embedding simply sum(q, axis)."""
+    return jnp.sum(q, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# Boolean tensor helpers.
+# ---------------------------------------------------------------------------
+def booleanize(x, dtype=BOOL_DTYPE):
+    """Project a numeric tensor to ±1 (0 maps to +1 so results stay Boolean)."""
+    return jnp.where(x >= 0, 1, -1).astype(dtype)
+
+
+def random_boolean(key, shape, dtype=BOOL_DTYPE):
+    """iid uniform ±1 Boolean tensor (paper's randint init, Alg 4)."""
+    import jax
+
+    bits = jax.random.bernoulli(key, 0.5, shape)
+    return jnp.where(bits, 1, -1).astype(dtype)
+
+
+def is_boolean(x) -> bool:
+    """Host-side check that a (numpy) array is strictly ±1-valued."""
+    arr = np.asarray(x)
+    return bool(np.all((arr == 1) | (arr == -1)))

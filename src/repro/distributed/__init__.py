@@ -1,0 +1,1 @@
+from .context import set_mesh, get_mesh

@@ -1,0 +1,10 @@
+"""B⊕LD Pallas TPU kernels (validated in interpret mode on CPU).
+
+boolean_matmul -- int8 +-1 MXU GEMM with fused threshold activation
+packed_xnor    -- uint32 bit-packed XNOR-popcount GEMM (1-bit dataflow floor)
+boolean_bwd    -- fused vote-aggregation weight backward with tanh' masking
+
+Each kernel ships with ops.py (jit wrappers) and ref.py (pure-jnp oracles).
+"""
+from . import ops, ref
+from .packed_xnor import pack_bits, unpack_bits

@@ -1,0 +1,45 @@
+"""Jitted public wrappers for the B⊕LD Pallas kernels.
+
+``INTERPRET`` defaults to True because this container is CPU-only; on a real
+TPU runtime set ``repro.kernels.ops.INTERPRET = False`` (or the
+``REPRO_PALLAS_INTERPRET=0`` env var) and the identical kernels compile to
+Mosaic.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import boolean_matmul as _bm
+from . import packed_xnor as _px
+from . import boolean_bwd as _bb
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def boolean_matmul(x, w, *, fuse_threshold=False, tau=0.0, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return _bm.boolean_matmul(x, w, fuse_threshold=fuse_threshold, tau=tau, **kw)
+
+
+def packed_xnor_matmul(x_packed, w_packed, *, k_valid, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return _px.packed_xnor_matmul(x_packed, w_packed, k_valid=k_valid, **kw)
+
+
+def boolean_weight_bwd(x, z, d, *, alpha=0.0, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return _bb.boolean_weight_bwd(x, z, d, alpha=alpha, **kw)
+
+
+pack_bits = _px.pack_bits
+unpack_bits = _px.unpack_bits
+
+
+def flash_attention_tpu(q, k, v, **kw):
+    from . import flash_attention as _fa
+
+    kw.setdefault("interpret", INTERPRET)
+    return _fa.flash_attention_tpu(q, k, v, **kw)

@@ -1,0 +1,117 @@
+"""Pallas kernel: bit-packed XNOR-popcount GEMM — the 1-bit dataflow floor.
+
+The closest TPU analogue of the paper's "native Boolean accelerator": the K
+dimension is packed 32 Booleans per uint32 word (bit=1 ⇔ T), and the Boolean
+dot product becomes
+    s = Σ_i e(x_i)·e(w_i) = K_valid − 2·popcount(x_bits XOR w_bits)
+computed on the VPU (xor + population_count + integer adds) — no MXU at all.
+
+On real v5e this loses to the int8 MXU path for square GEMMs (VPU peak is
+~2 orders below the MXU) but it moves 32× fewer weight bytes, so it wins on
+the *memory-bound* thin GEMMs of decode (arithmetic intensity < 1 MAC/byte),
+and it is the faithful model of the paper's data-movement claims.
+
+Tiling: grid (M/bm, N/bn, Kw/bkw) over packed words; int32 accumulator in
+VMEM. popcount via jax.lax.population_count.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# Packing helpers (pure jnp; used by callers and the reference oracle).
+# Packing layout: bit b of word j along K encodes element k = j*32 + b.
+# ---------------------------------------------------------------------------
+def pack_bits(x_pm1: jax.Array, axis: int = -1) -> jax.Array:
+    """Pack a ±1 int8 array into uint32 words along ``axis`` (pad with F)."""
+    x = jnp.moveaxis(x_pm1, axis, -1)
+    K = x.shape[-1]
+    Kp = -(-K // 32) * 32
+    x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, Kp - K)], constant_values=-1)
+    bits = (x > 0).astype(jnp.uint32).reshape(*x.shape[:-1], Kp // 32, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    words = jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+    return jnp.moveaxis(words, -1, axis)
+
+
+def unpack_bits(words: jax.Array, k: int, axis: int = -1) -> jax.Array:
+    """Inverse of pack_bits -> ±1 int8 of length k along ``axis``."""
+    w = jnp.moveaxis(words, axis, -1)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (w[..., :, None] >> shifts) & jnp.uint32(1)
+    x = jnp.where(bits == 1, 1, -1).astype(jnp.int8)
+    x = x.reshape(*w.shape[:-1], w.shape[-1] * 32)[..., :k]
+    return jnp.moveaxis(x, -1, axis)
+
+
+# ---------------------------------------------------------------------------
+# Kernel
+# ---------------------------------------------------------------------------
+def _xnor_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_kw: int, k_valid: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xw = x_ref[...]          # (bm, bkw) uint32
+    ww = w_ref[...]          # (bkw, bn) uint32
+    # disagreements per word: popcount(x ^ w), broadcast outer product shape.
+    diff = jax.lax.population_count(xw[:, None, :] ^ ww.T[None, :, :])
+    acc_ref[...] += jnp.sum(diff.astype(jnp.int32), axis=-1)
+
+    @pl.when(pl.program_id(2) == n_kw - 1)
+    def _done():
+        # Pad bits are F(0) on BOTH operands -> xor 0 -> contribute nothing
+        # to the disagreement count, so s = K_valid - 2*popcount holds.
+        o_ref[...] = (k_valid - 2 * acc_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k_valid", "block_m", "block_n", "block_kw", "interpret"),
+)
+def packed_xnor_matmul(x_packed: jax.Array, w_packed: jax.Array, *,
+                       k_valid: int,
+                       block_m: int = 128, block_n: int = 128,
+                       block_kw: int = 64, interpret: bool = True) -> jax.Array:
+    """y[i,j] = Σ_k e(x[i,k])·e(w[k,j]) from bit-packed operands.
+
+    Args:
+      x_packed: (M, Kw) uint32 — K packed along axis 1 (Kw = ceil(K/32)).
+      w_packed: (Kw, N) uint32 — K packed along axis 0.
+      k_valid: the true (unpadded) K; pad bits must be F (=0) on both sides.
+    """
+    M, Kw = x_packed.shape
+    Kw2, N = w_packed.shape
+    if Kw != Kw2:
+        raise ValueError(f"packed contraction mismatch {x_packed.shape} @ {w_packed.shape}")
+
+    bm, bn, bkw = min(block_m, M), min(block_n, N), min(block_kw, Kw)
+    Mp, Np, Kwp = -(-M // bm) * bm, -(-N // bn) * bn, -(-Kw // bkw) * bkw
+    # Zero-pad: pad words are all-F on both operands -> zero disagreements.
+    xp = jnp.pad(x_packed, ((0, Mp - M), (0, Kwp - Kw)))
+    wp = jnp.pad(w_packed, ((0, Kwp - Kw), (0, Np - N)))
+    n_kw = Kwp // bkw
+
+    kernel = functools.partial(_xnor_kernel, n_kw=n_kw, k_valid=k_valid)
+    yp = pl.pallas_call(
+        kernel,
+        grid=(Mp // bm, Np // bn, n_kw),
+        in_specs=[
+            pl.BlockSpec((bm, bkw), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bkw, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xp, wp)
+    return yp[:M, :N]

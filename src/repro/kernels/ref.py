@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def boolean_matmul_ref(x: jax.Array, w: jax.Array, *,
+                       fuse_threshold: bool = False,
+                       tau: float = 0.0) -> jax.Array:
+    """int8 ±1 GEMM -> int32 counts (or fused int8 ±1 threshold)."""
+    y = jax.lax.dot_general(
+        x.astype(jnp.int32), w.astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    if fuse_threshold:
+        return jnp.where(y >= tau, 1, -1).astype(jnp.int8)
+    return y
+
+
+def packed_xnor_matmul_ref(x_pm1: jax.Array, w_pm1: jax.Array) -> jax.Array:
+    """Oracle stated on the UNPACKED ±1 operands (the packed kernel must
+    agree after pack_bits on both sides)."""
+    return boolean_matmul_ref(x_pm1, w_pm1)
+
+
+def boolean_weight_bwd_ref(x: jax.Array, z: jax.Array, d: jax.Array, *,
+                           alpha: float = 0.0) -> jax.Array:
+    zf = z.astype(jnp.float32)
+    if alpha > 0.0:
+        t = jnp.tanh(alpha * d.astype(jnp.float32))
+        zf = zf * (1.0 - t * t)
+    return jnp.dot(x.astype(jnp.float32).T, zf,
+                   preferred_element_type=jnp.float32)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0) -> jax.Array:
+    """Materializing-softmax oracle for the flash kernel. (BH, S, hd)."""
+    import math
+
+    BH, S, hd = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    valid = jnp.ones((S, S), bool)
+    if causal:
+        valid &= qpos >= kpos
+    if window > 0:
+        valid &= qpos - kpos < window
+    s = jnp.where(valid[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

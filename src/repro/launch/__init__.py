@@ -1,0 +1,2 @@
+from .mesh import make_production_mesh, make_local_mesh
+from .shapes import SHAPES, input_specs, applicable

@@ -1,0 +1,353 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell on 512 placeholder devices and record memory/cost/collective
+analysis for §Dry-run and §Roofline.
+
+The two lines above MUST stay the first statements of this module — jax
+locks the device count on first init.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                     # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b \
+      --shape train_4k --mesh single                               # one cell
+  ... --variant '{"moe_impl": "scatter"}' --tag scatter            # §Perf run
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import hybrid_optimizer
+from repro.core.optimizer import BooleanOptState, AdamState, HybridState
+from repro.distributed import set_mesh
+from repro.models import cache_init, lm_init
+from repro.train.step import make_decode_step, make_prefill_step, \
+    make_train_step
+from .flops_model import analytic_cell_cost
+from .hlo_analysis import (collective_breakdown, collective_bytes,
+                           model_flops, roofline_terms, total_params,
+                           active_params)
+from .mesh import make_production_mesh, mesh_num_chips
+from .shapes import SHAPES, applicable, input_specs
+from .shardings import apply_policy, batch_shardings, named, \
+    train_microbatches
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _params_shapes_specs(cfg, key):
+    box = {}
+
+    def init(k):
+        p, s = lm_init(k, cfg)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(init, key)
+    return shapes, box["specs"]
+
+
+def _cache_shapes_specs(cfg, batch, max_len):
+    box = {}
+
+    def init():
+        c, s = cache_init(cfg, batch, max_len)
+        box["specs"] = s
+        return c
+
+    shapes = jax.eval_shape(init)
+    return shapes, box["specs"]
+
+
+def _opt_specs(params_shapes, params_specs):
+    is_bool = lambda p: p.dtype == jnp.int8
+    bool_s = jax.tree.map(lambda p, s: s if is_bool(p) else None,
+                          params_shapes, params_specs)
+    fp_s = jax.tree.map(lambda p, s: None if is_bool(p) else s,
+                        params_shapes, params_specs)
+    scal_b = jax.tree.map(lambda p: P() if is_bool(p) else None,
+                          params_shapes)
+    boolean = BooleanOptState(accum=bool_s, ratio=scal_b, flips=scal_b,
+                              step=P())
+    adamst = AdamState(mu=fp_s, nu=fp_s, step=P())
+    return HybridState(boolean=boolean, adam=adamst)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               variant: dict = None, compile_: bool = True) -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_mesh(mesh)
+    shape = SHAPES[shape_name]
+    cfg0 = get_config(arch)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "n_chips": mesh_num_chips(mesh),
+           "variant": variant or {}}
+    if not applicable(cfg0, shape):
+        rec["skipped"] = ("long_500k needs sub-quadratic attention; "
+                          f"{arch} is full-attention (DESIGN.md)")
+        return rec
+    cfg = apply_policy(cfg0, shape, mesh)
+    run_opts = {}
+    if variant:
+        run_opts = {k: v for k, v in variant.items() if k.startswith("_")}
+        cfg_over = {k: v for k, v in variant.items() if not k.startswith("_")}
+        if cfg_over:
+            cfg = cfg.scaled(**cfg_over)
+
+    key = jax.random.PRNGKey(0)
+    params_shapes, params_specs = _params_shapes_specs(cfg, key)
+    params_sh = named(mesh, params_specs)
+    ins = input_specs(cfg, shape)
+    batch_sh = batch_shardings(cfg, mesh, ins)
+
+    if shape.kind == "train":
+        mb = train_microbatches(cfg, shape, mesh)
+        rec["microbatches"] = mb
+        opt = hybrid_optimizer(eta=8.0, fp_lr=1e-3)
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        opt_sh = named(mesh, _opt_specs(params_shapes, params_specs))
+        gdtype = (jnp.bfloat16 if run_opts.get("_grad_accum_bf16")
+                  else jnp.float32)
+        # grads + accumulation carry constrained to the FSDP sharding by
+        # default (§Perf #5/#12): required for TPU's reduce-scatter pass and
+        # keeps the persistent accumulation buffers sharded.
+        gsh = params_sh if run_opts.get("_grad_rs", True) else None
+        step = make_train_step(cfg, opt, microbatches=mb,
+                               grad_accum_dtype=gdtype,
+                               grad_shardings=gsh)
+        jitted = jax.jit(step,
+                         in_shardings=(params_sh, opt_sh, batch_sh),
+                         out_shardings=(params_sh, opt_sh, None),
+                         donate_argnums=(0, 1))
+        args = (params_shapes, opt_shapes, ins)
+    elif shape.kind == "prefill":
+        cache_shapes, cache_specs = _cache_shapes_specs(
+            cfg, shape.global_batch, shape.seq_len)
+        out_cache_sh = named(mesh, {"blocks": cache_specs["blocks"],
+                                    "pos": cache_specs["pos"]})
+        logits_sh = NamedSharding(
+            mesh, P(cfg.batch_axes if cfg.batch_axes else None, None, None))
+        step = make_prefill_step(cfg)
+        jitted = jax.jit(step,
+                         in_shardings=(params_sh, batch_sh),
+                         out_shardings=(logits_sh, out_cache_sh))
+        args = (params_shapes, ins)
+    else:  # decode
+        cache_shapes, cache_specs = _cache_shapes_specs(
+            cfg, shape.global_batch, shape.seq_len)
+        cache_sh = named(mesh, cache_specs)
+        logits_sh = NamedSharding(
+            mesh, P(cfg.batch_axes if cfg.batch_axes else None, None, None))
+        step = make_decode_step(cfg)
+        jitted = jax.jit(step,
+                         in_shardings=(params_sh, cache_sh, batch_sh),
+                         out_shardings=(logits_sh, cache_sh),
+                         donate_argnums=(1,))
+        args = (params_shapes, cache_shapes, ins)
+
+    lowered = jitted.lower(*args)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    if not compile_:
+        return rec
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, f, None)
+            if v is not None:
+                rec[f] = int(v)
+        args_b = rec.get("argument_size_in_bytes", 0)
+        alias_b = rec.get("alias_size_in_bytes", 0)
+        rec["peak_bytes_per_device"] = (
+            args_b + rec.get("output_size_in_bytes", 0) - alias_b
+            + rec.get("temp_size_in_bytes", 0))
+
+    # cost_analysis counts while-bodies once — recorded for the calibration
+    # cross-check, NOT used for the roofline (see hlo_analysis.py).
+    cost = compiled.cost_analysis() or {}
+    rec["xla_cost_flops_loopbody_once"] = float(cost.get("flops", 0.0))
+    rec["xla_cost_bytes_loopbody_once"] = float(cost.get("bytes accessed", 0.0))
+
+    # collective bytes: per-op result-shape parse × static trip counts
+    mb = rec.get("microbatches", 1)
+    if shape.kind == "train":
+        trip_stack = (mb, cfg.n_groups)
+    else:
+        trip_stack = (cfg.n_groups,)
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo, trip_stack)
+    rec["collectives"] = {k: int(v) for k, v in coll.items()}
+    rec["collective_top"] = collective_breakdown(hlo, trip_stack)
+
+    ana = analytic_cell_cost(cfg, shape, mesh, microbatches=mb)
+    rec["analytic"] = {k: float(v) for k, v in ana.items()}
+
+    # the HLO module is the per-device program, so parsed collective bytes
+    # are already per-device
+    terms = roofline_terms(ana["flops_per_device"], ana["bytes_per_device"],
+                           coll["total"], mesh_num_chips(mesh),
+                           ring_total=coll.get("ring_total"))
+    rec["roofline"] = terms
+
+    mf = model_flops(cfg0, shape)
+    rec["model_flops_total"] = mf
+    per_dev_model = mf / mesh_num_chips(mesh)
+    rec["model_flops_per_device"] = per_dev_model
+    rec["useful_flops_ratio"] = (per_dev_model / terms["hlo_flops_per_device"]
+                                 if terms["hlo_flops_per_device"] else 0.0)
+    rec["total_params"] = total_params(cfg0)
+    rec["active_params"] = active_params(cfg0)
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def run_and_save(arch, shape_name, multi_pod, variant=None, tag="baseline"):
+    mesh_tag = "multi" if multi_pod else "single"
+    name = f"{arch}__{shape_name}__{mesh_tag}__{tag}.json"
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out = RESULTS_DIR / name
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod, variant)
+        rec["status"] = "skipped" if "skipped" in rec else "ok"
+    except Exception as e:  # record the failure, keep the sweep going
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "variant": variant or {}, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    out.write_text(json.dumps(rec, indent=2, default=str))
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        r = rec.get("roofline", {})
+        extra = (f" compile={rec.get('compile_s')}s"
+                 f" bottleneck={r.get('bottleneck')}"
+                 f" mem/dev={rec.get('peak_bytes_per_device', 0)/2**30:.2f}GiB")
+    print(f"[dryrun] {arch} × {shape_name} × {mesh_tag} [{tag}]: "
+          f"{status}{extra}", flush=True)
+    return rec
+
+
+def calibrate(arch: str, shape_name: str, multi_pod: bool = False) -> dict:
+    """Validate the analytic FLOPs model against XLA cost_analysis on a
+    LOOP-FREE config: n_layers = group_size (scan of length 1), one
+    microbatch, chunk = seq (no flash/ssm inner loops). XLA then counts
+    every op exactly once and the two should agree within the fusion noise.
+    """
+    shape = SHAPES[shape_name]
+    cfg0 = get_config(arch)
+    small_shape = type(shape)(shape.name, min(shape.seq_len, 4096),
+                              min(shape.global_batch, 32), shape.kind)
+    overrides = dict(n_layers=cfg0.group_size,
+                     attn_chunk=small_shape.seq_len,
+                     ssm_chunk=small_shape.seq_len,
+                     decode_chunk=small_shape.seq_len,
+                     remat=False)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_mesh(mesh)
+    cfg = apply_policy(cfg0.scaled(**overrides), small_shape, mesh)
+
+    key = jax.random.PRNGKey(0)
+    params_shapes, params_specs = _params_shapes_specs(cfg, key)
+    params_sh = named(mesh, params_specs)
+    ins = input_specs(cfg, small_shape)
+    batch_sh = batch_shardings(cfg, mesh, ins)
+    if shape.kind == "train":
+        opt = hybrid_optimizer(eta=8.0, fp_lr=1e-3)
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        opt_sh = named(mesh, _opt_specs(params_shapes, params_specs))
+        step = make_train_step(cfg, opt, microbatches=1)
+        jitted = jax.jit(step, in_shardings=(params_sh, opt_sh, batch_sh),
+                         out_shardings=(params_sh, opt_sh, None),
+                         donate_argnums=(0, 1))
+        args = (params_shapes, opt_shapes, ins)
+    else:
+        cache_shapes, cache_specs = _cache_shapes_specs(
+            cfg, small_shape.global_batch, small_shape.seq_len)
+        cache_sh = named(mesh, cache_specs)
+        logits_sh = NamedSharding(
+            mesh, P(cfg.batch_axes if cfg.batch_axes else None, None, None))
+        if shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(params_sh, batch_sh),
+                             out_shardings=(logits_sh, named(mesh, cache_specs)))
+            args = (params_shapes, ins)
+        else:
+            step = make_decode_step(cfg)
+            jitted = jax.jit(step, in_shardings=(params_sh, cache_sh, batch_sh),
+                             out_shardings=(logits_sh, cache_sh),
+                             donate_argnums=(1,))
+            args = (params_shapes, cache_shapes, ins)
+    compiled = jitted.lower(*args).compile()
+    cost = compiled.cost_analysis() or {}
+    xla_flops = float(cost.get("flops", 0.0))
+    ana = analytic_cell_cost(cfg, small_shape, mesh, microbatches=1)
+    rec = {"arch": arch, "shape": shape_name, "kind": "calibration",
+           "loopfree_xla_flops_per_dev": xla_flops,
+           "loopfree_analytic_flops_per_dev": ana["flops_per_device"],
+           "ratio_analytic_over_xla": (ana["flops_per_device"] / xla_flops
+                                       if xla_flops else float("nan"))}
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    (RESULTS_DIR / f"calibrate__{arch}__{shape_name}.json").write_text(
+        json.dumps(rec, indent=2))
+    print(f"[calibrate] {arch} × {shape_name}: analytic/xla = "
+          f"{rec['ratio_analytic_over_xla']:.3f}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None, help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default=None,
+                    help="JSON dict of ModelConfig overrides (§Perf)")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--lower-only", action="store_true")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="loop-free analytic-vs-XLA FLOPs validation")
+    args = ap.parse_args()
+
+    if args.calibrate:
+        archs = ARCH_IDS if args.arch in (None, "all") else [args.arch]
+        shapes = (["train_4k", "prefill_32k", "decode_32k"]
+                  if args.shape in (None, "all") else [args.shape])
+        for arch in archs:
+            for shape_name in shapes:
+                try:
+                    calibrate(arch, shape_name)
+                except Exception as e:
+                    print(f"[calibrate] {arch} × {shape_name}: "
+                          f"ERROR {type(e).__name__}: {e}", flush=True)
+        return
+
+    archs = ARCH_IDS if args.arch in (None, "all") else [args.arch]
+    shapes = list(SHAPES) if args.shape in (None, "all") else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    variant = json.loads(args.variant) if args.variant else None
+
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                run_and_save(arch, shape_name, multi_pod, variant, args.tag)
+
+
+if __name__ == "__main__":
+    main()

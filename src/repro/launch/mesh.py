@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state. The dry-run process (launch/dryrun.py) sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import so 512 placeholder CPU devices exist; real TPU runtimes get the same
+topology from the platform.
+
+Axes:
+  pod   — data-parallel across pods (DCN); scales to N pods unchanged.
+  data  — data-parallel within a pod (ICI).
+  model — tensor/expert parallel within a pod (ICI).
+A future ``pipeline`` axis slots between pod and data (see DESIGN.md §5);
+none of the assigned shapes requires PP on a 256-chip v5e pod.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int = 1):
+    """Tiny mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def mesh_batch_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def mesh_num_chips(mesh) -> int:
+    return int(mesh.devices.size)

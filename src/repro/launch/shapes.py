@@ -1,0 +1,60 @@
+"""Assigned input shapes and their ShapeDtypeStruct input specs.
+
+LM transformer shapes are seq_len × global_batch. decode_*/long_* lower
+``serve_step`` (one new token against a seq_len KV cache), NOT train_step;
+prefill lowers ``lm_prefill``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeDef:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeDef] = {
+    "train_4k": ShapeDef("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeDef("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeDef("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeDef("long_500k", 524_288, 1, "decode"),
+}
+
+
+def input_specs(cfg, shape: ShapeDef):
+    """ShapeDtypeStruct stand-ins for every model input of this cell —
+    weak-type-correct, shardable, no device allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+    if shape.kind == "train":
+        specs = {"labels": tok(B, S)}
+        if cfg.frontend == "embeddings":
+            # modality frontend STUB: precomputed frame/patch embeddings
+            specs["embeddings"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                       cfg.dtype)
+        else:
+            specs["tokens"] = tok(B, S)
+        return specs
+    if shape.kind == "prefill":
+        if cfg.frontend == "embeddings":
+            return {"embeddings": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                       cfg.dtype)}
+        return {"tokens": tok(B, S)}
+    # decode: one new token; the cache (sized S) is part of the step state.
+    return {"tokens": tok(B, 1)}
+
+
+def applicable(cfg, shape: ShapeDef) -> bool:
+    """Shape-skip rules (documented in DESIGN.md):
+    long_500k needs sub-quadratic attention — SSM/hybrid only."""
+    if shape.name == "long_500k":
+        return cfg.long_context
+    return True

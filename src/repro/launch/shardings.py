@@ -1,0 +1,90 @@
+"""Per-cell sharding policy: how each (architecture × input shape × mesh)
+combination maps onto the ("pod","data","model") axes.
+
+  train_4k     batch → (pod,data); heads/d_ff/experts/d_inner/vocab → model;
+               grad accumulation so per-device microbatch ≈ 1 sample.
+  prefill_32k  batch → (pod,data); TP → model; emitted KV cache re-sharded
+               seq → model (the decode-consistent layout).
+  decode_32k   batch → (pod,data); KV cache seq → model (kv heads
+               unsharded, int8-quantized cache); flash-decode shard_map
+               combines softmax stats over "model".
+  long_500k    batch=1 unshardable: KV cache seq → ALL axes; SSM state
+               d_inner → model; flash-decode combines over the seq axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import ModelConfig
+from .mesh import mesh_batch_axes
+from .shapes import ShapeDef
+
+
+def apply_policy(cfg: ModelConfig, shape: ShapeDef, mesh) -> ModelConfig:
+    b_axes = mesh_batch_axes(mesh)
+    batch_shards = 1
+    for a in b_axes:
+        batch_shards *= mesh.shape[a]
+
+    common = dict(use_sharding_constraints=True)
+    if shape.kind in ("train", "prefill"):
+        return cfg.scaled(
+            batch_axes=b_axes,
+            cache_seq_axes=("model",) if shape.kind == "prefill" else (),
+            moe_groups=min(batch_shards, shape.global_batch),
+            **common,
+        )
+    if shape.name == "long_500k":
+        return cfg.scaled(
+            batch_axes=(),
+            cache_seq_axes=tuple(mesh.axis_names),
+            kv_cache_quant=False,
+            moe_groups=1,
+            **common,
+        )
+    # decode_32k
+    return cfg.scaled(
+        batch_axes=b_axes,
+        cache_seq_axes=("model",),
+        kv_cache_quant=True,
+        moe_groups=1,
+        **common,
+    )
+
+
+def train_microbatches(cfg: ModelConfig, shape: ShapeDef, mesh) -> int:
+    """Grad-accumulation factor: target per-device microbatch by size tier."""
+    b_axes = mesh_batch_axes(mesh)
+    shards = 1
+    for a in b_axes:
+        shards *= mesh.shape[a]
+    if cfg.d_model >= 5120:
+        per_dev = 1
+    elif cfg.d_model >= 4096:
+        per_dev = 2
+    else:
+        per_dev = 4
+    mb = max(1, shape.global_batch // (shards * per_dev))
+    while shape.global_batch % (mb * shards) and mb > 1:
+        mb -= 1
+    return mb
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(cfg: ModelConfig, mesh, batch_specs):
+    b_ax = cfg.batch_axes if cfg.batch_axes else None
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        return NamedSharding(mesh, P(b_ax, *([None] * (nd - 1))))
+
+    return jax.tree.map(one, batch_specs)

@@ -1,0 +1,341 @@
+"""Attention substrate: GQA with Boolean projections, chunked flash attention
+(32k-ready), sliding-window + global alternation (gemma2), logit softcap,
+QKV bias (qwen), and a KV-cache decode path (flash-decode-ready).
+
+TP scheme: Q heads sharded over "model" (padded up to a multiple of the axis;
+padded head outputs are *masked to zero* before the o-projection because
+Boolean ±1 weights cannot encode zero rows). KV heads with n_kv < axis are
+replicated; larger kv counts are padded+sharded like Q.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .modules import (FSDP_AXIS, MODEL_AXIS, ModelConfig, proj_apply,
+                      proj_init, rope, softcap)
+
+
+def attention_init(key, cfg: ModelConfig, axis_size: int = 16):
+    hd = cfg.head_dim_
+    hp = cfg.heads_padded(axis_size)
+    kvp = cfg.kv_heads_padded(axis_size)
+    kv_spec = (P(FSDP_AXIS, MODEL_AXIS) if cfg.n_kv_heads >= axis_size
+               else P(FSDP_AXIS, None))
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": proj_init(ks[0], cfg, cfg.d_model, hp * hd,
+                        P(FSDP_AXIS, MODEL_AXIS), bias=cfg.qkv_bias),
+        "wk": proj_init(ks[1], cfg, cfg.d_model, kvp * hd, kv_spec,
+                        bias=cfg.qkv_bias),
+        "wv": proj_init(ks[2], cfg, cfg.d_model, kvp * hd, kv_spec,
+                        bias=cfg.qkv_bias),
+        "wo": proj_init(ks[3], cfg, hp * hd, cfg.d_model,
+                        P(MODEL_AXIS, FSDP_AXIS)),
+    }
+
+
+def _qkv(cfg: ModelConfig, p, x, positions, axis_size: int = 16):
+    """Project to (B,S,Hp,hd) q and (B,S,KVp,hd) k/v with RoPE applied."""
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    hp = cfg.heads_padded(axis_size)
+    kvp = cfg.kv_heads_padded(axis_size)
+    q = proj_apply(cfg, p["wq"], x).reshape(B, S, hp, hd)
+    k = proj_apply(cfg, p["wk"], x).reshape(B, S, kvp, hd)
+    v = proj_apply(cfg, p["wv"], x).reshape(B, S, kvp, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _head_mask(cfg: ModelConfig, out, axis_size: int = 16):
+    """Zero the padded q-head outputs (Boolean wo rows are ±1, not 0)."""
+    hp = cfg.heads_padded(axis_size)
+    if hp == cfg.n_heads:
+        return out
+    mask = (jnp.arange(hp) < cfg.n_heads).astype(out.dtype)
+    return out * mask[None, None, :, None]
+
+
+def _repeat_kv(x, n_rep: int):
+    """(B,S,KV,hd) -> (B,S,KV*n_rep,hd) — GQA group broadcast."""
+    if n_rep == 1:
+        return x
+    B, S, KV, hd = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (B, S, KV, n_rep, hd)) \
+              .reshape(B, S, KV * n_rep, hd)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (training / prefill)
+# ---------------------------------------------------------------------------
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap_val: float = 0.0, chunk: int = 1024):
+    """Online-softmax attention, scanning KV in chunks of ``chunk``.
+
+    q,k,v: (B, S, H, hd) with identical H (kv already group-broadcast).
+    window > 0 limits attention to the last ``window`` positions (sliding).
+    Never materializes the (S,S) score matrix: peak extra memory is
+    (B, H, Cq, Ck) per chunk pair.
+    """
+    B, S, H, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    cq = min(chunk, S)
+    ck = min(chunk, S)
+    nq, nk = -(-S // cq), -(-S // ck)
+    Sp_q, Sp_k = nq * cq, nk * ck
+    qp = jnp.pad(q, ((0, 0), (0, Sp_q - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Sp_k - S), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Sp_k - S), (0, 0), (0, 0)))
+
+    # (B, n, C, H, hd) -> scan-friendly (n, B, H, C, hd)
+    qb = qp.reshape(B, nq, cq, H, hd).transpose(1, 0, 3, 2, 4)
+    kb = kp.reshape(B, nk, ck, H, hd).transpose(1, 0, 3, 2, 4)
+    vb = vp.reshape(B, nk, ck, H, hd).transpose(1, 0, 3, 2, 4)
+
+    q_pos = jnp.arange(Sp_q).reshape(nq, cq)
+    k_pos = jnp.arange(Sp_k).reshape(nk, ck)
+
+    def per_q_chunk(qi, q_chunk):
+        qpos = q_pos[qi]                       # (cq,)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            k_chunk, v_chunk, kpos = inp
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_chunk, k_chunk,
+                           preferred_element_type=jnp.float32) * scale
+            s = softcap(s, softcap_val)
+            valid = jnp.ones((cq, ck), bool)
+            if causal:
+                valid &= qpos[:, None] >= kpos[None, :]
+            if window > 0:
+                valid &= qpos[:, None] - kpos[None, :] < window
+            valid &= (kpos < S)[None, :]
+            s = jnp.where(valid[None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(v_chunk.dtype), v_chunk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+        a0 = jnp.zeros((B, H, cq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (kb, vb, k_pos))
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    out = jax.lax.map(lambda args: per_q_chunk(*args),
+                      (jnp.arange(nq), qb))          # (nq, B, H, cq, hd)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(B, Sp_q, H, hd)[:, :S]
+    return out.astype(q.dtype)
+
+
+def attention_apply(cfg: ModelConfig, p, x, positions, *,
+                    local: bool = False, axis_size: int = 16):
+    """Full training/prefill attention block body (no residual/norm)."""
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    hp = cfg.heads_padded(axis_size)
+    kvp = cfg.kv_heads_padded(axis_size)
+    q, k, v = _qkv(cfg, p, x, positions, axis_size)
+    k = _repeat_kv(k, hp // kvp)
+    v = _repeat_kv(v, hp // kvp)
+    window = cfg.sliding_window if local else 0
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          softcap_val=cfg.attn_logit_softcap,
+                          chunk=cfg.attn_chunk)
+    out = _head_mask(cfg, out, axis_size)
+    out = out.reshape(B, S, hp * hd)
+    return proj_apply(cfg, p["wo"], out)
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+KV_QUANT_SCALE = 32.0   # int8 cache: counts are ~unit-variance post-scaling
+
+
+def _kv_quant(x):
+    return jnp.clip(jnp.round(x.astype(jnp.float32) * KV_QUANT_SCALE),
+                    -127, 127).astype(jnp.int8)
+
+
+def _kv_dequant(x):
+    if x.dtype == jnp.int8:
+        return x.astype(jnp.float32) * (1.0 / KV_QUANT_SCALE)
+    return x.astype(jnp.float32)
+
+def attention_cache_init(cfg: ModelConfig, batch: int, max_len: int,
+                         axis_size: int = 16, *, shard_seq: bool = False):
+    """Returns (cache, specs).
+
+    Default decode layout: batch over cfg.batch_axes, cache sequence over
+    cfg.cache_seq_axes (the launcher picks per shape — see
+    launch/shardings.py), kv heads over "model" only when n_kv >= axis.
+    """
+    hd = cfg.head_dim_
+    kvp = cfg.kv_heads_padded(axis_size)
+    seq_axes = cfg.cache_seq_axes if (shard_seq or cfg.cache_seq_axes) else None
+    # seq-sharded decode layout keeps kv heads unsharded; otherwise kv heads
+    # shard over model when wide enough.
+    kv_axis = (MODEL_AXIS if (cfg.n_kv_heads >= axis_size and not seq_axes)
+               else None)
+    batch_axis = cfg.batch_axes if cfg.batch_axes else None
+    spec = P(batch_axis, seq_axes if seq_axes else None, kv_axis, None)
+    dtype = jnp.int8 if cfg.kv_cache_quant else cfg.dtype
+    shape = (batch, max_len, kvp, hd)
+    return ({"k": jnp.zeros(shape, dtype),
+             "v": jnp.zeros(shape, dtype)},
+            {"k": spec, "v": spec})
+
+
+def _flash_decode_local(cfg: ModelConfig, q, k_cache, v_cache, pos,
+                        seq_offset, *, local: bool):
+    """Partial flash-decode over a LOCAL cache slab.
+
+    q: (B, KVg, R, hd) grouped queries; k/v_cache: (B, S_loc, KVg, hd)
+    (bf16 or int8 — dequantized chunk-by-chunk); pos: global position;
+    seq_offset: global index of this slab's first row.
+    Returns (m, l, acc): softmax stats + unnormalized value accumulator.
+    """
+    B, S_loc, KV, hd = k_cache.shape
+    R = q.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    C = min(cfg.decode_chunk, S_loc)
+    n = -(-S_loc // C)
+    if n * C != S_loc:
+        pad = ((0, 0), (0, n * C - S_loc), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, pad)
+        v_cache = jnp.pad(v_cache, pad)
+
+    kb = k_cache.reshape(B, n, C, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v_cache.reshape(B, n, C, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kc, vc, ci = inp
+        kf = _kv_dequant(kc)                          # (B,C,KV,hd) fp32
+        s = jnp.einsum("bgrd,bcgd->bgrc", q.astype(jnp.float32), kf,
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap(s, cfg.attn_logit_softcap)
+        lrow = ci * C + jnp.arange(C)
+        kpos = seq_offset + lrow
+        valid = (kpos <= pos) & (lrow < S_loc)
+        if local and cfg.sliding_window > 0:
+            valid &= kpos > pos - cfg.sliding_window
+        s = jnp.where(valid[None, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        pexp = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(pexp, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bgrc,bcgd->bgrd", pexp, _kv_dequant(vc),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, R), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, KV, R), jnp.float32)
+    a0 = jnp.zeros((B, KV, R, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(n)))
+    return m, l, acc
+
+
+def attention_decode(cfg: ModelConfig, p, x, cache, pos, *,
+                     local: bool = False, axis_size: int = 16):
+    """One-token decode. x: (B,1,D); cache{k,v}: (B,Smax,KVp,hd); pos scalar.
+
+    When the launcher installs a seq-sharded cache layout
+    (cfg.cache_seq_axes), the cache update + flash-decode run inside a fully
+    manual shard_map: each device scans only its local cache slab, then the
+    softmax stats combine with one tiny psum over the seq axes — the
+    collective payload is O(B·H·hd), independent of context length.
+    """
+    B, _, _ = x.shape
+    hd = cfg.head_dim_
+    hp = cfg.heads_padded(axis_size)
+    kvp = cfg.kv_heads_padded(axis_size)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(cfg, p, x, positions, axis_size)
+    n_rep = hp // kvp
+    qg = q[:, 0].reshape(B, kvp, n_rep, hd)
+    if cache["k"].dtype == jnp.int8:
+        k_new, v_new = _kv_quant(k_new), _kv_quant(v_new)
+    else:
+        k_new = k_new.astype(cache["k"].dtype)
+        v_new = v_new.astype(cache["v"].dtype)
+
+    if cfg.use_sharding_constraints and cfg.cache_seq_axes:
+        out, k_cache, v_cache = _decode_shardmap(
+            cfg, qg, k_new[:, 0], v_new[:, 0], cache["k"], cache["v"], pos,
+            local=local)
+    else:
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new,
+                                               (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new,
+                                               (0, pos, 0, 0))
+        m, l, acc = _flash_decode_local(cfg, qg, k_cache, v_cache, pos, 0,
+                                        local=local)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+
+    out = out.reshape(B, 1, hp, hd).astype(x.dtype)
+    out = _head_mask(cfg, out, axis_size)
+    out = out.reshape(B, 1, hp * hd)
+    return proj_apply(cfg, p["wo"], out), {"k": k_cache, "v": v_cache}
+
+
+def _decode_shardmap(cfg: ModelConfig, qg, k_new, v_new, k_cache, v_cache,
+                     pos, *, local: bool):
+    """Manual seq-sharded flash-decode (see attention_decode docstring)."""
+    from repro.distributed import get_mesh
+
+    mesh = get_mesh()
+    seq_axes = cfg.cache_seq_axes
+    b_ax = cfg.batch_axes if cfg.batch_axes else None
+    S = k_cache.shape[1]
+    n_shards = 1
+    for a in seq_axes:
+        n_shards *= mesh.shape[a]
+    S_loc = S // n_shards
+
+    def local_fn(qg, k_new, v_new, kc, vc):
+        # global offset of this device's slab
+        idx = jnp.zeros((), jnp.int32)
+        for a in seq_axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        offset = idx * S_loc
+        # write the new token iff it lands in this slab
+        lpos = jnp.clip(pos - offset, 0, S_loc - 1)
+        here = (pos >= offset) & (pos < offset + S_loc)
+        kc_new = jax.lax.dynamic_update_slice(kc, k_new[:, None], (0, lpos, 0, 0))
+        vc_new = jax.lax.dynamic_update_slice(vc, v_new[:, None], (0, lpos, 0, 0))
+        kc = jnp.where(here, kc_new, kc)
+        vc = jnp.where(here, vc_new, vc)
+        m, l, acc = _flash_decode_local(cfg, qg, kc, vc, pos, offset,
+                                        local=local)
+        # combine softmax stats across seq shards — O(B·H·hd) payload
+        m_g = jax.lax.pmax(m, seq_axes)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, seq_axes)
+        acc_g = jax.lax.psum(acc * corr[..., None], seq_axes)
+        out = acc_g / jnp.maximum(l_g[..., None], 1e-30)
+        return out, kc, vc
+
+    rep = P(b_ax, None, None, None)
+    cache_spec = P(b_ax, seq_axes, None, None)
+    return jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(rep, P(b_ax, None, None), P(b_ax, None, None),
+                  cache_spec, cache_spec),
+        out_specs=(rep, cache_spec, cache_spec),
+        check_vma=False,
+    )(qg, k_new, v_new, k_cache, v_cache)

@@ -1,0 +1,48 @@
+"""Boolean FFN (gated), the paper's MLP recipe inside transformer blocks.
+
+Gated variant (qwen/gemma/jamba layouts): the gate path goes through the
+Boolean threshold activation (the unique binary activation family, §3.1),
+producing ±1 which sign-modulates the up path — all three projections carry
+native Boolean weights. The learned per-channel threshold τ is an FP leaf
+(paper: "τ can be fixed or learned").
+
+With ``act_boolean=False`` the hidden nonlinearity falls back to SiLU on the
+scaled counts (used for FP baselines and ablations).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import boolean_activation
+
+from .modules import (FSDP_AXIS, MODEL_AXIS, ModelConfig, fp_zeros,
+                      proj_apply, proj_init)
+
+
+def ffn_init(key, cfg: ModelConfig, d_ff: int = 0):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": proj_init(ks[0], cfg, cfg.d_model, d_ff,
+                        P(FSDP_AXIS, MODEL_AXIS)),
+        "wu": proj_init(ks[1], cfg, cfg.d_model, d_ff,
+                        P(FSDP_AXIS, MODEL_AXIS)),
+        "wd": proj_init(ks[2], cfg, d_ff, cfg.d_model,
+                        P(MODEL_AXIS, FSDP_AXIS)),
+        "tau": fp_zeros((d_ff,), P(MODEL_AXIS)),
+    }
+
+
+def ffn_apply(cfg: ModelConfig, p, x):
+    g = proj_apply(cfg, p["wg"], x)     # scaled counts, Var≈1
+    u = proj_apply(cfg, p["wu"], x)
+    if cfg.boolean and cfg.act_boolean:
+        # s is pre-normalized to unit variance by proj_apply, so the tanh'
+        # window parameter is alpha = pi/(2*sqrt(3)) — fan_in=1 (App C.3).
+        gb = boolean_activation(g, p["tau"].astype(g.dtype), 1)
+        h = gb * u
+    else:
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u
+    return proj_apply(cfg, p["wd"], h)

@@ -1,0 +1,185 @@
+"""Mixture-of-Experts with Boolean expert weights (moonshot / arctic / jamba).
+
+Router: FP dense + softmax + top-k (routers stay FP — see DESIGN.md
+§Arch-applicability). Expert FFNs are gated MLPs with **Boolean int8
+weights** — the headline B⊕LD win: expert memory is the dominant weight
+volume at 480B scale and shrinks 4× vs bf16, 8-12× vs fp32+Adam.
+
+Two dispatch implementations (selectable, both static-shape / dry-run safe):
+
+* ``einsum``  — GShard-style capacity dispatch via (T,E,C) one-hot einsums.
+  The faithful 2020-era baseline; its dispatch einsums cost T·D·E·C FLOPs
+  which *dwarfs* the useful expert compute at large E·C. Kept as the §Perf
+  baseline.
+* ``scatter`` — position-in-expert computed with a cumsum, tokens scattered
+  into (E,C,D) buffers with ``.at[].add``, gathered back with take. Useful
+  FLOPs only (plus O(T·E) integer bookkeeping). The §Perf hillclimb.
+
+Expert GEMMs use plain einsum on the ±1 views: by the paper's isomorphism
+(Prop A.2) the standard einsum VJP *is* the Boolean vote aggregation; the
+App-C.4 backward normalization is folded into the combine scale.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import boolean_activation
+from .modules import (FSDP_AXIS, MODEL_AXIS, ModelConfig, bool_weight,
+                      fp_weight, fp_zeros, proj_init)
+
+
+def moe_init(key, cfg: ModelConfig, d_ff: int = 0):
+    d_ff = d_ff or cfg.d_ff
+    E, D = cfg.n_experts, cfg.d_model
+    ks = jax.random.split(key, 4)
+    if cfg.boolean:
+        wg = bool_weight(ks[0], (E, D, d_ff), P(MODEL_AXIS, FSDP_AXIS, None))
+        wu = bool_weight(ks[1], (E, D, d_ff), P(MODEL_AXIS, FSDP_AXIS, None))
+        wd = bool_weight(ks[2], (E, d_ff, D), P(MODEL_AXIS, None, FSDP_AXIS))
+    else:
+        sc = 1.0 / math.sqrt(D)
+        wg = fp_weight(ks[0], (E, D, d_ff), P(MODEL_AXIS, FSDP_AXIS, None),
+                       sc, cfg.dtype)
+        wu = fp_weight(ks[1], (E, D, d_ff), P(MODEL_AXIS, FSDP_AXIS, None),
+                       sc, cfg.dtype)
+        wd = fp_weight(ks[2], (E, d_ff, D), P(MODEL_AXIS, None, FSDP_AXIS),
+                       1.0 / math.sqrt(d_ff), cfg.dtype)
+    return {
+        "router": fp_weight(ks[3], (D, E), P(None, MODEL_AXIS),
+                            scale=1.0 / math.sqrt(D), dtype=jnp.float32),
+        "wg": wg, "wu": wu, "wd": wd,
+        "tau": fp_zeros((d_ff,), P(None)),
+    }
+
+
+def _expert_mlp(cfg: ModelConfig, p, xin):
+    """xin: (E, C, D) -> (E, C, D) through each expert's gated Boolean MLP."""
+    d_ff = p["wg"].shape[-1]
+    wg = p["wg"].astype(xin.dtype)
+    wu = p["wu"].astype(xin.dtype)
+    wd = p["wd"].astype(xin.dtype)
+    scale_in = 1.0 / math.sqrt(p["wg"].shape[1]) if cfg.boolean else 1.0
+    scale_hid = 1.0 / math.sqrt(d_ff) if cfg.boolean else 1.0
+    # bf16 preferred dtype keeps autodiff cotangents (the EP all-to-all /
+    # scatter payloads) in bf16; MXU accumulation is fp32 internally.
+    pref = xin.dtype if cfg.reduce_bf16 else jnp.float32
+    g = jnp.einsum("ecd,edf->ecf", xin, wg,
+                   preferred_element_type=pref).astype(xin.dtype) * scale_in
+    u = jnp.einsum("ecd,edf->ecf", xin, wu,
+                   preferred_element_type=pref).astype(xin.dtype) * scale_in
+    if cfg.boolean and cfg.act_boolean:
+        gb = boolean_activation(g, p["tau"].astype(g.dtype), 1)
+        h = gb * u
+    else:
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u
+    out = jnp.einsum("ecf,efd->ecd", h, wd,
+                     preferred_element_type=pref).astype(xin.dtype)
+    return out * scale_hid
+
+
+def _route(cfg: ModelConfig, p, xf):
+    """xf: (T, D) -> (gates (T,k), experts (T,k) int32, aux_loss)."""
+    logits = jnp.dot(xf.astype(jnp.float32), p["router"],
+                     preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # Load-balancing auxiliary loss (Switch/GShard form).
+    E = cfg.n_experts
+    me = jnp.mean(probs, axis=0)                          # mean router prob
+    ce = jnp.mean(jax.nn.one_hot(experts[:, 0], E), axis=0)  # top-1 load
+    aux = E * jnp.sum(me * ce)
+    return gates, experts, aux
+
+
+def _capacity(cfg: ModelConfig, T: int) -> int:
+    c = int(math.ceil(T * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)
+
+
+def _group_tokens(cfg: ModelConfig, x):
+    """(B,S,D) -> (G, T_g, D): routing groups = batch shards, so capacity
+    and dispatch stay local under pjit (the GShard 'group' dimension)."""
+    B, S, D = x.shape
+    G = min(cfg.moe_groups, B)
+    return x.reshape(G, (B // G) * S, D)
+
+
+def moe_apply_einsum(cfg: ModelConfig, p, x):
+    """GShard einsum dispatch (baseline), vmapped over routing groups."""
+    xg = _group_tokens(cfg, x)
+    y, aux = jax.vmap(lambda xi: _moe_einsum_group(cfg, p, xi))(xg)
+    return y.reshape(x.shape).astype(x.dtype), jnp.mean(aux)
+
+
+def _moe_einsum_group(cfg: ModelConfig, p, xf):
+    T, D = xf.shape
+    gates, experts, aux = _route(cfg, p, xf)
+    E, k, C = cfg.n_experts, cfg.top_k, _capacity(cfg, T)
+
+    # position of each (token, slot) within its expert
+    onehot = jax.nn.one_hot(experts, E, dtype=jnp.float32)   # (T,k,E)
+    flat = onehot.reshape(T * k, E)
+    pos = (jnp.cumsum(flat, axis=0) - flat).reshape(T, k, E)  # arrival order
+    pos = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)    # (T,k)
+    keep = pos < C
+    gates = gates * keep
+
+    # dispatch (T, E, C) / combine (T, E, C)
+    pos_oh = jax.nn.one_hot(pos, C, dtype=xf.dtype)           # (T,k,C)
+    disp = jnp.einsum("tke,tkc->tec", onehot.astype(xf.dtype),
+                      pos_oh * keep[..., None].astype(xf.dtype))
+    comb = jnp.einsum("tke,tkc->tec",
+                      onehot.astype(jnp.float32) * gates[..., None],
+                      pos_oh.astype(jnp.float32))
+
+    xin = jnp.einsum("td,tec->ecd", xf, disp)                 # (E,C,D)
+    out = _expert_mlp(cfg, p, xin)
+    y = jnp.einsum("ecd,tec->td", out.astype(jnp.float32), comb)
+    return y, aux
+
+
+def moe_apply_scatter(cfg: ModelConfig, p, x):
+    """Scatter/gather dispatch (hillclimbed): useful FLOPs only."""
+    xg = _group_tokens(cfg, x)
+    y, aux = jax.vmap(lambda xi: _moe_scatter_group(cfg, p, xi))(xg)
+    return y.reshape(x.shape).astype(x.dtype), jnp.mean(aux)
+
+
+def _moe_scatter_group(cfg: ModelConfig, p, xf):
+    T, D = xf.shape
+    gates, experts, aux = _route(cfg, p, xf)
+    E, k, C = cfg.n_experts, cfg.top_k, _capacity(cfg, T)
+
+    onehot = jax.nn.one_hot(experts, E, dtype=jnp.int32).reshape(T * k, E)
+    pos = jnp.sum((jnp.cumsum(onehot, axis=0) - onehot) * onehot, axis=-1)
+    e_flat = experts.reshape(T * k)
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, C)          # overflow -> scratch slot C
+
+    # scatter tokens into (E, C+1, D); slot C swallows dropped tokens
+    tok_idx = jnp.repeat(jnp.arange(T), k)
+    from .modules import constrain, MODEL_AXIS
+    buf = jnp.zeros((E, C + 1, D), xf.dtype)
+    buf = buf.at[e_flat, pos_c].add(xf[tok_idx])
+    buf = constrain(cfg, buf, P(MODEL_AXIS, None, None))   # EP layout
+    out = _expert_mlp(cfg, p, buf[:, :C])
+
+    # gather back: each (token, slot) reads its expert row. The combine
+    # accumulates in the activation dtype (bf16) — k≤8 summands, and the
+    # cross-shard EP traffic halves vs fp32 (§Perf: scatter-bf16).
+    out_pad = jnp.concatenate([out, jnp.zeros((E, 1, D), out.dtype)], axis=1)
+    got = out_pad[e_flat, pos_c]             # (T*k, D)
+    w = (gates.reshape(T * k) * keep).astype(xf.dtype)
+    y = jnp.zeros((T, D), xf.dtype).at[tok_idx].add(got * w[:, None])
+    return y, aux
+
+
+def moe_apply(cfg: ModelConfig, p, x):
+    if cfg.moe_impl == "scatter":
+        return moe_apply_scatter(cfg, p, x)
+    return moe_apply_einsum(cfg, p, x)

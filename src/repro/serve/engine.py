@@ -1,0 +1,67 @@
+"""Batched serving engine: prefill once, decode greedily with a KV/SSM cache.
+
+Serving runs directly on the stored int8 Boolean weights (per-layer
+transient ±1 views; no FP weight copy is ever resident) — the B⊕LD
+inference story. Optional int8-quantized KV cache (cfg.kv_cache_quant).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, cache_init, lm_decode_step, lm_prefill
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(lambda p, b: lm_prefill(cfg, p, b))
+        self._decode = jax.jit(lambda p, c, t: lm_decode_step(cfg, p, c, t))
+
+    def _grow_cache(self, cache, prompt_len: int, batch: int):
+        """Prefill emits caches sized to the prompt; extend to max_len."""
+        target = self.max_len
+
+        def grow(leaf):
+            if leaf.ndim == 5 and leaf.shape[2] == prompt_len:
+                pad = [(0, 0)] * 5
+                pad[2] = (0, target - prompt_len)
+                return jnp.pad(leaf, pad)
+            return leaf
+
+        return {"blocks": jax.tree.map(grow, cache["blocks"]),
+                "pos": cache["pos"]}
+
+    def generate(self, prompts: jax.Array, n_tokens: int,
+                 temperature: float = 0.0,
+                 key: Optional[jax.Array] = None) -> jax.Array:
+        """prompts: (B, S) int32 -> (B, n_tokens) int32 (greedy/temperature)."""
+        B, S = prompts.shape
+        assert S + n_tokens <= self.max_len
+        if self.cfg.frontend == "embeddings":
+            table = self.params["embed"]["table"]
+            emb = jnp.take(table, prompts, axis=0).astype(self.cfg.dtype)
+            logits, cache = self._prefill(self.params, {"embeddings": emb})
+        else:
+            logits, cache = self._prefill(self.params, {"tokens": prompts})
+        cache = self._grow_cache(cache, S, B)
+
+        out = []
+        tok = self._sample(logits[:, -1], temperature, key, 0)
+        for i in range(n_tokens):
+            out.append(tok)
+            logits, cache = self._decode(self.params, cache, tok)
+            tok = self._sample(logits[:, -1], temperature, key, i + 1)
+        return jnp.concatenate(out, axis=1)
+
+    def _sample(self, logits, temperature, key, i):
+        logits = logits[..., :self.cfg.vocab_size]
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        k = jax.random.fold_in(key, i)
+        return jax.random.categorical(
+            k, logits / temperature, axis=-1)[:, None].astype(jnp.int32)

@@ -1,0 +1,113 @@
+"""Train / serve step factories (pjit-ready pure functions).
+
+``train_step`` implements the paper's full recipe at pod scale:
+  1. view int8 Boolean params as ±1 bf16 for one differentiation (no
+     persistent FP latents — DESIGN.md §2),
+  2. microbatched gradient accumulation (lax.scan) so per-device activation
+     memory is one microbatch; vote counts accumulate in fp32 — summing
+     votes across microbatches IS the paper's Eq-7 batch aggregation,
+  3. Boolean flip-rule update for int8 leaves + Adam for FP leaves.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from repro.core.optimizer import Optimizer, is_boolean_leaf
+from repro.models import ModelConfig, lm_decode_step, lm_loss, lm_prefill
+from repro.models.modules import constrain
+
+
+def bool_view(params, dtype=jnp.bfloat16):
+    """int8 ±1 leaves -> float view (bitwise-determined, transient)."""
+    return jax.tree.map(
+        lambda p: p.astype(dtype) if is_boolean_leaf(p) else p, params)
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                    microbatches: int = 1,
+                    grad_accum_dtype=jnp.float32,
+                    grad_shardings=None):
+    """grad_shardings: optional tree of NamedSharding matching params — the
+    per-microbatch grads are constrained to it so the DP reduction lowers
+    as reduce-scatter into the FSDP shard instead of all-reduce + slice
+    (§Perf: grad-RS)."""
+    def loss_fn(pf, mb):
+        return lm_loss(cfg, pf, mb)
+
+    def _constrain_grads(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(
+            lambda gi, sh: jax.lax.with_sharding_constraint(gi, sh),
+            g, grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        pf = bool_view(params, cfg.dtype)
+        if microbatches == 1:
+            (loss, parts), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(pf, batch)
+            grads = _constrain_grads(grads)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            b_ax = cfg.batch_axes if cfg.batch_axes else None
+            mbs = jax.tree.map(
+                lambda x: constrain(
+                    cfg,
+                    x.reshape((microbatches, x.shape[0] // microbatches)
+                              + x.shape[1:]),
+                    P(None, b_ax, *([None] * (x.ndim - 1)))), batch)
+
+            def mb_step(carry, mb):
+                loss_acc, gacc = carry
+                (loss, parts), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(pf, mb)
+                g = _constrain_grads(g)
+                gacc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(grad_accum_dtype), gacc, g)
+                # keep the accumulation CARRY sharded like the params —
+                # otherwise SPMD resolves the scan carry to replicated fp32
+                # (~50 GiB/device at 400B scale; §Perf iteration #12)
+                gacc = _constrain_grads(gacc)
+                return (loss_acc + loss, gacc), parts
+
+            g0 = _constrain_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, grad_accum_dtype), pf))
+            (loss_sum, grads), _ = jax.lax.scan(
+                mb_step, (jnp.zeros((), jnp.float32), g0), mbs)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        new_params, new_opt_state = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "flips": _flip_total(new_opt_state)}
+        return new_params, new_opt_state, metrics
+
+    return train_step
+
+
+def _flip_total(opt_state):
+    flips = getattr(getattr(opt_state, "boolean", opt_state), "flips", None)
+    if flips is None:
+        return jnp.zeros((), jnp.float32)
+    leaves = [l for l in jax.tree.leaves(flips)]
+    return sum(leaves) if leaves else jnp.zeros((), jnp.float32)
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Serving prefill: raw int8 params (per-layer transient float views)."""
+    def prefill_step(params, batch):
+        return lm_prefill(cfg, params, batch)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, batch):
+        tokens = batch["tokens"] if isinstance(batch, dict) else batch
+        return lm_decode_step(cfg, params, cache, tokens)
+    return decode_step

@@ -1,0 +1,2 @@
+from .vgg import vgg_init, vgg_apply, vgg_loss
+from .edsr import edsr_init, edsr_apply

@@ -1,0 +1,77 @@
+"""Boolean SMALL-EDSR (paper §4.2, Table 3): 8 Boolean residual blocks,
+pixel-shuffle upsampler. First/last convs FP per the paper's setup."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import boolean_activation, boolean_conv2d, random_boolean
+
+
+def _conv_fp(key, kh, kw, cin, cout):
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) \
+        / math.sqrt(kh * kw * cin)
+
+
+def edsr_init(key, n_blocks: int = 8, width: int = 64, scale: int = 2,
+              boolean: bool = True):
+    ks = iter(jax.random.split(key, 4 * n_blocks + 8))
+    params = {"head": {"w": _conv_fp(next(ks), 3, 3, 3, width)}}
+    for i in range(n_blocks):
+        blk = {}
+        for j in range(2):
+            if boolean:
+                blk[f"w{j}"] = random_boolean(next(ks), (3, 3, width, width))
+            else:
+                blk[f"w{j}"] = _conv_fp(next(ks), 3, 3, width, width)
+        params[f"b{i}"] = blk
+    params["up"] = {"w": _conv_fp(next(ks), 3, 3, width,
+                                  width * scale * scale)}
+    params["tail"] = {"w": _conv_fp(next(ks), 3, 3, width, 3)}
+    params["_meta"] = {"n_blocks": jnp.asarray(n_blocks),
+                       "scale": jnp.asarray(scale),
+                       "boolean": jnp.asarray(int(boolean))}
+    return params
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def edsr_apply(params, x, n_blocks: int = 8, scale: int = 2,
+               boolean: bool = True):
+    """x: (N,H,W,3) in [0,1] -> (N, H*scale, W*scale, 3)."""
+    x = x - 0.5
+    h = _conv(x, params["head"]["w"])
+    feat = h
+    width = h.shape[-1]
+    fan_in = 9 * width
+    for i in range(n_blocks):
+        blk = params[f"b{i}"]
+        if boolean:
+            y = boolean_conv2d(h, blk["w0"].astype(h.dtype), 1, "SAME")
+            y = boolean_activation(y, 0.0, fan_in)
+            y = boolean_conv2d(y, blk["w1"].astype(h.dtype), 1, "SAME")
+            y = y / fan_in          # rescale counts to activation range
+        else:
+            y = _conv(h, blk["w0"])
+            y = jax.nn.relu(y)
+            y = _conv(y, blk["w1"])
+        h = h + y * 0.1             # EDSR residual scaling
+    h = h + feat
+    u = _conv(h, params["up"]["w"])
+    N, H, W, C = u.shape
+    r = scale
+    u = u.reshape(N, H, W, r, r, C // (r * r))
+    u = u.transpose(0, 1, 3, 2, 4, 5).reshape(N, H * r, W * r, C // (r * r))
+    out = _conv(u, params["tail"]["w"]) + 0.5
+    return out
+
+
+def psnr(pred, target, max_val: float = 1.0):
+    mse = jnp.mean((pred - target) ** 2)
+    return 10.0 * jnp.log10(max_val ** 2 / jnp.maximum(mse, 1e-10))

@@ -1,0 +1,109 @@
+"""Boolean VGG-SMALL (paper §4.1, Tables 2/6/9) built on core Boolean convs.
+
+Per the paper's setup: first conv and the classifier stay FP (Adam); every
+inner conv carries native Boolean weights with the threshold activation;
+optional BN variant (Table 2 "with BN").
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (boolean_activation, boolean_conv2d, random_boolean)
+
+
+def _conv_fp(key, kh, kw, cin, cout, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(kh * kw * cin)
+    return jax.random.normal(key, (kh, kw, cin, cout), dtype) * scale
+
+
+def vgg_init(key, cfg):
+    ks = iter(jax.random.split(key, 64))
+    params = {}
+    cin = cfg.in_channels
+    # first layer FP (paper setup)
+    first_cout = cfg.stages[0][0]
+    params["first"] = {"w": _conv_fp(next(ks), 3, 3, cin, first_cout)}
+    cin = first_cout
+    for si, (cout, n_convs) in enumerate(cfg.stages):
+        stage = {}
+        for ci in range(n_convs):
+            skip_first = si == 0 and ci == 0
+            if skip_first:
+                continue
+            layer = {}
+            if cfg.boolean:
+                layer["w"] = random_boolean(next(ks), (3, 3, cin, cout))
+            else:
+                layer["w"] = _conv_fp(next(ks), 3, 3, cin, cout)
+            if cfg.with_bn:
+                layer["bn_scale"] = jnp.ones((cout,), jnp.float32)
+                layer["bn_bias"] = jnp.zeros((cout,), jnp.float32)
+            stage[f"c{ci}"] = layer
+            cin = cout
+        params[f"s{si}"] = stage
+    hw = cfg.input_hw // (2 ** len(cfg.stages))
+    flat = hw * hw * cfg.stages[-1][0]
+    params["fc"] = {
+        "w": jax.random.normal(next(ks), (flat, cfg.fc_dim), jnp.float32)
+        / math.sqrt(flat),
+        "b": jnp.zeros((cfg.fc_dim,), jnp.float32),
+    }
+    params["out"] = {
+        "w": jax.random.normal(next(ks), (cfg.fc_dim, cfg.n_classes),
+                               jnp.float32) / math.sqrt(cfg.fc_dim),
+        "b": jnp.zeros((cfg.n_classes,), jnp.float32),
+    }
+    return params
+
+
+def _bn(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    xhat = (x - mu) * jax.lax.rsqrt(var + eps)
+    return xhat * scale + bias
+
+
+def vgg_apply(params, cfg, images):
+    """images: (N,H,W,C) in [-1,1] -> logits (N,n_classes)."""
+    x = jax.lax.conv_general_dilated(
+        images, params["first"]["w"].astype(images.dtype), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    for si, (cout, n_convs) in enumerate(cfg.stages):
+        for ci in range(n_convs):
+            if si == 0 and ci == 0:
+                pass
+            else:
+                layer = params[f"s{si}"][f"c{ci}"]
+                w = layer["w"]
+                fan_in = 9 * w.shape[2]
+                if cfg.boolean:
+                    x = boolean_conv2d(x, w.astype(x.dtype), 1, "SAME")
+                    if cfg.with_bn:
+                        x = _bn(x, layer["bn_scale"], layer["bn_bias"])
+                        x = boolean_activation(x, 0.0, 1)
+                    else:
+                        x = boolean_activation(x, 0.0, fan_in)
+                else:
+                    x = jax.lax.conv_general_dilated(
+                        x, w.astype(x.dtype), (1, 1), "SAME",
+                        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+                    if cfg.with_bn:
+                        x = _bn(x, layer["bn_scale"], layer["bn_bias"])
+                    x = jax.nn.relu(x)
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc"]["w"] + params["fc"]["b"])
+    return x @ params["out"]["w"] + params["out"]["b"]
+
+
+def vgg_loss(params, cfg, images, labels):
+    logits = vgg_apply(params, cfg, images)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return nll, acc

@@ -1,0 +1,19 @@
+"""Shared pytest config.
+
+NOTE: do NOT set XLA_FLAGS / host-device-count here — smoke tests and
+benches must see the single real CPU device; only launch/dryrun.py forces
+512 placeholder devices (in its own process).
+"""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import HealthCheck, settings
+
+# JAX first-call compiles blow through hypothesis' default 200ms deadline.
+settings.register_profile(
+    "jax",
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("jax")

@@ -1,0 +1,105 @@
+"""Property tests for the analysis substrate: energy model monotonicity,
+analytic FLOPs consistency, HLO collective parser."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.energy import ASCEND, TPU_V5E, V100, ConvShape, LinearShape, \
+    layer_energy, training_energy
+from repro.launch.hlo_analysis import (collective_bytes, model_flops,
+                                       roofline_terms)
+
+
+# ---------------------------------------------------------------------------
+# Energy model properties
+# ---------------------------------------------------------------------------
+@settings(max_examples=25)
+@given(st.integers(1, 64), st.integers(8, 256), st.integers(8, 256),
+       st.integers(4, 64))
+def test_energy_monotone_in_size(n, m, c, hw):
+    small = ConvShape(N=n, M=m, C=c, HI=hw, WI=hw, HF=3, WF=3)
+    big = ConvShape(N=n, M=2 * m, C=c, HI=hw, WI=hw, HF=3, WF=3)
+    for h in (ASCEND, V100, TPU_V5E):
+        e_s = layer_energy(small, h, "bool", "bool")["total_pj"]
+        e_b = layer_energy(big, h, "bool", "bool")["total_pj"]
+        assert e_b > e_s
+
+
+@settings(max_examples=25)
+@given(st.integers(16, 512), st.integers(16, 512), st.integers(1, 128))
+def test_energy_dtype_ordering(cin, cout, n):
+    l = LinearShape(N=n, Cin=cin, Cout=cout)
+    for h in (ASCEND, V100, TPU_V5E):
+        e_bool = layer_energy(l, h, "bool", "bool")["total_pj"]
+        e_int8 = layer_energy(l, h, "int8", "int8")["total_pj"]
+        e_fp32 = layer_energy(l, h, "fp32", "fp32")["total_pj"]
+        assert e_bool < e_int8 < e_fp32
+
+
+def test_training_energy_latent_penalty():
+    layers = [ConvShape(N=32, M=64, C=64, HI=16, WI=16, HF=3, WF=3)]
+    for h in (ASCEND, V100, TPU_V5E):
+        bold = training_energy(layers, h, "bool", "bool")["total_pj"]
+        bnn = training_energy(layers, h, "bool", "bool",
+                              latent_weights=True)["total_pj"]
+        assert bnn > 1.5 * bold   # FP latents+grads cost real energy
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs model vs the 6·N·D yardstick
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["gemma2-2b", "qwen1.5-110b",
+                                  "internvl2-26b"])
+def test_analytic_flops_cover_model_flops_dense(arch):
+    """For dense archs the compiled program must do at least the useful
+    work: analytic >= 6·N·D (waste terms only add)."""
+    import jax
+    from repro.configs import get_config
+    from repro.launch.flops_model import analytic_cell_cost
+    from repro.launch.shapes import SHAPES
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:
+            shape = (16, 16)
+            size = 256
+
+    shape = SHAPES["train_4k"]
+    cfg = get_config(arch)
+    ana = analytic_cell_cost(cfg, shape, FakeMesh, microbatches=16)
+    mf = model_flops(cfg, shape)
+    assert ana["flops_total"] >= 0.95 * mf
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser
+# ---------------------------------------------------------------------------
+HLO_SAMPLE = """
+  %ar = f32[4,4096,2304]{2,1,0} all-reduce(%x), replica_groups=[16,16]<=[256], metadata={op_name="jit(f)/while/body/foo"}
+  %ag = bf16[16,128]{1,0} all-gather(%y), replica_groups=[4,4]<=[16], metadata={op_name="jit(f)/bar"}
+  %rs = f32[8]{0} reduce-scatter(%z), replica_groups=[2,8]<=[16], metadata={op_name="jit(f)/while/body/while/body/baz"}
+"""
+
+
+def test_collective_parser_shapes_and_trips():
+    out = collective_bytes(HLO_SAMPLE, trip_stack=(4, 13))
+    ar = 4 * 4096 * 2304 * 4 * 4          # result bytes × trip(depth1)=4
+    ag = (16 * 128 * 2) // 4              # operand = result / group
+    rs = 8 * 4 * 8 * 4 * 13               # operand = result×group, ×4×13
+    assert out["all-reduce"] == ar
+    assert out["all-gather"] == ag
+    assert out["reduce-scatter"] == rs
+    assert out["count"] == 3
+    assert out["total"] == ar + ag + rs
+    assert out["ring_total"] > 0
+
+
+def test_roofline_bottleneck_classification():
+    t = roofline_terms(1e15, 1e9, 1e9, 256)        # compute dominates
+    assert t["bottleneck"] == "compute"
+    t = roofline_terms(1e9, 1e12, 1e9, 256)        # memory dominates
+    assert t["bottleneck"] == "memory"
+    t = roofline_terms(1e9, 1e9, 1e12, 256)        # collective dominates
+    assert t["bottleneck"] == "collective"
+    assert 0 < t["roofline_fraction_of_compute"] <= 1

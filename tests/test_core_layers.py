@@ -1,0 +1,161 @@
+"""Tests for Boolean dense/conv layers and threshold activation (paper §3.1/3.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (boolean_activation, boolean_conv2d, boolean_dense,
+                        boolean_dense_inference, preactivation_alpha,
+                        backward_scale, random_boolean)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Forward semantics: embedded MAC == Boolean counting (Eq 1 / Prop A.2)
+# ---------------------------------------------------------------------------
+@settings(max_examples=20)
+@given(st.integers(1, 33), st.integers(1, 17))
+def test_dense_counting_semantics(m, n):
+    key = jax.random.PRNGKey(m * 131 + n)
+    x = random_boolean(key, (4, m)).astype(jnp.float32)
+    w = random_boolean(jax.random.PRNGKey(1), (m, n)).astype(jnp.float32)
+    y = boolean_dense(x, w, None)
+    # Counting of TRUEs minus FALSEs of xnor(x_i, w_ij):
+    agree = (x[:, :, None] == w[None, :, :]).sum(1)
+    expected = agree - (m - agree)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expected), atol=1e-5)
+
+
+def test_dense_bias_is_counting_offset():
+    x = jnp.ones((2, 4), jnp.float32)
+    w = jnp.ones((4, 3), jnp.float32)
+    b = jnp.array([1.0, -2.0, 0.5])
+    y = boolean_dense(x, w, b)
+    np.testing.assert_allclose(np.asarray(y), 4.0 + np.asarray(b)[None, :].repeat(2, 0))
+
+
+# ---------------------------------------------------------------------------
+# Backward semantics: Eqs 5-8 (vote aggregation) for real upstream signal
+# ---------------------------------------------------------------------------
+def test_dense_backward_matches_eqs_5_8():
+    key = jax.random.PRNGKey(0)
+    B_, m, n = 5, 7, 3
+    x = random_boolean(key, (B_, m)).astype(jnp.float32)
+    w = random_boolean(jax.random.PRNGKey(1), (m, n)).astype(jnp.float32)
+    z = _rand(jax.random.PRNGKey(2), (B_, n))
+
+    y, pullback = jax.vjp(lambda x_, w_: boolean_dense(x_, w_, None,
+                                                       bwd_norm=False), x, w)
+    gx, gw = pullback(z)
+    # Eq 5/7: δLoss/δw_ij = Σ_k xnor(z_kj, x_ki) = Σ_k z_kj · x_ki
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(x.T @ z), rtol=1e-5)
+    # Eq 6/8: δLoss/δx_ki = Σ_j xnor(z_kj, w_ij)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(z @ w.T), rtol=1e-5)
+
+
+def test_dense_backward_norm_scale():
+    B_, m, n = 2, 8, 32
+    x = jnp.ones((B_, m), jnp.float32)
+    w = jnp.ones((m, n), jnp.float32)
+    z = jnp.ones((B_, n), jnp.float32)
+    _, pb = jax.vjp(lambda x_: boolean_dense(x_, w, None, bwd_norm=True), x)
+    gx, = pb(z)
+    np.testing.assert_allclose(np.asarray(gx), n * backward_scale(n),
+                               rtol=1e-5)
+
+
+def test_dense_sign_backward_is_boolean():
+    B_, m, n = 3, 6, 4
+    key = jax.random.PRNGKey(3)
+    x = _rand(key, (B_, m))
+    w = random_boolean(jax.random.PRNGKey(4), (m, n)).astype(jnp.float32)
+    z = _rand(jax.random.PRNGKey(5), (B_, n))
+    _, pb = jax.vjp(lambda x_: boolean_dense(x_, w, None, True, True), x)
+    gx, = pb(z)
+    assert set(np.unique(np.asarray(gx))) <= {-1.0, 1.0}
+
+
+# ---------------------------------------------------------------------------
+# Threshold activation (unique binary activation family) + tanh' backward
+# ---------------------------------------------------------------------------
+def test_activation_forward_threshold():
+    s = jnp.array([-2.0, -0.1, 0.0, 3.0])
+    y = boolean_activation(s, 0.0, 4)
+    assert np.array_equal(np.asarray(y), [-1, -1, 1, 1])
+    y2 = boolean_activation(s, 1.0, 4)
+    assert np.array_equal(np.asarray(y2), [-1, -1, -1, 1])
+
+
+def test_activation_backward_tanh_mask():
+    m = 16
+    s = jnp.array([0.0, 5.0, -50.0])
+    g = jnp.ones_like(s)
+    _, pb = jax.vjp(lambda s_: boolean_activation(s_, 0.0, m), s)
+    gs, = pb(g)
+    alpha = preactivation_alpha(m)
+    expected = 1.0 - np.tanh(alpha * np.asarray(s)) ** 2
+    np.testing.assert_allclose(np.asarray(gs), expected, rtol=1e-5)
+    # far-from-threshold weights receive (near-)zero signal — App C.1
+    assert float(gs[2]) < 1e-3
+
+
+def test_activation_threshold_grad():
+    s = jnp.array([0.5, -0.5])
+    tau = jnp.array(0.0)
+    g = jnp.ones_like(s)
+    _, pb = jax.vjp(lambda t: boolean_activation(s, t, 4), tau)
+    gt, = pb(g)
+    assert np.isfinite(float(gt))
+
+
+# ---------------------------------------------------------------------------
+# Inference path: int8 MXU semantics equal training semantics
+# ---------------------------------------------------------------------------
+@settings(max_examples=10)
+@given(st.integers(1, 40), st.integers(1, 24))
+def test_inference_int8_matches_float(m, n):
+    key = jax.random.PRNGKey(m + 7 * n)
+    x8 = random_boolean(key, (3, m))
+    w8 = random_boolean(jax.random.PRNGKey(9), (m, n))
+    y_int = boolean_dense_inference(x8, w8)
+    assert y_int.dtype == jnp.int32
+    y_f = boolean_dense(x8.astype(jnp.float32), w8.astype(jnp.float32), None)
+    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_f), atol=1e-4)
+
+
+def test_inference_mixed_type_real_activations():
+    # Def 3.5 mixed logic: xnor(w, x) = e(w)·x for real x.
+    x = jnp.array([[0.5, -1.5, 2.0]], jnp.float32)
+    w8 = jnp.array([[1], [-1], [1]], jnp.int8)
+    y = boolean_dense_inference(x, w8)
+    np.testing.assert_allclose(np.asarray(y), [[0.5 + 1.5 + 2.0]], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Boolean conv
+# ---------------------------------------------------------------------------
+def test_conv_counting_semantics():
+    key = jax.random.PRNGKey(0)
+    x = random_boolean(key, (2, 8, 8, 3)).astype(jnp.float32)
+    w = random_boolean(jax.random.PRNGKey(1), (3, 3, 3, 5)).astype(jnp.float32)
+    y = boolean_conv2d(x, w, 1, "SAME")
+    ref = jax.lax.conv_general_dilated(x, w, (1, 1), "SAME",
+                                       dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4)
+
+
+def test_conv_backward_shapes_and_finite():
+    key = jax.random.PRNGKey(0)
+    x = random_boolean(key, (2, 8, 8, 3)).astype(jnp.float32)
+    w = random_boolean(jax.random.PRNGKey(1), (3, 3, 3, 5)).astype(jnp.float32)
+
+    def loss(x_, w_):
+        return jnp.sum(boolean_conv2d(x_, w_, 2, "SAME") ** 2)
+
+    gx, gw = jax.grad(loss, (0, 1))(x, w)
+    assert gx.shape == x.shape and gw.shape == w.shape
+    assert np.isfinite(np.asarray(gx)).all() and np.isfinite(np.asarray(gw)).all()

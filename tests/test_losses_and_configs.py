@@ -1,0 +1,125 @@
+"""Loss equivalence, paper's-own configs, and full-config consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, PAPER_IDS, get_config, get_smoke
+from repro.models import lm_forward, lm_init, lm_loss
+
+
+def test_sharded_lse_loss_equals_log_softmax():
+    """The hand-rolled (shardable) logsumexp CE == jax.nn.log_softmax CE."""
+    cfg = get_smoke("qwen2.5-14b").scaled(dtype=jnp.float32)
+    params, _ = lm_init(jax.random.PRNGKey(0), cfg)
+    pf = jax.tree.map(
+        lambda p: p.astype(jnp.float32) if p.dtype == jnp.int8 else p, params)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                     cfg.vocab_size),
+    }
+    loss, parts = lm_loss(cfg, pf, batch)
+
+    logits, _ = lm_forward(cfg, pf, batch)
+    mask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None], -1)[..., 0]
+    np.testing.assert_allclose(float(parts["nll"]), float(nll.mean()),
+                               rtol=1e-5)
+
+
+def test_paper_own_configs_smoke():
+    """The paper's own models are first-class configs."""
+    import jax.numpy as jnp
+    cfg = get_smoke("bold-bert")
+    params, _ = lm_init(jax.random.PRNGKey(0), cfg)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                                     cfg.vocab_size),
+    }
+    pf = jax.tree.map(
+        lambda p: p.astype(jnp.bfloat16) if p.dtype == jnp.int8 else p,
+        params)
+    logits, _ = lm_forward(cfg, pf, batch)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    from repro.configs.bold_vgg_small import SMOKE as VGG
+    from repro.vision import vgg_apply, vgg_init
+    vp = vgg_init(jax.random.PRNGKey(0), VGG)
+    pf = jax.tree.map(
+        lambda p: p.astype(jnp.float32) if p.dtype == jnp.int8 else p, vp)
+    imgs = jax.random.normal(jax.random.PRNGKey(1),
+                             (2, VGG.input_hw, VGG.input_hw, 3))
+    out = vgg_apply(pf, VGG, imgs)
+    assert out.shape == (2, VGG.n_classes)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_configs_match_assignment(arch):
+    """The FULL configs carry the exact published fields (never allocated
+    on CPU — checked structurally)."""
+    cfg = get_config(arch)
+    expected = {
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+        "falcon-mamba-7b": (64, 4096, 1, 1, 0, 65024),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, f"{arch}: {got} != {expected}"
+    # family-specific invariants
+    if arch == "moonshot-v1-16b-a3b":
+        assert (cfg.n_experts, cfg.top_k) == (64, 6)
+    if arch == "arctic-480b":
+        assert (cfg.n_experts, cfg.top_k, cfg.moe_dense_residual) == \
+            (128, 2, True)
+    if arch == "jamba-1.5-large-398b":
+        assert (cfg.n_experts, cfg.top_k, cfg.group_size) == (16, 2, 8)
+        assert cfg.long_context
+    if arch == "falcon-mamba-7b":
+        assert cfg.ssm_state == 16 and cfg.d_inner == 8192
+        assert cfg.long_context
+    if arch == "gemma2-2b":
+        assert cfg.alt_local_global and cfg.sliding_window == 4096
+        assert cfg.attn_logit_softcap == 50.0
+
+
+def test_param_count_totals():
+    """Analytic param counts land near the published totals."""
+    from repro.launch.hlo_analysis import active_params, total_params
+    arctic = total_params(get_config("arctic-480b"))
+    assert 4.2e11 < arctic < 5.5e11, arctic       # "480b"
+    qwen110 = total_params(get_config("qwen1.5-110b"))
+    assert 0.9e11 < qwen110 < 1.35e11, qwen110    # "110b"
+    # NOTE: the assigned config says 48L (hf Moonlight-16B-A3B is 27L);
+    # following the assignment fields gives ~28B total — bound accordingly.
+    moonshot = total_params(get_config("moonshot-v1-16b-a3b"))
+    assert 2.0e10 < moonshot < 3.5e10, moonshot
+    moonshot_a = active_params(get_config("moonshot-v1-16b-a3b"))
+    assert 2e9 < moonshot_a < 5e9, moonshot_a     # "a3b"
+    jamba = total_params(get_config("jamba-1.5-large-398b"))
+    assert 3.8e11 < jamba < 4.2e11, jamba         # "398b" (we get 398.6B)
+    jamba_a = active_params(get_config("jamba-1.5-large-398b"))
+    assert 8.5e10 < jamba_a < 1.0e11, jamba_a     # "94b active" (94.1B)
+    falcon = total_params(get_config("falcon-mamba-7b"))
+    assert 5e9 < falcon < 9e9, falcon             # "7b"
+
+
+def test_smoke_configs_are_small():
+    for arch in ARCH_IDS:
+        cfg = get_smoke(arch)
+        assert cfg.d_model <= 128 and cfg.n_layers <= 8
+        assert cfg.vocab_size <= 512
