@@ -8,15 +8,16 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_kernels, roofline, table2_cifar_vgg,
-                            table3_superres, table5_imagenet_energy,
-                            table7_bert_glue)
+    from benchmarks import (bench_decode, bench_kernels, roofline,
+                            table2_cifar_vgg, table3_superres,
+                            table5_imagenet_energy, table7_bert_glue)
     modules = [
         ("table2", table2_cifar_vgg),
         ("table3", table3_superres),
         ("table5", table5_imagenet_energy),
         ("table7", table7_bert_glue),
         ("kernels", bench_kernels),
+        ("decode", bench_decode),
         ("roofline", roofline),
     ]
     print("name,us_per_call,derived")

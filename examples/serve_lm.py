@@ -14,6 +14,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=24)
     ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--packed", action="store_true",
+                    help="serve bit-packed weights through the XNOR GEMV "
+                         "kernel (32 Booleans per uint32 word)")
     args = ap.parse_args()
 
     import jax
@@ -28,12 +31,18 @@ def main():
     print(f"[serve] {cfg.name}: resident weights {nbytes/2**20:.1f} MiB "
           f"(Boolean leaves stored int8)")
 
-    engine = ServeEngine(cfg, params, max_len=args.prompt_len + args.gen)
+    engine = ServeEngine(cfg, params, max_len=args.prompt_len + args.gen,
+                         packed=args.packed)
+    if args.packed:
+        pbytes = sum(p.size * p.dtype.itemsize
+                     for p in jax.tree.leaves(engine.params))
+        print(f"[serve] packed serving: resident weights {pbytes/2**20:.1f} "
+              f"MiB (Boolean projections at 32 weights/word)")
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
-    # warmup (compile)
-    engine.generate(prompts, 2)
+    # warmup (compile): n_tokens is static in the fused fn — warm the real shape
+    engine.generate(prompts, args.gen)
     t0 = time.time()
     out = engine.generate(prompts, args.gen)
     dt = time.time() - t0

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Pre-merge gate: tier-1 suite + the decode-path parity tests, pinned to CPU.
+#
+#   ./scripts/check.sh
+#
+# Mirrors the ROADMAP tier-1 command; the explicit parity re-run makes the
+# scan-vs-eager token-identity contract the loudest failure if the decode
+# fast path regresses.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS=cpu
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 suite =="
+python -m pytest -x -q
+
+echo "== decode fast-path parity gate =="
+python -m pytest -q tests/test_serve_decode.py \
+    -k "matches_eager or packed_engine_matches"
+
+echo "check.sh: all green"

@@ -6,7 +6,8 @@ from .variation import (TRUE, FALSE, ZERO, BOOL_DTYPE, xnor, xor, neg,
                         booleanize, random_boolean, is_boolean)
 from .scaling import preactivation_alpha, backward_scale, backward_scale_conv
 from .activation import boolean_activation, boolean_activation_inference
-from .boolean_linear import boolean_dense, boolean_dense_inference
+from .boolean_linear import (boolean_dense, boolean_dense_inference,
+                             PackedBool, pack_boolean_weight)
 from .boolean_conv import boolean_conv2d
 from .optimizer import (Optimizer, BooleanOptState, AdamState, HybridState,
                         boolean_optimizer, adam, hybrid_optimizer,

@@ -90,13 +90,79 @@ def _bd_bwd(bwd_norm, sign_backward, reduce_bf16, res, z):
 boolean_dense.defvjp(_bd_fwd, _bd_bwd)
 
 
+@jax.tree_util.register_pytree_node_class
+class PackedBool:
+    """A Boolean ±1 weight stored bit-packed: 32 Booleans per uint32 word.
+
+    ``bits`` packs the *input* (contraction) dimension — shape
+    (..., ceil(k/32), n) for a logical (..., k, n) weight — so serving moves
+    32× fewer weight bytes than the int8 store (the paper's decode
+    data-movement claim). ``k`` is the true fan-in, kept as static aux data
+    so it survives jit/scan tracing and feeds the kernels' ``k_valid``.
+    """
+
+    def __init__(self, bits, k: int):
+        self.bits = bits
+        self.k = k
+
+    @property
+    def shape(self):  # logical (unpacked) shape, for fan-in/scale logic
+        return (*self.bits.shape[:-2], self.k, self.bits.shape[-1])
+
+    def tree_flatten(self):
+        return (self.bits,), self.k
+
+    @classmethod
+    def tree_unflatten(cls, k, children):
+        return cls(children[0], k)
+
+    def __repr__(self):
+        return f"PackedBool(bits={self.bits.shape}, k={self.k})"
+
+
+def pack_boolean_weight(w_int8: jax.Array) -> PackedBool:
+    """int8 ±1 (..., k, n) -> PackedBool with bits (..., ceil(k/32), n)."""
+    from repro.kernels import pack_bits
+
+    return PackedBool(pack_bits(w_int8, axis=-2), w_int8.shape[-2])
+
+
+# Above this many activation rows a packed contraction is compute-bound
+# (prefill), so it unpacks to a ±1 view and takes the MXU dot — the GEMV
+# kernel keeps its whole M block in VMEM and only makes sense for thin
+# decode batches.
+PACKED_GEMV_MAX_M = 256
+
+
 def boolean_dense_inference(x, w_int8, b=None, *, use_kernel: bool = False):
     """Serving-path Boolean dense on stored int8 ±1 weights.
 
     If ``x`` is int8 ±1 the contraction runs as int8×int8→int32 (the MXU
     path; on TPU this hits the 2× int8 throughput). Real ``x`` uses the
-    mixed-type rule xnor(w, x) = e(w)·x.
+    mixed-type rule xnor(w, x) = e(w)·x. A ``PackedBool`` weight routes
+    thin-M (decode) contractions through the packed-XNOR GEMV kernel (32×
+    fewer weight bytes — the decode fast path); wide-M (prefill) ones
+    unpack transiently and take the dense path, where the MXU wins.
     """
+    if isinstance(w_int8, PackedBool):
+        from repro.kernels import ops as kops
+        from repro.kernels import unpack_bits
+
+        lead = x.shape[:-1]
+        m = 1
+        for d in lead:
+            m *= d
+        if m > PACKED_GEMV_MAX_M:
+            wv = unpack_bits(w_int8.bits, w_int8.k, axis=-2).astype(x.dtype)
+            y = jnp.dot(x, wv,
+                        preferred_element_type=jnp.float32)
+        else:
+            y = kops.packed_xnor_gemv(x.reshape(-1, x.shape[-1]),
+                                      w_int8.bits, k_valid=w_int8.k)
+            y = y.reshape(*lead, y.shape[-1])
+        if b is not None:
+            y = y + b.astype(y.dtype)
+        return y
     if use_kernel and x.dtype == jnp.int8:
         from repro.kernels import ops as kops
 

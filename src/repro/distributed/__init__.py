@@ -1,1 +1,1 @@
-from .context import set_mesh, get_mesh
+from .context import set_mesh, get_mesh, shard_map

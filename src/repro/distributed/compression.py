@@ -35,9 +35,12 @@ def compress_votes(g, error, axes: Tuple[str, ...]):
     sign = jnp.where(corrected >= 0, 1, -1).astype(jnp.int8)
     # vote count across replicas (Boolean aggregation, Eq 7)
     votes = jax.lax.psum(sign.astype(jnp.int32), axes)
-    n = 1
-    for a in axes:
-        n *= jax.lax.axis_size(a)
+    if hasattr(jax.lax, "axis_size"):
+        n = 1
+        for a in axes:
+            n *= jax.lax.axis_size(a)
+    else:  # older jax: replica count via an all-reduce of ones
+        n = jax.lax.psum(1, axes)
     decoded = votes.astype(jnp.float32) / n
     scale = jnp.mean(jnp.abs(corrected))          # per-leaf magnitude
     decoded = decoded * scale
@@ -65,7 +68,8 @@ def ef_signsgd_compressed(inner: Optimizer, axes: Tuple[str, ...],
             if e is None:
                 return g, None
             spec = jax.sharding.PartitionSpec(*([None] * g.ndim))
-            dec, new_e = jax.shard_map(
+            from repro.distributed import shard_map
+            dec, new_e = shard_map(
                 lambda gg, ee: compress_votes(gg, ee, axes),
                 mesh=m, in_specs=(spec, spec), out_specs=(spec, spec),
                 check_vma=False)(g, e)

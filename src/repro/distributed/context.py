@@ -8,7 +8,22 @@ from __future__ import annotations
 
 from typing import Optional
 
+import jax
+
 _MESH = None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across jax versions: newer releases expose it at the
+    top level (with ``check_vma``); older ones only ship
+    ``jax.experimental.shard_map.shard_map`` (with ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
 
 
 def set_mesh(mesh) -> None:

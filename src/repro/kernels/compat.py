@@ -1,0 +1,11 @@
+"""Pallas API compatibility shims.
+
+``pltpu.CompilerParams`` was renamed from ``TPUCompilerParams`` across jax
+releases; resolve whichever this runtime ships so the kernels import on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

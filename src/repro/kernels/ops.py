@@ -29,6 +29,12 @@ def packed_xnor_matmul(x_packed, w_packed, *, k_valid, **kw):
     return _px.packed_xnor_matmul(x_packed, w_packed, k_valid=k_valid, **kw)
 
 
+def packed_xnor_gemv(x, w_packed, *, k_valid, **kw):
+    """Thin-M decode GEMV: real activations × bit-packed Boolean weights."""
+    kw.setdefault("interpret", INTERPRET)
+    return _px.packed_xnor_gemv(x, w_packed, k_valid=k_valid, **kw)
+
+
 def boolean_weight_bwd(x, z, d, *, alpha=0.0, **kw):
     kw.setdefault("interpret", INTERPRET)
     return _bb.boolean_weight_bwd(x, z, d, alpha=alpha, **kw)

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 # ---------------------------------------------------------------------------
 # Packing helpers (pure jnp; used by callers and the reference oracle).
@@ -71,6 +73,87 @@ def _xnor_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_kw: int, k_valid: int):
         o_ref[...] = (k_valid - 2 * acc_ref[...]).astype(o_ref.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Thin-M serving GEMV: real activations × bit-packed Boolean weights.
+#
+# Decode GEMMs have M = batch (a handful of rows) and real-valued (bf16)
+# activations, so the fully-Boolean popcount form above does not apply
+# directly. The mixed-type rule (paper Def 3.5: xnor(w, x) = e(w)·x for real
+# x) still lets the *weights* stay bit-packed: only uint32 words stream from
+# HBM (32× fewer weight bytes — the whole point on memory-bound decode) and
+# the ±1 view is reconstructed in VMEM right before the fp32 MAC.
+# ---------------------------------------------------------------------------
+def _xnor_gemv_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_kw: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)         # (M, bkw*32)
+    wbits = w_ref[...]                         # (bkw, bn) uint32
+    bkw, bn = wbits.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (wbits[:, None, :] >> shifts[None, :, None]) & jnp.uint32(1)
+    wpm = jnp.where(bits == 1, 1.0, -1.0).reshape(bkw * 32, bn)
+    acc_ref[...] += jnp.dot(x, wpm, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(1) == n_kw - 1)
+    def _done():
+        # x rows are zero-padded past k_valid, so garbage pad bits in the
+        # unpacked weight tile contribute exactly nothing.
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k_valid", "block_n", "block_kw", "interpret"),
+)
+def packed_xnor_gemv(x: jax.Array, w_packed: jax.Array, *,
+                     k_valid: int,
+                     block_n: int = 128, block_kw: int = 16,
+                     interpret: bool = True) -> jax.Array:
+    """y[i,j] = Σ_k x[i,k]·e(w[k,j]) with only the weights bit-packed.
+
+    Args:
+      x: (M, K) real (or ±1 int8) activations, M thin (decode batch).
+      w_packed: (Kw, N) uint32 — K packed along axis 0 (``pack_bits`` layout).
+      k_valid: the true contraction length K (= x.shape[1]).
+
+    Returns (M, N) float32 counting outputs (exact: ±1·x accumulated fp32).
+    """
+    M, K = x.shape
+    Kw, N = w_packed.shape
+    if K != k_valid or Kw * 32 < K:
+        raise ValueError(
+            f"packed gemv mismatch: x {x.shape}, w {w_packed.shape}, "
+            f"k_valid={k_valid}")
+
+    bkw = min(block_kw, Kw)
+    bn = min(block_n, N)
+    Kwp, Np = -(-Kw // bkw) * bkw, -(-N // bn) * bn
+    Mp = -(-M // 8) * 8                        # fp32 sublane tile
+    n_kw = Kwp // bkw
+    xp = jnp.pad(x.astype(jnp.float32), ((0, Mp - M), (0, Kwp * 32 - K)))
+    wp = jnp.pad(w_packed, ((0, Kwp - Kw), (0, Np - N)))
+
+    kernel = functools.partial(_xnor_gemv_kernel, n_kw=n_kw)
+    yp = pl.pallas_call(
+        kernel,
+        grid=(Np // bn, n_kw),
+        in_specs=[
+            pl.BlockSpec((Mp, bkw * 32), lambda j, k: (0, k)),
+            pl.BlockSpec((bkw, bn), lambda j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((Mp, bn), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((Mp, bn), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xp, wp)
+    return yp[:M, :N]
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("k_valid", "block_m", "block_n", "block_kw", "interpret"),
@@ -109,7 +192,7 @@ def packed_xnor_matmul(x_packed: jax.Array, w_packed: jax.Array, *,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.int32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -25,6 +25,13 @@ def packed_xnor_matmul_ref(x_pm1: jax.Array, w_pm1: jax.Array) -> jax.Array:
     return boolean_matmul_ref(x_pm1, w_pm1)
 
 
+def packed_xnor_gemv_ref(x: jax.Array, w_pm1: jax.Array) -> jax.Array:
+    """Oracle for the serving GEMV: real x against the UNPACKED ±1 weight
+    (the kernel must agree after pack_bits on the weight side only)."""
+    return jnp.dot(x.astype(jnp.float32), w_pm1.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
 def boolean_weight_bwd_ref(x: jax.Array, z: jax.Array, d: jax.Array, *,
                            alpha: float = 0.0) -> jax.Array:
     zf = z.astype(jnp.float32)

@@ -181,6 +181,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     # cost_analysis counts while-bodies once — recorded for the calibration
     # cross-check, NOT used for the roofline (see hlo_analysis.py).
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):   # older jax: one dict per device
+        cost = cost[0] if cost else {}
     rec["xla_cost_flops_loopbody_once"] = float(cost.get("flops", 0.0))
     rec["xla_cost_bytes_loopbody_once"] = float(cost.get("bytes accessed", 0.0))
 

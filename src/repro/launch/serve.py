@@ -18,6 +18,11 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--kv-quant", action="store_true",
                     help="int8 BOLD-quantized KV cache")
+    ap.add_argument("--packed", action="store_true",
+                    help="bit-packed XNOR weight serving (32 weights/word)")
+    ap.add_argument("--eager", action="store_true",
+                    help="seed per-token loop instead of the fused scan "
+                         "fast path (baseline/debug)")
     args = ap.parse_args()
 
     import jax
@@ -35,16 +40,21 @@ def main():
 
     key = jax.random.PRNGKey(0)
     params, _ = lm_init(key, cfg)
-    engine = ServeEngine(cfg, params, max_len=args.prompt_len + args.gen)
+    engine = ServeEngine(cfg, params, max_len=args.prompt_len + args.gen,
+                         packed=args.packed)
+    gen = engine.generate_eager if args.eager else engine.generate
 
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
+    gen(prompts, args.gen)      # warmup: compile the fused fast path
     t0 = time.time()
-    out = engine.generate(prompts, args.gen)
+    out = gen(prompts, args.gen)
     dt = time.time() - t0
     toks = args.batch * args.gen
-    print(f"[serve] generated {out.shape} in {dt:.2f}s "
+    mode = ("eager" if args.eager else "scan") + \
+        ("+packed" if args.packed else "")
+    print(f"[serve] {mode}: generated {out.shape} in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s batched)")
     print("[serve] sample:", out[0, :16].tolist())
 

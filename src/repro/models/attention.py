@@ -45,9 +45,19 @@ def _qkv(cfg: ModelConfig, p, x, positions, axis_size: int = 16):
     hd = cfg.head_dim_
     hp = cfg.heads_padded(axis_size)
     kvp = cfg.kv_heads_padded(axis_size)
-    q = proj_apply(cfg, p["wq"], x).reshape(B, S, hp, hd)
-    k = proj_apply(cfg, p["wk"], x).reshape(B, S, kvp, hd)
-    v = proj_apply(cfg, p["wv"], x).reshape(B, S, kvp, hd)
+    if "wqkv" in p:
+        # Packed serving layout (pack_weights): q/k/v fused into a single
+        # GEMV so the decode token makes ONE pass over the activations and
+        # one packed weight stream instead of three.
+        qkv = proj_apply(cfg, p["wqkv"], x)
+        q, k, v = jnp.split(qkv, [hp * hd, (hp + kvp) * hd], axis=-1)
+        q = q.reshape(B, S, hp, hd)
+        k = k.reshape(B, S, kvp, hd)
+        v = v.reshape(B, S, kvp, hd)
+    else:
+        q = proj_apply(cfg, p["wq"], x).reshape(B, S, hp, hd)
+        k = proj_apply(cfg, p["wk"], x).reshape(B, S, kvp, hd)
+        v = proj_apply(cfg, p["wv"], x).reshape(B, S, kvp, hd)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
     return q, k, v
@@ -161,7 +171,12 @@ def attention_apply(cfg: ModelConfig, p, x, positions, *,
 # ---------------------------------------------------------------------------
 # KV cache + decode
 # ---------------------------------------------------------------------------
-KV_QUANT_SCALE = 32.0   # int8 cache: counts are ~unit-variance post-scaling
+# int8 cache step. Post-norm k/v measure σ≈2, |max|≈6 on the smoke models
+# (the 1/√fan_in-scaled counts roughly double through rmsnorm's 1+scale),
+# so 1/16 granularity covers ±7.94 without the ±4 clipping a unit-variance
+# assumption (scale 32) suffered — clipping, not step size, dominated the
+# decode logit error.
+KV_QUANT_SCALE = 16.0
 
 
 def _kv_quant(x):
@@ -196,6 +211,21 @@ def attention_cache_init(cfg: ModelConfig, batch: int, max_len: int,
     return ({"k": jnp.zeros(shape, dtype),
              "v": jnp.zeros(shape, dtype)},
             {"k": spec, "v": spec})
+
+
+def cache_write(full, new):
+    """Write ``new`` (a prompt prefix along the seq axis, or a full-state
+    leaf) into the preallocated cache leaf ``full`` — quantizing when the
+    cache is int8 (kv_cache_quant). Replaces the grown-per-prompt caches:
+    buffers are allocated at max_len once and only ever updated in place.
+    Prefill-only: writes start at position 0 (decode writes at ``pos`` via
+    ``attention_decode`` directly)."""
+    if full.dtype == jnp.int8 and new.dtype != jnp.int8:
+        new = _kv_quant(new)
+    new = new.astype(full.dtype)
+    if full.shape == new.shape:
+        return new
+    return jax.lax.dynamic_update_slice(full, new, (0,) * full.ndim)
 
 
 def _flash_decode_local(cfg: ModelConfig, q, k_cache, v_cache, pos,
@@ -332,7 +362,9 @@ def _decode_shardmap(cfg: ModelConfig, qg, k_new, v_new, k_cache, v_cache,
 
     rep = P(b_ax, None, None, None)
     cache_spec = P(b_ax, seq_axes, None, None)
-    return jax.shard_map(
+    from repro.distributed import shard_map
+
+    return shard_map(
         local_fn, mesh=mesh,
         in_specs=(rep, P(b_ax, None, None), P(b_ax, None, None),
                   cache_spec, cache_spec),

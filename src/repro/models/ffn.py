@@ -36,8 +36,14 @@ def ffn_init(key, cfg: ModelConfig, d_ff: int = 0):
 
 
 def ffn_apply(cfg: ModelConfig, p, x):
-    g = proj_apply(cfg, p["wg"], x)     # scaled counts, Var≈1
-    u = proj_apply(cfg, p["wu"], x)
+    if "wgu" in p:
+        # Packed serving layout (pack_weights): gate+up fused into one GEMV —
+        # a decode token streams the packed weight words once, not twice.
+        gu = proj_apply(cfg, p["wgu"], x)
+        g, u = jnp.split(gu, 2, axis=-1)
+    else:
+        g = proj_apply(cfg, p["wg"], x)  # scaled counts, Var≈1
+        u = proj_apply(cfg, p["wu"], x)
     if cfg.boolean and cfg.act_boolean:
         # s is pre-normalized to unit variance by proj_apply, so the tanh'
         # window parameter is alpha = pi/(2*sqrt(3)) — fan_in=1 (App C.3).

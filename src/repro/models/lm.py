@@ -278,7 +278,11 @@ def lm_decode_step(cfg: ModelConfig, params, cache, tokens):
 
 
 # ---------------------------------------------------------------------------
-# Prefill: forward over the full prompt, emitting the populated cache.
+# Prefill: forward over the full prompt, writing the prompt's KV/SSM state
+# into a cache PREALLOCATED at max_len (lax.dynamic_update_slice at offset 0)
+# — no prompt-length-sized caches ever exist, so decode never re-materializes
+# or pads them and the whole (prefill + decode scan) jit can alias a donated
+# cache buffer end to end.
 # ---------------------------------------------------------------------------
 def _apply_block_prefill(cfg: ModelConfig, bp, role, x, positions):
     h = rmsnorm_apply(bp["norm1"], x)
@@ -315,25 +319,42 @@ def _apply_block_prefill(cfg: ModelConfig, bp, role, x, positions):
     return x, new_c
 
 
-def lm_prefill(cfg: ModelConfig, params, batch):
-    """Prefill over (B,S) inputs -> (last-position logits, populated cache)."""
+def lm_prefill(cfg: ModelConfig, params, batch, cache=None,
+               max_len: Optional[int] = None):
+    """Prefill over (B,S) inputs -> (last-position logits, populated cache).
+
+    ``cache`` is a preallocated ``cache_init`` tree (sized max_len) that the
+    prompt state is written into; pass one to reuse/donate buffers across
+    requests. When omitted, one is allocated at ``max_len`` (default S).
+    """
     h = _inputs_to_h(cfg, params, batch)
     B, S = h.shape[0], h.shape[1]
+    if cache is None:
+        cache, _ = cache_init(cfg, B, max_len or S)
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     roles = block_roles(cfg)
 
-    def body(x, gparams):
-        new_gcache = {}
+    def body(carry, gparams):
+        x, blocks, g = carry
+        gcache = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, g, 0, keepdims=False),
+            blocks)
         for i, role in enumerate(roles):
             x, c = _apply_block_prefill(cfg, gparams[f"b{i}"], role, x,
                                         positions)
-            new_gcache[f"b{i}"] = c
-        return x, new_gcache
+            gcache[f"b{i}"] = jax.tree.map(A.cache_write, gcache[f"b{i}"], c)
+        blocks = jax.tree.map(
+            lambda full, nc: jax.lax.dynamic_update_index_in_dim(
+                full, nc.astype(full.dtype), g, 0),
+            blocks, gcache)
+        return (x, blocks, g + 1), None
 
     if cfg.remat:
         body = jax.checkpoint(body, prevent_cse=False)
-    h, blocks_cache = jax.lax.scan(body, h, params["blocks"])
+    (h, new_blocks, _), _ = jax.lax.scan(
+        body, (h, cache["blocks"], jnp.zeros((), jnp.int32)),
+        params["blocks"])
     h = rmsnorm_apply(params["final_norm"], h)
     logits = head_apply(cfg, params["head"], h[:, -1:])
-    return logits, {"blocks": blocks_cache,
+    return logits, {"blocks": new_blocks,
                     "pos": jnp.asarray(S, jnp.int32)}

@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import (boolean_activation, boolean_dense, random_boolean)
+from repro.core import (PackedBool, boolean_activation, boolean_dense,
+                        boolean_dense_inference, random_boolean)
 
 MODEL_AXIS = "model"
 # FSDP: the non-TP dimension of every large weight shards over "data" —
@@ -220,6 +221,16 @@ def proj_apply(cfg: ModelConfig, p, x, *, scale: Optional[float] = None):
     normalizer (App C.3 — one scalar per tensor, no FP latents)."""
     w = p["w"]
     b = p.get("b")
+    if isinstance(w, PackedBool):
+        # Serving fast path: bit-packed weight words stream from HBM and the
+        # GEMV kernel reconstructs the ±1 view in VMEM (no int8 copy
+        # resident). fp32 counting output, then the same 1/√fan_in scale.
+        y = boolean_dense_inference(x, w).astype(x.dtype)
+        s = (1.0 / math.sqrt(w.k)) if scale is None else scale
+        y = y * jnp.asarray(s, y.dtype)
+        if b is not None:
+            y = y + b.astype(y.dtype)
+        return y
     if w.dtype == jnp.int8:
         # bf16 ±1 view is produced by train_step; if we are called with the
         # raw int8 leaf (eval/serve), view it here.

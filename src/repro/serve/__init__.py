@@ -1,1 +1,1 @@
-from .engine import ServeEngine
+from .engine import ServeEngine, pack_weights

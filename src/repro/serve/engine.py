@@ -1,8 +1,27 @@
-"""Batched serving engine: prefill once, decode greedily with a KV/SSM cache.
+"""Batched serving engine: one fused jitted fast path per request shape.
 
-Serving runs directly on the stored int8 Boolean weights (per-layer
-transient ±1 views; no FP weight copy is ever resident) — the B⊕LD
-inference story. Optional int8-quantized KV cache (cfg.kv_cache_quant).
+The decode hot path is a single compiled computation — prefill, a
+``jax.lax.scan`` over decode steps, and sampling all live inside one
+``generate_fn`` — instead of the seed's per-token Python loop (one dispatch
+per token). The KV/SSM cache is preallocated at ``max_len`` by
+``cache_init``, written in place with ``lax.dynamic_update_slice``, and
+DONATED into every call: XLA aliases the multi-MiB cache buffers across
+requests rather than re-materializing them per token.
+
+Weight serving modes:
+  * default — stored int8 Boolean weights, per-layer transient ±1 views
+    (no FP weight copy is ever resident);
+  * ``packed=True`` — every Boolean projection is bit-packed once at engine
+    init (32 weights per uint32 word) and decode contractions stream the
+    packed words through the thin-M packed-XNOR GEMV kernel: ~32× fewer
+    resident weight bytes and per-token HBM weight traffic, which is the
+    B⊕LD dataflow win on memory-bound decode (q/k/v and gate/up are also
+    fused into single GEMVs). MoE expert tensors stay int8 (they are routed
+    einsums, not proj leaves).
+
+Optional int8-quantized KV cache (cfg.kv_cache_quant) now quantizes at both
+prefill and decode writes. ``generate_eager`` keeps the seed per-token loop
+as the parity oracle and the benchmark baseline.
 """
 from __future__ import annotations
 
@@ -11,57 +30,181 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import pack_boolean_weight
 from repro.models import ModelConfig, cache_init, lm_decode_step, lm_prefill
 
 
+def _fusable(*projs) -> bool:
+    """Boolean bias-free proj dicts over the same input dim can fuse."""
+    return all(isinstance(p, dict) and "b" not in p
+               and isinstance(p.get("w"), jax.Array)
+               and p["w"].dtype == jnp.int8
+               and p["w"].shape[:-1] == projs[0]["w"].shape[:-1]
+               for p in projs)
+
+
+def pack_weights(params):
+    """Bit-pack every Boolean int8 projection leaf for serving.
+
+    q/k/v (and FFN gate/up) projections sharing an input dim fuse into one
+    packed leaf (``wqkv`` / ``wgu``) so a decode token makes one pass per
+    block over activations and packed weight words. Everything FP (embed,
+    head, norms, router, biases) and MoE expert tensors pass through
+    untouched.
+    """
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        node = dict(node)
+        if {"wq", "wk", "wv"} <= node.keys() \
+                and _fusable(node["wq"], node["wk"], node["wv"]):
+            w = jnp.concatenate([node.pop("wq")["w"], node.pop("wk")["w"],
+                                 node.pop("wv")["w"]], axis=-1)
+            node["wqkv"] = {"w": pack_boolean_weight(w)}
+        if {"wg", "wu"} <= node.keys() \
+                and _fusable(node["wg"], node["wu"]):
+            w = jnp.concatenate([node.pop("wg")["w"], node.pop("wu")["w"]],
+                                axis=-1)
+            node["wgu"] = {"w": pack_boolean_weight(w)}
+        out = {}
+        for k, v in node.items():
+            if k == "w" and isinstance(v, jax.Array) \
+                    and v.dtype == jnp.int8 and v.ndim >= 2:
+                out[k] = pack_boolean_weight(v)
+            else:
+                out[k] = walk(v)
+        return out
+
+    return walk(params)
+
+
+def _sample(cfg: ModelConfig, logits, temperature, key, i):
+    """Greedy iff ``key`` is None (or a concrete non-positive temperature).
+    ``temperature`` may be a traced scalar — the sampled/greedy split is
+    made on ``key`` so a traced value never hits a Python comparison."""
+    logits = logits[..., :cfg.vocab_size]
+    if key is None or (isinstance(temperature, (int, float))
+                       and temperature <= 0.0):
+        return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    k = jax.random.fold_in(key, i)
+    t = jnp.maximum(jnp.asarray(temperature, jnp.float32), 1e-6)
+    return jax.random.categorical(
+        k, logits / t, axis=-1)[:, None].astype(jnp.int32)
+
+
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, max_len: int):
+    # Compiled generate fns are shape-specialized; bound the cache so novel
+    # (S, n_tokens) traffic can't grow host/device memory forever. (Bucketing
+    # request shapes to amortize compiles is a ROADMAP follow-up.)
+    MAX_COMPILED_FNS = 64
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int,
+                 packed: bool = False):
         self.cfg = cfg
-        self.params = params
         self.max_len = max_len
-        self._prefill = jax.jit(lambda p, b: lm_prefill(cfg, p, b))
+        self.packed = packed
+        if packed:
+            from repro.core import PackedBool
+
+            self.params = pack_weights(params)
+            n_packed = sum(isinstance(l, PackedBool) for l in jax.tree.leaves(
+                self.params, is_leaf=lambda x: isinstance(x, PackedBool)))
+            if n_packed == 0:
+                raise ValueError(
+                    "packed=True but no Boolean int8 projection leaves were "
+                    "found to pack (FP baseline model?) — packed serving "
+                    "would silently serve full-precision weights")
+        else:
+            self.params = params
+        self._caches = {}   # batch -> preallocated cache, donated per call
+        self._fns = {}      # (B, S, n_tokens, sampled) -> jitted generate fn
+        # (temperature is a TRACED argument, deliberately not a compile key)
+        self._prefill = jax.jit(
+            lambda p, b, c: lm_prefill(cfg, p, b, cache=c))
         self._decode = jax.jit(lambda p, c, t: lm_decode_step(cfg, p, c, t))
 
-    def _grow_cache(self, cache, prompt_len: int, batch: int):
-        """Prefill emits caches sized to the prompt; extend to max_len."""
-        target = self.max_len
+    # -- shared plumbing ----------------------------------------------------
+    def _inputs(self, params, prompts):
+        if self.cfg.frontend == "embeddings":
+            table = params["embed"]["table"]
+            emb = jnp.take(table, prompts, axis=0).astype(self.cfg.dtype)
+            return {"embeddings": emb}
+        return {"tokens": prompts}
 
-        def grow(leaf):
-            if leaf.ndim == 5 and leaf.shape[2] == prompt_len:
-                pad = [(0, 0)] * 5
-                pad[2] = (0, target - prompt_len)
-                return jnp.pad(leaf, pad)
-            return leaf
+    # -- fused fast path ----------------------------------------------------
+    def _build_fn(self, n_tokens: int, sampled: bool):
+        """Only the greedy-vs-sampled branch is static; the temperature
+        itself rides in as a traced scalar so per-request temperatures
+        never retrace the fused graph."""
+        cfg = self.cfg
 
-        return {"blocks": jax.tree.map(grow, cache["blocks"]),
-                "pos": cache["pos"]}
+        def gen(params, cache, prompts, key, temperature):
+            k = key if sampled else None
+            t = temperature if sampled else 0.0
+            logits, cache = lm_prefill(cfg, params,
+                                       self._inputs(params, prompts),
+                                       cache=cache)
+            tok = _sample(cfg, logits[:, -1], t, k, 0)
+
+            def step(carry, i):
+                tok, cache = carry
+                logits, cache = lm_decode_step(cfg, params, cache, tok)
+                nxt = _sample(cfg, logits[:, -1], t, k, i + 1)
+                return (nxt, cache), tok[:, 0]
+
+            (_, cache), toks = jax.lax.scan(
+                step, (tok, cache), jnp.arange(n_tokens))
+            return toks.T, cache
+
+        return jax.jit(gen, donate_argnums=(1,))
 
     def generate(self, prompts: jax.Array, n_tokens: int,
                  temperature: float = 0.0,
                  key: Optional[jax.Array] = None) -> jax.Array:
-        """prompts: (B, S) int32 -> (B, n_tokens) int32 (greedy/temperature)."""
+        """prompts: (B, S) int32 -> (B, n_tokens) int32 (greedy/temperature).
+
+        One jitted call: prefill + n_tokens-step decode scan + sampling,
+        with the preallocated cache donated in and returned for the next
+        request of the same batch size.
+        """
         B, S = prompts.shape
         assert S + n_tokens <= self.max_len
-        if self.cfg.frontend == "embeddings":
-            table = self.params["embed"]["table"]
-            emb = jnp.take(table, prompts, axis=0).astype(self.cfg.dtype)
-            logits, cache = self._prefill(self.params, {"embeddings": emb})
-        else:
-            logits, cache = self._prefill(self.params, {"tokens": prompts})
-        cache = self._grow_cache(cache, S, B)
+        sampled = temperature > 0.0 and key is not None
+        fkey = (B, S, n_tokens, sampled)
+        if fkey not in self._fns:
+            if len(self._fns) >= self.MAX_COMPILED_FNS:   # FIFO eviction
+                self._fns.pop(next(iter(self._fns)))
+            self._fns[fkey] = self._build_fn(n_tokens, sampled)
+        k = key if key is not None else jax.random.PRNGKey(0)
+        # Pop before the call: donation invalidates the buffers even when the
+        # dispatch later fails, so a kept reference would poison every future
+        # request of this batch size. On failure the pool entry is simply
+        # gone and the next call allocates fresh.
+        cache = self._caches.pop(B, None)
+        if cache is None:
+            cache = cache_init(self.cfg, B, self.max_len)[0]
+        toks, cache = self._fns[fkey](self.params, cache, prompts, k,
+                                      jnp.asarray(temperature, jnp.float32))
+        self._caches[B] = cache
+        return toks
 
+    # -- seed per-token loop: parity oracle / benchmark baseline ------------
+    def generate_eager(self, prompts: jax.Array, n_tokens: int,
+                       temperature: float = 0.0,
+                       key: Optional[jax.Array] = None) -> jax.Array:
+        """The seed decode path: one jitted dispatch per token. Kept only to
+        prove the fused scan path is token-identical (tests) and to anchor
+        the tokens/sec trajectory (benchmarks)."""
+        B, S = prompts.shape
+        assert S + n_tokens <= self.max_len
+        cache, _ = cache_init(self.cfg, B, self.max_len)
+        logits, cache = self._prefill(self.params,
+                                      self._inputs(self.params, prompts),
+                                      cache)
         out = []
-        tok = self._sample(logits[:, -1], temperature, key, 0)
+        tok = _sample(self.cfg, logits[:, -1], temperature, key, 0)
         for i in range(n_tokens):
             out.append(tok)
             logits, cache = self._decode(self.params, cache, tok)
-            tok = self._sample(logits[:, -1], temperature, key, i + 1)
+            tok = _sample(self.cfg, logits[:, -1], temperature, key, i + 1)
         return jnp.concatenate(out, axis=1)
-
-    def _sample(self, logits, temperature, key, i):
-        logits = logits[..., :self.cfg.vocab_size]
-        if temperature <= 0.0 or key is None:
-            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        k = jax.random.fold_in(key, i)
-        return jax.random.categorical(
-            k, logits / temperature, axis=-1)[:, None].astype(jnp.int32)

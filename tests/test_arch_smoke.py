@@ -115,17 +115,10 @@ def test_prefill_matches_decode(arch, rng):
     if cfg.frontend == "embeddings":
         pytest.skip("prefill/decode equivalence is token-input only")
 
-    _, cache = jax.jit(lambda p, b: lm_prefill(cfg, p, b))(
+    # prefill writes straight into a cache preallocated at S+1 — decode's
+    # slot exists up front, no post-hoc growing.
+    _, cache = jax.jit(lambda p, b: lm_prefill(cfg, p, b, max_len=S + 1))(
         pf, {"tokens": toks[:, :S]})
-    # extend kv caches to S+1 so decode has a slot
-    def grow(leaf):
-        if leaf.ndim == 5 and leaf.shape[2] == S:   # (G,B,S,kv,hd)
-            pad = [(0, 0)] * 5
-            pad[2] = (0, 1)
-            return jnp.pad(leaf, pad)
-        return leaf
-    cache = {"blocks": jax.tree.map(grow, cache["blocks"]),
-             "pos": cache["pos"]}
     dec_logits, _ = jax.jit(lambda p, c, t: lm_decode_step(cfg, p, c, t))(
         pf, cache, toks[:, S:S + 1])
 

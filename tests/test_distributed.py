@@ -139,7 +139,8 @@ def test_ef_signsgd_compression_roundtrip():
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
         e = jnp.zeros((8, 64), jnp.bfloat16)
 
-        dec, new_e = jax.jit(jax.shard_map(
+        from repro.distributed import shard_map
+        dec, new_e = jax.jit(shard_map(
             lambda gg, ee: compress_votes(gg, ee, ("data",)),
             mesh=mesh, in_specs=(P("data"), P("data")),
             out_specs=(P(None), P("data")), check_vma=False))(g, e)
