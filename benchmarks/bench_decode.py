@@ -9,16 +9,33 @@ Three engines on the same weights at several (batch, prompt, gen) points:
              regressions; the 32× weight-byte reduction is what wins on
              real memory-bound TPU decode).
 
+A fourth engine path, ``batch``, pushes a mixed-length request pool through
+``generate_batch`` (continuous batching over paged caches) and reports
+aggregate tokens/sec against running the same requests sequentially. On
+this CPU container the paged path's per-step block-table gathers and
+per-segment dispatches price it BELOW the fully-fused sequential scans —
+the row tracks regressions in that overhead; the batching win (shared
+weight streams, no head-of-batch stragglers, admission under load) is a
+device-memory-bandwidth property, not a CPU wall-clock one.
+
 Emits ``name,us_per_call,derived`` rows like every other bench module, with
 tokens/sec and the scan-vs-eager speedup in the derived column so
 BENCH_*.json tracks a serving-throughput trajectory.
+
+``REPRO_BENCH_SMOKE=1`` (the CI job) shrinks every point to a tiny config
+and turns the scan-vs-eager ratio into a hard gate: the fused path must
+beat the per-token loop by ``SMOKE_GATE``× or the process exits nonzero —
+the decode-fast-path contract is enforced on every push, not just locally.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+SMOKE_GATE = 1.5    # conservative vs the ~5-10x seen locally: CI is noisy
 
 POINTS = [  # (batch, prompt_len, gen); the b=1 long-gen point is the
     (1, 16, 128),   # headline: per-token dispatch overhead fully exposed
@@ -26,6 +43,14 @@ POINTS = [  # (batch, prompt_len, gen); the b=1 long-gen point is the
     (8, 32, 32),
 ]
 PACKED_POINTS = [(1, 16, 32)]   # interpret-mode Pallas: keep it affordable
+# continuous batching: request pool (prompt_len, gen) pairs + lane count
+BATCH_POOL = [(16, 24), (32, 16), (8, 32), (24, 24), (12, 16), (28, 8)]
+BATCH_LANES = 4
+if SMOKE:
+    POINTS = [(1, 8, 32)]
+    PACKED_POINTS = [(1, 8, 8)]
+    BATCH_POOL = [(8, 8), (12, 6), (6, 10), (10, 8)]
+    BATCH_LANES = 2
 
 
 def _bench(fn, *args, reps: int = 3) -> float:
@@ -53,10 +78,12 @@ def run():
     params, _ = lm_init(jax.random.PRNGKey(0), cfg)
     rows = []
 
-    max_len = max(p + g for _, p, g in POINTS)
+    max_len = max(max(p + g for _, p, g in POINTS),
+                  max(p + g for p, g in BATCH_POOL))
     engine = ServeEngine(cfg, params, max_len=max_len)
     packed_engine = ServeEngine(cfg, params, max_len=max_len, packed=True)
 
+    speedups = []
     for B, P, G in POINTS:
         prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
                                      cfg.vocab_size)
@@ -64,6 +91,7 @@ def run():
         us_scan = _bench(engine.generate, prompts, G, reps=5)
         tps_eager = B * G / (us_eager / 1e6)
         tps_scan = B * G / (us_scan / 1e6)
+        speedups.append(us_eager / us_scan)
         rows.append((f"decode/eager_b{B}_p{P}_g{G}", f"{us_eager:.0f}",
                      f"{tps_eager:.1f}tok_s"))
         rows.append((f"decode/scan_b{B}_p{P}_g{G}", f"{us_scan:.0f}",
@@ -76,9 +104,48 @@ def run():
         tps = B * G / (us_packed / 1e6)
         rows.append((f"decode/scan_packed_b{B}_p{P}_g{G}", f"{us_packed:.0f}",
                      f"{tps:.1f}tok_s_interpret_mode"))
+
+    # continuous batching: mixed-length pool through the lane scheduler vs
+    # the same requests served back to back
+    import numpy as np
+    pool_prompts = [
+        np.asarray(jax.random.randint(jax.random.PRNGKey(10 + i), (P,), 0,
+                                      cfg.vocab_size), np.int32)
+        for i, (P, _) in enumerate(BATCH_POOL)]
+    pool_gens = [g for _, g in BATCH_POOL]
+    total = sum(pool_gens)
+
+    def serve_pool():
+        # segment=4: admit/finish every 4 steps — amortizes the host round
+        # trip per scheduling decision at ≤3 wasted lane-steps per finish
+        return engine.generate_batch(pool_prompts, pool_gens,
+                                     lanes=BATCH_LANES, page_size=8,
+                                     segment=4)[-1]
+
+    def serve_sequential():
+        out = None
+        for p, g in zip(pool_prompts, pool_gens):
+            out = engine.generate(jnp.asarray(p[None]), g)
+        return out
+
+    us_seq = _bench(serve_sequential, reps=2)
+    us_pool = _bench(serve_pool, reps=2)
+    rows.append((f"decode/sequential_pool{len(BATCH_POOL)}", f"{us_seq:.0f}",
+                 f"{total/(us_seq/1e6):.1f}tok_s"))
+    rows.append((f"decode/continuous_pool{len(BATCH_POOL)}_l{BATCH_LANES}",
+                 f"{us_pool:.0f}",
+                 f"{total/(us_pool/1e6):.1f}tok_s_vs_seq="
+                 f"{us_seq/us_pool:.2f}x"))
+
+    if SMOKE and max(speedups) < SMOKE_GATE:
+        raise SystemExit(
+            f"decode throughput gate FAILED: fused scan best speedup "
+            f"{max(speedups):.2f}x < {SMOKE_GATE}x over the eager loop")
     return rows
 
 
 if __name__ == "__main__":
     for r in run():
         print(",".join(str(x) for x in r))
+    if SMOKE:
+        print("decode/smoke_gate,0,passed")

@@ -1,5 +1,7 @@
 """Serve a B⊕LD LM with batched requests: prefill + greedy decode on int8
-Boolean weights (optionally with the int8-quantized KV cache).
+Boolean weights (optionally with the int8-quantized KV cache), then a
+continuous-batching pass — mixed-length requests flowing through the paged
+cache pool and lane scheduler, token-identical to serving them one by one.
 
     PYTHONPATH=src python examples/serve_lm.py --batch 4 --gen 24
 """
@@ -54,6 +56,29 @@ def main():
     out2 = engine.generate(prompts, args.gen)
     assert (out == out2).all()
     print("[serve] determinism check passed")
+
+    # -- continuous batching: a mixed-length request pool shares one paged
+    # cache pool; more requests than lanes, so the scheduler admits/finishes
+    # as lanes free up. Greedy outputs are token-identical to serving each
+    # request alone through `generate`.
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    pool_prompts = [rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+                    for L in (args.prompt_len, args.prompt_len // 2,
+                              args.prompt_len // 4 + 1, args.prompt_len - 1,
+                              args.prompt_len // 2 + 3)]
+    pool_gens = [args.gen, args.gen // 2, args.gen, args.gen // 2, args.gen]
+    t0 = time.time()
+    outs = engine.generate_batch(pool_prompts, pool_gens, lanes=3,
+                                 page_size=8, segment=2)
+    dt = time.time() - t0
+    print(f"[serve] continuous batching: {len(pool_prompts)} mixed-length "
+          f"requests over 3 lanes in {dt:.1f}s "
+          f"({sum(pool_gens)/dt:.1f} tok/s aggregate)")
+    ref = engine.generate(jnp.asarray(pool_prompts[1][None]), pool_gens[1])
+    assert (np.asarray(outs[1]) == np.asarray(ref[0])).all()
+    print("[serve] continuous-batching parity check passed")
 
 
 if __name__ == "__main__":

@@ -19,4 +19,7 @@ echo "== decode fast-path parity gate =="
 python -m pytest -q tests/test_serve_decode.py \
     -k "matches_eager or packed_engine_matches"
 
+echo "== continuous-batching parity gate =="
+python -m pytest -q tests/test_serve_batch.py -k "matches_sequential"
+
 echo "check.sh: all green"

@@ -82,6 +82,9 @@ def analytic_cell_cost(cfg, shape, mesh, microbatches: int = 1) -> Dict:
                 a_f = 2.0 * B * ctx * hp * hd * 2.0
                 act_bytes += B * ctx * kvp * hd * 2 * (
                     1 if cfg.kv_cache_quant else 2)   # cache re-read
+                if cfg.kv_cache_quant:
+                    # per-(token,head) fp32 dequant scales ride with the rows
+                    act_bytes += B * ctx * kvp * 2 * 4
             else:
                 # chunked flash computes every (qc,kc) pair then masks:
                 # full S² (2x causal waste); window layers overscan to the

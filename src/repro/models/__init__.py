@@ -1,3 +1,3 @@
 from .modules import ModelConfig, unzip, batch_spec, constrain, MODEL_AXIS
 from .lm import (block_roles, lm_init, lm_forward, lm_loss, lm_decode_step,
-                 lm_prefill, cache_init)
+                 lm_decode_step_paged, lm_prefill, cache_init)

@@ -171,23 +171,36 @@ def attention_apply(cfg: ModelConfig, p, x, positions, *,
 # ---------------------------------------------------------------------------
 # KV cache + decode
 # ---------------------------------------------------------------------------
-# int8 cache step. Post-norm k/v measure σ≈2, |max|≈6 on the smoke models
-# (the 1/√fan_in-scaled counts roughly double through rmsnorm's 1+scale),
-# so 1/16 granularity covers ±7.94 without the ±4 clipping a unit-variance
-# assumption (scale 32) suffered — clipping, not step size, dominated the
-# decode logit error.
-KV_QUANT_SCALE = 16.0
+# int8 cache rows carry a PER-(token, head) fp32 scale computed at write
+# time: scale = max|row| / 127, stored alongside the k/v blocks. A fixed
+# global step (the old KV_QUANT_SCALE=16) either clips outlier rows or
+# wastes step granularity on quiet ones — with per-row scales every row
+# spans its own full int8 range and clipping disappears by construction.
+def kv_quant(x):
+    """x: (..., hd) -> (int8 rows, fp32 per-row scale (...,))."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-6) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
 
 
-def _kv_quant(x):
-    return jnp.clip(jnp.round(x.astype(jnp.float32) * KV_QUANT_SCALE),
-                    -127, 127).astype(jnp.int8)
-
-
-def _kv_dequant(x):
+def kv_dequant(x, scale=None):
     if x.dtype == jnp.int8:
-        return x.astype(jnp.float32) * (1.0 / KV_QUANT_SCALE)
+        return x.astype(jnp.float32) * scale[..., None]
     return x.astype(jnp.float32)
+
+
+def kv_cache_entry(cfg: ModelConfig, k, v):
+    """The prefill write payload for one attention block: quantized rows +
+    their scales when cfg.kv_cache_quant, plain cfg.dtype rows otherwise.
+    Structure matches ``attention_cache_init`` so prefill can tree-map
+    ``cache_write`` over (cache, entry)."""
+    if cfg.kv_cache_quant:
+        kq, ks = kv_quant(k)
+        vq, vs = kv_quant(v)
+        return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    return {"k": k.astype(cfg.dtype), "v": v.astype(cfg.dtype)}
+
 
 def attention_cache_init(cfg: ModelConfig, batch: int, max_len: int,
                          axis_size: int = 16, *, shard_seq: bool = False):
@@ -196,6 +209,8 @@ def attention_cache_init(cfg: ModelConfig, batch: int, max_len: int,
     Default decode layout: batch over cfg.batch_axes, cache sequence over
     cfg.cache_seq_axes (the launcher picks per shape — see
     launch/shardings.py), kv heads over "model" only when n_kv >= axis.
+    With cfg.kv_cache_quant the int8 k/v leaves are joined by fp32
+    per-(token, head) scale leaves sharing the (batch, seq, kv) layout.
     """
     hd = cfg.head_dim_
     kvp = cfg.kv_heads_padded(axis_size)
@@ -208,20 +223,24 @@ def attention_cache_init(cfg: ModelConfig, batch: int, max_len: int,
     spec = P(batch_axis, seq_axes if seq_axes else None, kv_axis, None)
     dtype = jnp.int8 if cfg.kv_cache_quant else cfg.dtype
     shape = (batch, max_len, kvp, hd)
-    return ({"k": jnp.zeros(shape, dtype),
-             "v": jnp.zeros(shape, dtype)},
-            {"k": spec, "v": spec})
+    cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    specs = {"k": spec, "v": spec}
+    if cfg.kv_cache_quant:
+        sspec = P(batch_axis, seq_axes if seq_axes else None, kv_axis)
+        for n in ("k_scale", "v_scale"):
+            cache[n] = jnp.zeros((batch, max_len, kvp), jnp.float32)
+            specs[n] = sspec
+    return cache, specs
 
 
 def cache_write(full, new):
     """Write ``new`` (a prompt prefix along the seq axis, or a full-state
-    leaf) into the preallocated cache leaf ``full`` — quantizing when the
-    cache is int8 (kv_cache_quant). Replaces the grown-per-prompt caches:
-    buffers are allocated at max_len once and only ever updated in place.
-    Prefill-only: writes start at position 0 (decode writes at ``pos`` via
-    ``attention_decode`` directly)."""
-    if full.dtype == jnp.int8 and new.dtype != jnp.int8:
-        new = _kv_quant(new)
+    leaf) into the preallocated cache leaf ``full``. Quantization happens
+    upstream in ``kv_cache_entry`` (per-row scales ride as their own
+    leaves), so this is a pure prefix write. Replaces the grown-per-prompt
+    caches: buffers are allocated at max_len once and only ever updated in
+    place. Prefill-only: writes start at position 0 (decode writes at
+    ``pos`` via ``attention_decode`` directly)."""
     new = new.astype(full.dtype)
     if full.shape == new.shape:
         return new
@@ -229,54 +248,66 @@ def cache_write(full, new):
 
 
 def _flash_decode_local(cfg: ModelConfig, q, k_cache, v_cache, pos,
-                        seq_offset, *, local: bool):
+                        seq_offset, *, local: bool,
+                        k_scale=None, v_scale=None):
     """Partial flash-decode over a LOCAL cache slab.
 
     q: (B, KVg, R, hd) grouped queries; k/v_cache: (B, S_loc, KVg, hd)
-    (bf16 or int8 — dequantized chunk-by-chunk); pos: global position;
-    seq_offset: global index of this slab's first row.
+    (bf16 or int8 — dequantized chunk-by-chunk via the per-(token, head)
+    ``k_scale``/``v_scale`` leaves (B, S_loc, KVg)); pos: global position —
+    a scalar, or a (B,) vector of per-lane positions (continuous batching:
+    every lane sits at its own depth in the cache); seq_offset: global
+    index of this slab's first row.
     Returns (m, l, acc): softmax stats + unnormalized value accumulator.
     """
     B, S_loc, KV, hd = k_cache.shape
     R = q.shape[2]
     scale = 1.0 / math.sqrt(hd)
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     C = min(cfg.decode_chunk, S_loc)
     n = -(-S_loc // C)
     if n * C != S_loc:
         pad = ((0, 0), (0, n * C - S_loc), (0, 0), (0, 0))
         k_cache = jnp.pad(k_cache, pad)
         v_cache = jnp.pad(v_cache, pad)
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, pad[:3])
+            v_scale = jnp.pad(v_scale, pad[:3])
 
     kb = k_cache.reshape(B, n, C, KV, hd).transpose(1, 0, 2, 3, 4)
     vb = v_cache.reshape(B, n, C, KV, hd).transpose(1, 0, 2, 3, 4)
+    xs = (kb, vb, jnp.arange(n))
+    if k_scale is not None:
+        xs += (k_scale.reshape(B, n, C, KV).transpose(1, 0, 2, 3),
+               v_scale.reshape(B, n, C, KV).transpose(1, 0, 2, 3))
 
     def step(carry, inp):
         m, l, acc = carry
-        kc, vc, ci = inp
-        kf = _kv_dequant(kc)                          # (B,C,KV,hd) fp32
+        kc, vc, ci = inp[:3]
+        ks, vs = inp[3:] if len(inp) > 3 else (None, None)
+        kf = kv_dequant(kc, ks)                       # (B,C,KV,hd) fp32
         s = jnp.einsum("bgrd,bcgd->bgrc", q.astype(jnp.float32), kf,
                        preferred_element_type=jnp.float32) * scale
         s = softcap(s, cfg.attn_logit_softcap)
         lrow = ci * C + jnp.arange(C)
         kpos = seq_offset + lrow
-        valid = (kpos <= pos) & (lrow < S_loc)
+        valid = (kpos[None, :] <= posv[:, None]) & (lrow < S_loc)[None, :]
         if local and cfg.sliding_window > 0:
-            valid &= kpos > pos - cfg.sliding_window
-        s = jnp.where(valid[None, None, None, :], s, -1e30)
+            valid &= kpos[None, :] > posv[:, None] - cfg.sliding_window
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         pexp = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
         l_new = l * corr + jnp.sum(pexp, axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
-            "bgrc,bcgd->bgrd", pexp, _kv_dequant(vc),
+            "bgrc,bcgd->bgrd", pexp, kv_dequant(vc, vs),
             preferred_element_type=jnp.float32)
         return (m_new, l_new, acc_new), None
 
     m0 = jnp.full((B, KV, R), -1e30, jnp.float32)
     l0 = jnp.zeros((B, KV, R), jnp.float32)
     a0 = jnp.zeros((B, KV, R, hd), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
-                                  (kb, vb, jnp.arange(n)))
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), xs)
     return m, l, acc
 
 
@@ -298,46 +329,128 @@ def attention_decode(cfg: ModelConfig, p, x, cache, pos, *,
     q, k_new, v_new = _qkv(cfg, p, x, positions, axis_size)
     n_rep = hp // kvp
     qg = q[:, 0].reshape(B, kvp, n_rep, hd)
-    if cache["k"].dtype == jnp.int8:
-        k_new, v_new = _kv_quant(k_new), _kv_quant(v_new)
+    quant = cache["k"].dtype == jnp.int8
+    if quant:
+        k_new, ks_new = kv_quant(k_new)               # (B,1,KV,hd),(B,1,KV)
+        v_new, vs_new = kv_quant(v_new)
     else:
         k_new = k_new.astype(cache["k"].dtype)
         v_new = v_new.astype(cache["v"].dtype)
+        ks_new = vs_new = None
 
+    new_cache = dict(cache)
     if cfg.use_sharding_constraints and cfg.cache_seq_axes:
-        out, k_cache, v_cache = _decode_shardmap(
-            cfg, qg, k_new[:, 0], v_new[:, 0], cache["k"], cache["v"], pos,
-            local=local)
+        out, written = _decode_shardmap(
+            cfg, qg, k_new[:, 0], v_new[:, 0], cache, pos,
+            ks_new[:, 0] if quant else None,
+            vs_new[:, 0] if quant else None, local=local)
+        new_cache.update(written)
     else:
-        k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new,
-                                               (0, pos, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new,
-                                               (0, pos, 0, 0))
-        m, l, acc = _flash_decode_local(cfg, qg, k_cache, v_cache, pos, 0,
-                                        local=local)
+        new_cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k_new,
+                                                      (0, pos, 0, 0))
+        new_cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v_new,
+                                                      (0, pos, 0, 0))
+        if quant:
+            new_cache["k_scale"] = jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks_new, (0, pos, 0))
+            new_cache["v_scale"] = jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs_new, (0, pos, 0))
+        m, l, acc = _flash_decode_local(
+            cfg, qg, new_cache["k"], new_cache["v"], pos, 0, local=local,
+            k_scale=new_cache.get("k_scale"),
+            v_scale=new_cache.get("v_scale"))
         out = acc / jnp.maximum(l[..., None], 1e-30)
 
     out = out.reshape(B, 1, hp, hd).astype(x.dtype)
     out = _head_mask(cfg, out, axis_size)
     out = out.reshape(B, 1, hp * hd)
-    return proj_apply(cfg, p["wo"], out), {"k": k_cache, "v": v_cache}
+    return proj_apply(cfg, p["wo"], out), new_cache
 
 
-def _decode_shardmap(cfg: ModelConfig, qg, k_new, v_new, k_cache, v_cache,
-                     pos, *, local: bool):
-    """Manual seq-sharded flash-decode (see attention_decode docstring)."""
+def attention_decode_paged(cfg: ModelConfig, p, x, cache, block_table, pos,
+                           *, local: bool = False, axis_size: int = 16):
+    """One-token decode over a block-table PAGED cache (continuous batching).
+
+    x: (L,1,D) with L scheduler lanes; cache{k,v}: (n_pages, page, KVp, hd)
+    pool blocks (plus per-row scale pools under kv_cache_quant);
+    block_table: (L, C) int32 mapping lane-logical page j -> physical page;
+    pos: (L,) int32 per-lane positions. Logical cache row r of lane l lives
+    at ``pool[block_table[l, r // page], r % page]`` — the write scatters
+    the new token into its (page, offset) cell, the read gathers the lane's
+    pages back into a contiguous (L, C·page, ...) window and runs the same
+    flash-decode with per-lane position masking. Physical page 0 is the
+    reserved garbage page: idle/overrun lanes point at it, so their writes
+    never touch pages owned by live requests.
+    """
+    B = x.shape[0]
+    hd = cfg.head_dim_
+    hp = cfg.heads_padded(axis_size)
+    kvp = cfg.kv_heads_padded(axis_size)
+    page = cache["k"].shape[1]
+    C = block_table.shape[1]
+    q, k_new, v_new = _qkv(cfg, p, x, pos[:, None], axis_size)
+    n_rep = hp // kvp
+    qg = q[:, 0].reshape(B, kvp, n_rep, hd)
+
+    # (page, offset) of each lane's write; lanes past their allocation land
+    # on table entries that are 0 (the garbage page) by construction.
+    col = jnp.clip(pos // page, 0, C - 1)
+    page_id = jnp.take_along_axis(block_table, col[:, None], axis=1)[:, 0]
+    off = pos % page
+
+    quant = cache["k"].dtype == jnp.int8
+    new_cache = dict(cache)
+    if quant:
+        k_new, ks_new = kv_quant(k_new)
+        v_new, vs_new = kv_quant(v_new)
+        new_cache["k_scale"] = cache["k_scale"].at[page_id, off].set(
+            ks_new[:, 0])
+        new_cache["v_scale"] = cache["v_scale"].at[page_id, off].set(
+            vs_new[:, 0])
+    else:
+        k_new = k_new.astype(cache["k"].dtype)
+        v_new = v_new.astype(cache["v"].dtype)
+    new_cache["k"] = cache["k"].at[page_id, off].set(k_new[:, 0])
+    new_cache["v"] = cache["v"].at[page_id, off].set(v_new[:, 0])
+
+    # block-table gather: lane-contiguous (L, C*page, KVp, hd) view
+    k = new_cache["k"][block_table].reshape(B, C * page, kvp, hd)
+    v = new_cache["v"][block_table].reshape(B, C * page, kvp, hd)
+    ks = (new_cache["k_scale"][block_table].reshape(B, C * page, kvp)
+          if quant else None)
+    vs = (new_cache["v_scale"][block_table].reshape(B, C * page, kvp)
+          if quant else None)
+    m, l, acc = _flash_decode_local(cfg, qg, k, v, pos, 0, local=local,
+                                    k_scale=ks, v_scale=vs)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+
+    out = out.reshape(B, 1, hp, hd).astype(x.dtype)
+    out = _head_mask(cfg, out, axis_size)
+    out = out.reshape(B, 1, hp * hd)
+    return proj_apply(cfg, p["wo"], out), new_cache
+
+
+def _decode_shardmap(cfg: ModelConfig, qg, k_new, v_new, cache, pos,
+                     ks_new=None, vs_new=None, *, local: bool):
+    """Manual seq-sharded flash-decode (see attention_decode docstring).
+
+    Returns (out, written) where ``written`` holds the updated cache leaves
+    (k/v, plus k_scale/v_scale under kv_cache_quant — the per-row scales
+    shard along the same seq axes as the rows they describe).
+    """
     from repro.distributed import get_mesh
 
     mesh = get_mesh()
     seq_axes = cfg.cache_seq_axes
     b_ax = cfg.batch_axes if cfg.batch_axes else None
-    S = k_cache.shape[1]
+    S = cache["k"].shape[1]
     n_shards = 1
     for a in seq_axes:
         n_shards *= mesh.shape[a]
     S_loc = S // n_shards
+    quant = ks_new is not None
 
-    def local_fn(qg, k_new, v_new, kc, vc):
+    def local_fn(qg, k_new, v_new, kc, vc, *scales):
         # global offset of this device's slab
         idx = jnp.zeros((), jnp.int32)
         for a in seq_axes:
@@ -350,24 +463,41 @@ def _decode_shardmap(cfg: ModelConfig, qg, k_new, v_new, k_cache, v_cache,
         vc_new = jax.lax.dynamic_update_slice(vc, v_new[:, None], (0, lpos, 0, 0))
         kc = jnp.where(here, kc_new, kc)
         vc = jnp.where(here, vc_new, vc)
+        ksc = vsc = None
+        if quant:
+            ks_tok, vs_tok, ksc, vsc = scales
+            ksc = jnp.where(here, jax.lax.dynamic_update_slice(
+                ksc, ks_tok[:, None], (0, lpos, 0)), ksc)
+            vsc = jnp.where(here, jax.lax.dynamic_update_slice(
+                vsc, vs_tok[:, None], (0, lpos, 0)), vsc)
         m, l, acc = _flash_decode_local(cfg, qg, kc, vc, pos, offset,
-                                        local=local)
+                                        local=local, k_scale=ksc, v_scale=vsc)
         # combine softmax stats across seq shards — O(B·H·hd) payload
         m_g = jax.lax.pmax(m, seq_axes)
         corr = jnp.exp(m - m_g)
         l_g = jax.lax.psum(l * corr, seq_axes)
         acc_g = jax.lax.psum(acc * corr[..., None], seq_axes)
         out = acc_g / jnp.maximum(l_g[..., None], 1e-30)
+        if quant:
+            return out, kc, vc, ksc, vsc
         return out, kc, vc
 
     rep = P(b_ax, None, None, None)
     cache_spec = P(b_ax, seq_axes, None, None)
+    scale_spec = P(b_ax, seq_axes, None)
     from repro.distributed import shard_map
 
-    return shard_map(
-        local_fn, mesh=mesh,
-        in_specs=(rep, P(b_ax, None, None), P(b_ax, None, None),
-                  cache_spec, cache_spec),
-        out_specs=(rep, cache_spec, cache_spec),
-        check_vma=False,
-    )(qg, k_new, v_new, k_cache, v_cache)
+    in_specs = (rep, P(b_ax, None, None), P(b_ax, None, None),
+                cache_spec, cache_spec)
+    out_specs = (rep, cache_spec, cache_spec)
+    args = (qg, k_new, v_new, cache["k"], cache["v"])
+    if quant:
+        in_specs += (P(b_ax, None), P(b_ax, None), scale_spec, scale_spec)
+        out_specs += (scale_spec, scale_spec)
+        args += (ks_new, vs_new, cache["k_scale"], cache["v_scale"])
+    res = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                    out_specs=out_specs, check_vma=False)(*args)
+    written = {"k": res[1], "v": res[2]}
+    if quant:
+        written["k_scale"], written["v_scale"] = res[3], res[4]
+    return res[0], written

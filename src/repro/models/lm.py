@@ -222,10 +222,16 @@ def cache_init(cfg: ModelConfig, batch: int, max_len: int,
             {"blocks": specs, "pos": P()})
 
 
-def _apply_block_decode(cfg: ModelConfig, bp, role, bcache, x, pos):
+def _apply_block_decode(cfg: ModelConfig, bp, role, bcache, x, pos,
+                        block_table=None):
     h = rmsnorm_apply(bp["norm1"], x)
     if role["mixer"] == "mamba":
+        # SSM state is O(1) per lane — lane-indexed directly, never paged.
         mix, new_c = M.mamba_decode(cfg, bp["mamba"], h, bcache)
+    elif block_table is not None:
+        mix, new_c = A.attention_decode_paged(
+            cfg, bp["attn"], h, bcache, block_table, pos,
+            local=(role["mixer"] == "attn_local"))
     else:
         mix, new_c = A.attention_decode(cfg, bp["attn"], h, bcache, pos,
                                         local=(role["mixer"] == "attn_local"))
@@ -248,8 +254,14 @@ def lm_decode_step(cfg: ModelConfig, params, cache, tokens):
     The cache rides the scan as CARRY with in-place indexed updates (not
     xs→ys), so the while-loop aliases the donated cache buffers instead of
     double-buffering the multi-GiB KV stack (§Perf: decode-cache-carry).
+
+    A contiguous cache carries a scalar ``pos``; a paged cache (see
+    ``lm_decode_step_paged``) additionally carries a ``block_table`` and a
+    per-lane ``pos`` vector, routing attention through block-table
+    gathers/scatters — same body either way.
     """
     pos = cache["pos"]
+    block_table = cache.get("block_table")
     h = embed_apply(cfg, params["embed"], tokens).astype(cfg.dtype)
     roles = block_roles(cfg)
 
@@ -261,7 +273,8 @@ def lm_decode_step(cfg: ModelConfig, params, cache, tokens):
         new_gcache = {}
         for i, role in enumerate(roles):
             x, c = _apply_block_decode(cfg, gparams[f"b{i}"], role,
-                                       gcache[f"b{i}"], x, pos)
+                                       gcache[f"b{i}"], x, pos,
+                                       block_table=block_table)
             new_gcache[f"b{i}"] = c
         blocks = jax.tree.map(
             lambda full, nc: jax.lax.dynamic_update_index_in_dim(
@@ -274,7 +287,24 @@ def lm_decode_step(cfg: ModelConfig, params, cache, tokens):
         params["blocks"])
     h = rmsnorm_apply(params["final_norm"], h)
     logits = head_apply(cfg, params["head"], h)
-    return logits, {"blocks": new_blocks, "pos": pos + 1}
+    new_cache = {"blocks": new_blocks, "pos": pos + 1}
+    if block_table is not None:
+        new_cache["block_table"] = block_table
+    return logits, new_cache
+
+
+def lm_decode_step_paged(cfg: ModelConfig, params, cache, tokens):
+    """One decode step over L scheduler lanes with a block-table paged cache.
+
+    cache: {"blocks": paged pool (serve/paged_cache.py layout),
+            "block_table": (L, C) int32, "pos": (L,) int32}; tokens (L,1).
+    Identical math to ``lm_decode_step`` per lane, but every lane sits at
+    its own position: attention reads/writes go through block-table
+    gathers/scatters into the shared page pool, SSM state is lane-indexed.
+    The lane count L is the jit-stable batch shape — admission/eviction
+    only rewrites the (tiny) block table and pos vector, never the graph.
+    """
+    return lm_decode_step(cfg, params, cache, tokens)
 
 
 # ---------------------------------------------------------------------------
@@ -305,7 +335,7 @@ def _apply_block_prefill(cfg: ModelConfig, bp, role, x, positions):
         out = A._head_mask(cfg, out)
         mix = A.proj_apply(cfg, bp["attn"]["wo"],
                            out.reshape(B, S, hp * cfg.head_dim_))
-        new_c = {"k": k.astype(cfg.dtype), "v": v.astype(cfg.dtype)}
+        new_c = A.kv_cache_entry(cfg, k, v)
     x = x + mix
     if role["ffn"] is not None:
         hh = rmsnorm_apply(bp["norm2"], x)

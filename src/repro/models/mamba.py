@@ -164,6 +164,20 @@ def mamba_cache_init(cfg: ModelConfig, batch: int):
              "conv": P(b_ax, None, MODEL_AXIS)})
 
 
+def mamba_cache_lane_write(pool, state, lane):
+    """Write one request's prefilled SSM state into scheduler lane ``lane``
+    of the lane-indexed pool (continuous batching; SSM state is O(1) per
+    lane so it is never paged — admission is a single lane write, eviction
+    just abandons the lane).
+
+    pool leaves: (n_groups, lanes, ...); state leaves: (n_groups, 1, ...)
+    from a batch-1 prefill.
+    """
+    return jax.tree.map(
+        lambda full, s: full.at[:, lane].set(s[:, 0].astype(full.dtype)),
+        pool, state)
+
+
 def mamba_decode(cfg: ModelConfig, p, x, cache):
     """One-token decode. x: (B,1,D); cache: {h (B,DI,N), conv (B,W-1,DI)}."""
     B = x.shape[0]

@@ -1,1 +1,3 @@
 from .engine import ServeEngine, pack_weights
+from .paged_cache import CachePool, commit_prefill, paged_pool_init, pages_for
+from .scheduler import Request, Scheduler

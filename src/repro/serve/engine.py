@@ -1,4 +1,5 @@
-"""Batched serving engine: one fused jitted fast path per request shape.
+"""Batched serving engine: one fused jitted fast path per request shape,
+plus continuous batching over a paged cache pool.
 
 The decode hot path is a single compiled computation — prefill, a
 ``jax.lax.scan`` over decode steps, and sampling all live inside one
@@ -8,6 +9,15 @@ per token). The KV/SSM cache is preallocated at ``max_len`` by
 DONATED into every call: XLA aliases the multi-MiB cache buffers across
 requests rather than re-materializing them per token.
 
+``generate_batch`` is the traffic-shaped entry point: a pool of
+mixed-length requests flows through a continuous-batching scheduler
+(serve/scheduler.py) over block-table paged caches carved from one
+preallocated pool (serve/paged_cache.py). The decode batch is padded to a
+fixed LANE count so the fused decode-segment scan compiles once per
+(segment, lanes) and never retraces as requests come and go; greedy
+decoding is token-identical to per-request ``generate``, which — with
+``generate_eager`` — survives as the parity oracle.
+
 Weight serving modes:
   * default — stored int8 Boolean weights, per-layer transient ±1 views
     (no FP weight copy is ever resident);
@@ -16,22 +26,28 @@ Weight serving modes:
     packed words through the thin-M packed-XNOR GEMV kernel: ~32× fewer
     resident weight bytes and per-token HBM weight traffic, which is the
     B⊕LD dataflow win on memory-bound decode (q/k/v and gate/up are also
-    fused into single GEMVs). MoE expert tensors stay int8 (they are routed
-    einsums, not proj leaves).
+    fused into single GEMVs) — and under continuous batching those packed
+    words stream ONCE per step for the whole lane pool. MoE expert tensors
+    stay int8 (they are routed einsums, not proj leaves).
 
-Optional int8-quantized KV cache (cfg.kv_cache_quant) now quantizes at both
-prefill and decode writes. ``generate_eager`` keeps the seed per-token loop
-as the parity oracle and the benchmark baseline.
+Optional int8-quantized KV cache (cfg.kv_cache_quant) quantizes at both
+prefill and decode writes with per-(token, head) dynamic scales stored
+alongside the cache rows (models/attention.py: kv_quant).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import pack_boolean_weight
-from repro.models import ModelConfig, cache_init, lm_decode_step, lm_prefill
+from repro.models import (ModelConfig, cache_init, lm_decode_step,
+                          lm_decode_step_paged, lm_prefill)
+
+from .paged_cache import CachePool, commit_prefill, paged_pool_init
+from .scheduler import Request, Scheduler
 
 
 def _fusable(*projs) -> bool:
@@ -92,6 +108,25 @@ def _sample(cfg: ModelConfig, logits, temperature, key, i):
         k, logits / t, axis=-1)[:, None].astype(jnp.int32)
 
 
+def _sample_lanes(cfg: ModelConfig, logits, temps, key, rids, steps):
+    """Per-lane sampling for the continuous batch: each lane folds its
+    (request id, per-request step) into the batch key, so a request's
+    random stream is independent of the lane it happens to land on and of
+    whatever else shares the batch. Lanes with temp<=0 take the argmax."""
+    lg = logits[..., :cfg.vocab_size]
+    greedy = jnp.argmax(lg, axis=-1)
+    if key is None:
+        return greedy[:, None].astype(jnp.int32)
+
+    def draw(r, s, l, t):
+        k = jax.random.fold_in(jax.random.fold_in(key, r), s)
+        return jax.random.categorical(
+            k, l.astype(jnp.float32) / jnp.maximum(t, 1e-6))
+
+    samp = jax.vmap(draw)(rids, steps, lg, temps)
+    return jnp.where(temps > 0, samp, greedy)[:, None].astype(jnp.int32)
+
+
 class ServeEngine:
     # Compiled generate fns are shape-specialized; bound the cache so novel
     # (S, n_tokens) traffic can't grow host/device memory forever. (Bucketing
@@ -116,12 +151,27 @@ class ServeEngine:
                     "would silently serve full-precision weights")
         else:
             self.params = params
-        self._caches = {}   # batch -> preallocated cache, donated per call
-        self._fns = {}      # (B, S, n_tokens, sampled) -> jitted generate fn
+        # preallocated cache trees, donated per call: contiguous oracle
+        # caches keyed by batch size, paged pools keyed by pool geometry —
+        # one bounded pool abstraction instead of an unbounded per-shape dict
+        self._caches = CachePool()
+        self._fns = {}      # compile-shape key -> jitted fn (FIFO-bounded)
         # (temperature is a TRACED argument, deliberately not a compile key)
         self._prefill = jax.jit(
             lambda p, b, c: lm_prefill(cfg, p, b, cache=c))
         self._decode = jax.jit(lambda p, c, t: lm_decode_step(cfg, p, c, t))
+
+    def _get_fn(self, key, build):
+        """Shape-keyed compiled-fn cache, LRU-evicted: a hit refreshes the
+        entry so steady traffic (the per-segment decode fn) can't be pushed
+        out by a parade of cold one-off shapes (per-prompt-length prefills)."""
+        if key in self._fns:
+            self._fns[key] = fn = self._fns.pop(key)   # move to MRU end
+            return fn
+        if len(self._fns) >= self.MAX_COMPILED_FNS:
+            self._fns.pop(next(iter(self._fns)))
+        self._fns[key] = fn = build()
+        return fn
 
     # -- shared plumbing ----------------------------------------------------
     def _inputs(self, params, prompts):
@@ -170,23 +220,189 @@ class ServeEngine:
         B, S = prompts.shape
         assert S + n_tokens <= self.max_len
         sampled = temperature > 0.0 and key is not None
-        fkey = (B, S, n_tokens, sampled)
-        if fkey not in self._fns:
-            if len(self._fns) >= self.MAX_COMPILED_FNS:   # FIFO eviction
-                self._fns.pop(next(iter(self._fns)))
-            self._fns[fkey] = self._build_fn(n_tokens, sampled)
+        fn = self._get_fn((B, S, n_tokens, sampled),
+                          lambda: self._build_fn(n_tokens, sampled))
         k = key if key is not None else jax.random.PRNGKey(0)
-        # Pop before the call: donation invalidates the buffers even when the
-        # dispatch later fails, so a kept reference would poison every future
-        # request of this batch size. On failure the pool entry is simply
-        # gone and the next call allocates fresh.
-        cache = self._caches.pop(B, None)
+        # Take before the call: donation invalidates the buffers even when
+        # the dispatch later fails, so a kept reference would poison every
+        # future request of this batch size. On failure the pool entry is
+        # simply gone and the next call allocates fresh.
+        cache = self._caches.take(B)
         if cache is None:
             cache = cache_init(self.cfg, B, self.max_len)[0]
-        toks, cache = self._fns[fkey](self.params, cache, prompts, k,
-                                      jnp.asarray(temperature, jnp.float32))
-        self._caches[B] = cache
+        toks, cache = fn(self.params, cache, prompts, k,
+                         jnp.asarray(temperature, jnp.float32))
+        self._caches.put(B, cache)
         return toks
+
+    # -- continuous batching over paged caches ------------------------------
+    def _build_prefill_commit(self, page_size: int):
+        """jitted (per prompt-length S): batch-1 prefill + scatter of the
+        prompt's cache rows / SSM state into the lane's pages. The pool is
+        donated — admission writes in place."""
+        cfg = self.cfg
+
+        def fn(params, pool, prompt, page_ids, lane):
+            logits, pcache = lm_prefill(cfg, params,
+                                        self._inputs(params, prompt))
+            pool = commit_prefill(cfg, pool, pcache["blocks"], lane,
+                                  page_ids, page_size)
+            return logits, pool
+
+        return jax.jit(fn, donate_argnums=(1,))
+
+    def _build_batch_segment(self, segment: int, sampled: bool):
+        """jitted fused scan of ``segment`` decode steps over the full lane
+        pool. Compiled once per (segment, pool geometry): admission and
+        finish only rewrite the block table / pos / token vectors between
+        calls, never the graph. Emission-before-decode: step i records the
+        carried token, decodes it, and samples the next — matching
+        ``generate``'s scan so greedy outputs are token-identical."""
+        cfg = self.cfg
+
+        def fn(params, pool, block_table, pos, tok, rids, steps, temps, key):
+            def step(carry, _):
+                tok, pool, pos, steps = carry
+                logits, nc = lm_decode_step_paged(
+                    cfg, params,
+                    {"blocks": pool, "block_table": block_table, "pos": pos},
+                    tok)
+                nxt = _sample_lanes(cfg, logits[:, -1], temps,
+                                    key if sampled else None, rids, steps + 1)
+                return (nxt, nc["blocks"], nc["pos"], steps + 1), tok[:, 0]
+
+            (tok, pool, _, _), toks = jax.lax.scan(
+                step, (tok, pool, pos, steps), None, length=segment)
+            return toks, tok, pool
+
+        return jax.jit(fn, donate_argnums=(1,))
+
+    def generate_batch(self,
+                       prompts: Sequence,
+                       n_tokens: Union[int, Sequence[int]],
+                       temperatures=None,
+                       key: Optional[jax.Array] = None, *,
+                       lanes: int = 4,
+                       page_size: int = 16,
+                       n_pages: Optional[int] = None,
+                       segment: int = 1):
+        """Continuous-batching generation over a paged cache pool.
+
+        prompts: sequence of 1-D int32 token arrays (mixed lengths);
+        n_tokens: per-request token budget (int broadcasts). Returns a list
+        of (n_tokens_i,) int32 arrays in request order.
+
+        Requests flow through a FCFS scheduler: admitted into one of
+        ``lanes`` decode lanes when their full page budget fits, prefilled
+        individually (one compile per prompt length), then decoded together
+        in fused ``segment``-step scans over the fixed-width lane pool —
+        lanes whose request finished mid-segment compute into the garbage
+        page until the segment boundary frees them. GREEDY decode is
+        token-identical to per-request ``generate`` (the parity oracle);
+        sampled decode folds (request id, step) into ``key`` per lane, so a
+        request's stream doesn't depend on lane placement or co-tenants
+        (but differs from the single-request path's batch-level stream).
+        """
+        if segment < 1 or page_size < 1 or lanes < 1:
+            raise ValueError("segment, page_size and lanes must be >= 1")
+        n = len(prompts)
+        n_tok = ([int(n_tokens)] * n if isinstance(n_tokens, int)
+                 else [int(t) for t in n_tokens])
+        temps = ([0.0] * n if temperatures is None
+                 else [float(t) for t in temperatures])
+        if len(n_tok) != n or len(temps) != n:
+            raise ValueError(f"{n} prompts but {len(n_tok)} n_tokens / "
+                             f"{len(temps)} temperatures")
+        table_cols = -(-self.max_len // page_size)
+        if n_pages is None:     # full residency for every lane + garbage page
+            n_pages = lanes * table_cols + 1
+        sched = Scheduler(lanes, n_pages, page_size)
+        reqs = []
+        for i, p in enumerate(prompts):
+            p = np.asarray(p, np.int32).reshape(-1)
+            # validate every budget BEFORE any work: a never-fitting
+            # request must not abort the pool mid-serve, discarding other
+            # requests' already-generated tokens (and must fail under
+            # python -O too, so no asserts here)
+            if n_tok[i] < 1 or p.size < 1:
+                raise ValueError(f"request {i}: empty prompt or zero "
+                                 "token budget")
+            if p.size + n_tok[i] > self.max_len:
+                raise ValueError(
+                    f"request {i}: {p.size}+{n_tok[i]} tokens exceeds "
+                    f"max_len={self.max_len}")
+            req = Request(rid=i, prompt=p, n_tokens=n_tok[i],
+                          temperature=temps[i])
+            sched.check_fits(req)
+            reqs.append(req)
+            sched.submit(req)
+
+        pool_key = ("paged", lanes, page_size, n_pages)
+        pool = self._caches.take(pool_key)
+        if pool is None:
+            pool = paged_pool_init(self.cfg, lanes, n_pages, page_size)
+
+        # host-side device mirror of the lane state (tiny, re-uploaded per
+        # segment; the multi-MiB pool itself only moves via donation)
+        bt = np.zeros((lanes, table_cols), np.int32)
+        pos = np.zeros((lanes,), np.int32)
+        cur = np.zeros((lanes, 1), np.int32)
+        steps = np.zeros((lanes,), np.int32)
+        rids = np.zeros((lanes,), np.int32)
+        temps_v = np.zeros((lanes,), np.float32)
+        k = key if key is not None else jax.random.PRNGKey(0)
+        sampled = key is not None
+
+        while not sched.idle:
+            for req in sched.admit():
+                eff = req.effective_prompt
+                S = int(eff.shape[0])
+                npp = -(-S // page_size)
+                pfn = self._get_fn(
+                    ("prefill_commit", pool_key, S),
+                    lambda: self._build_prefill_commit(page_size))
+                logits, pool = pfn(
+                    self.params, pool, jnp.asarray(eff[None]),
+                    jnp.asarray(req.pages[:npp], jnp.int32),
+                    jnp.asarray(req.lane, jnp.int32))
+                first = _sample(
+                    self.cfg, logits[:, -1], req.temperature,
+                    jax.random.fold_in(k, req.rid)
+                    if sampled and req.temperature > 0 else None,
+                    len(req.emitted))
+                lane = req.lane
+                bt[lane] = 0
+                bt[lane, :len(req.pages)] = req.pages
+                pos[lane] = S
+                cur[lane, 0] = int(first[0, 0])
+                steps[lane] = len(req.emitted)
+                rids[lane] = req.rid
+                temps_v[lane] = req.temperature
+            if not sched.active:    # unreachable given check_fits up front
+                raise RuntimeError("scheduler deadlock: pending requests "
+                                   "but nothing admissible")
+            sfn = self._get_fn(
+                ("segment", pool_key, segment, sampled),
+                lambda: self._build_batch_segment(segment, sampled))
+            toks, cur_d, pool = sfn(
+                self.params, pool, jnp.asarray(bt), jnp.asarray(pos),
+                jnp.asarray(cur), jnp.asarray(rids), jnp.asarray(steps),
+                jnp.asarray(temps_v), k)
+            toks = np.asarray(toks)
+            cur = np.array(cur_d)    # copy: host mirror stays writable
+            pos += segment
+            steps += segment
+            for lane, req in list(sched.active.items()):
+                take = min(segment, req.n_tokens - len(req.emitted))
+                req.emitted.extend(int(t) for t in toks[:take, lane])
+                if req.done:
+                    sched.finish(lane)
+                    bt[lane] = 0
+                    pos[lane] = cur[lane] = steps[lane] = rids[lane] = 0
+                    temps_v[lane] = 0.0
+
+        self._caches.put(pool_key, pool)
+        return [jnp.asarray(r.emitted, jnp.int32) for r in reqs]
 
     # -- seed per-token loop: parity oracle / benchmark baseline ------------
     def generate_eager(self, prompts: jax.Array, n_tokens: int,

@@ -1,0 +1,119 @@
+"""Block-table paged KV/SSM caches carved from one preallocated pool.
+
+Continuous batching needs a mixed-length request pool to share cache
+memory: a request holding ``max_len`` of contiguous cache per lane wastes
+most of it on short prompts and makes admission all-or-nothing. Instead
+ONE pool of fixed-size pages is preallocated (``paged_pool_init``); a
+request owns just the pages its prompt + token budget needs, and a per-lane
+block table maps logical cache rows to physical pages. This is what lets a
+traffic-shaped request mix stream the bit-packed XNOR weights once per
+batched step — BOLD's memory-bound-decode win amortized across every
+concurrent request — instead of once per request.
+
+Layout (mirrors ``cache_init``'s stacked-groups scheme):
+  * attention roles: ``k``/``v`` pools (n_groups, n_pages, page, KVp, hd),
+    plus fp32 per-(token, head) ``k_scale``/``v_scale`` pools under
+    cfg.kv_cache_quant (the dynamic-scale int8 cache);
+  * mamba roles: lane-indexed O(1) state (n_groups, lanes, ...) — SSM
+    state doesn't grow with context, so it is never paged;
+  * physical page 0 is RESERVED as the garbage page — idle and overrun
+    lanes' block tables point at it, so their writes can never corrupt
+    pages owned by live requests.
+
+``CachePool`` is the donation-safe host-side pool of cache trees (both the
+paged pools here and the per-batch-size contiguous oracle caches): entries
+are *taken* (removed) before a donating dispatch — a failed call simply
+drops the entry instead of poisoning later requests — and *put* back
+after, with FIFO eviction bounding device memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, block_roles
+from repro.models import attention as A
+from repro.models import mamba as M
+
+
+def pages_for(prompt_len: int, n_tokens: int, page_size: int) -> int:
+    """Pages a request must own: one row per prompt token + generated token.
+    (The emission-before-decode schedule writes at most prompt+n-1 rows;
+    the +n bound leaves one spare row, and any segment overrun past the
+    allocation spills to the garbage page harmlessly.)"""
+    return -(-(prompt_len + n_tokens) // page_size)
+
+
+def paged_pool_init(cfg: ModelConfig, lanes: int, n_pages: int,
+                    page_size: int):
+    """One preallocated pool tree for all lanes: {"b{i}": role pool}."""
+    roles = block_roles(cfg)
+    blocks = {}
+    for i, role in enumerate(roles):
+        if role["mixer"] == "mamba":
+            c, _ = M.mamba_cache_init(cfg, lanes)
+        else:
+            # a page pool IS an attention cache with batch=n_pages rows of
+            # length page_size — same leaves, same quant-scale layout.
+            c, _ = A.attention_cache_init(cfg, n_pages, page_size)
+        blocks[f"b{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_groups,) + a.shape), c)
+    return blocks
+
+
+def commit_prefill(cfg: ModelConfig, pool, prefill_blocks, lane, page_ids,
+                   page_size: int):
+    """Scatter a batch-1 prefilled contiguous cache into the pool.
+
+    prefill_blocks: ``lm_prefill``'s cache["blocks"] at batch 1 (leaves
+    (n_groups, 1, S, ...) for attention, (n_groups, 1, ...) for mamba);
+    page_ids: (ceil(S/page),) int32 physical pages receiving logical pages
+    0.. of this request; lane: the scheduler lane (mamba state slot).
+    The last page's tail rows beyond S are zero-filled — they are owned by
+    this request alone and masked by its position until overwritten by
+    decode. jit-stable in everything but S (one compile per prompt length).
+    """
+    roles = block_roles(cfg)
+    npp = page_ids.shape[0]
+    out = {}
+    for i, role in enumerate(roles):
+        pl, pc = pool[f"b{i}"], prefill_blocks[f"b{i}"]
+        if role["mixer"] == "mamba":
+            out[f"b{i}"] = M.mamba_cache_lane_write(pl, pc, lane)
+        else:
+            def put(full, new):
+                G, S = new.shape[0], new.shape[2]
+                pad = [(0, 0), (0, npp * page_size - S)] \
+                    + [(0, 0)] * (new.ndim - 3)
+                rows = jnp.pad(new[:, 0], pad)
+                rows = rows.reshape((G, npp, page_size) + new.shape[3:])
+                return full.at[:, page_ids].set(rows.astype(full.dtype))
+
+            out[f"b{i}"] = jax.tree.map(put, pl, pc)
+    return out
+
+
+class CachePool:
+    """Bounded take/put pool of preallocated (donated) cache trees."""
+
+    def __init__(self, limit: int = 8):
+        self.limit = limit
+        self._entries = {}
+
+    def take(self, key):
+        """Remove and return the entry (None if absent). Donation
+        invalidates buffers even when the dispatch later fails, so the
+        entry must leave the pool BEFORE the call — on failure it is
+        simply gone and the next request allocates fresh."""
+        return self._entries.pop(key, None)
+
+    def put(self, key, value):
+        if key not in self._entries and len(self._entries) >= self.limit:
+            self._entries.pop(next(iter(self._entries)))   # FIFO eviction
+        self._entries[key] = value
+
+    def __contains__(self, key):
+        return key in self._entries
+
+    def __len__(self):
+        return len(self._entries)

@@ -1,0 +1,128 @@
+"""Continuous-batching request scheduler — pure host-side bookkeeping.
+
+The scheduler owns three resources: LANES (slots in the fixed-width decode
+batch — the jit-stable shape), PAGES (physical cache pages in the paged
+pool; page 0 is reserved as the garbage page), and the FCFS pending queue.
+Per step it can
+
+  * admit  — pop pending requests into free lanes while their full page
+    budget fits (admission reserves every page the request can ever need,
+    so a running request never stalls mid-decode waiting for memory);
+  * finish — release a completed request's lane + pages;
+  * evict  — preempt a running request, releasing lane + pages and
+    requeueing it at the FRONT of the queue. Already-emitted tokens are
+    kept: on re-admission the effective prompt is prompt+emitted and the
+    cache state is recomputed by prefill (recompute-on-preempt — exactly
+    equivalent for attention caches, whose rows depend only on their own
+    token/position).
+
+No jax here: the device-side mirror (block table, positions, current
+tokens) lives in ``ServeEngine.generate_batch``, which drives this object.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Tuple
+
+import numpy as np
+
+from .paged_cache import pages_for
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    n_tokens: int
+    temperature: float = 0.0
+    emitted: List[int] = dataclasses.field(default_factory=list)
+    lane: int = -1
+    pages: Tuple[int, ...] = ()
+
+    @property
+    def done(self) -> bool:
+        return len(self.emitted) >= self.n_tokens
+
+    @property
+    def effective_prompt(self) -> np.ndarray:
+        """Prompt + tokens already emitted — what (re-)admission prefills.
+        After an eviction this replays the generated prefix so the next
+        sampled token continues exactly where the request left off."""
+        if not self.emitted:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.emitted, self.prompt.dtype)])
+
+
+class Scheduler:
+    def __init__(self, lanes: int, n_pages: int, page_size: int):
+        if lanes < 1 or n_pages < 2:
+            raise ValueError("need >=1 lane and >=2 pages (page 0 is the "
+                             "reserved garbage page)")
+        self.lanes = lanes
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.free_lanes: Deque[int] = deque(range(lanes))
+        self.free_pages: Deque[int] = deque(range(1, n_pages))
+        self.pending: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}
+
+    # -- queue ---------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    @property
+    def idle(self) -> bool:
+        return not self.pending and not self.active
+
+    def pages_needed(self, req: Request) -> int:
+        # prompt rows + decode rows is invariant under eviction: emitted
+        # tokens move from the token budget into the effective prompt.
+        return pages_for(len(req.prompt), req.n_tokens, self.page_size)
+
+    def check_fits(self, req: Request) -> int:
+        """Raise unless the request's full page budget can EVER be met.
+        The single source of truth for the admission bound — the engine
+        calls it up front (before any compute) and ``admit`` enforces the
+        same rule at the queue head."""
+        need = self.pages_needed(req)
+        if need > self.n_pages - 1:
+            raise ValueError(
+                f"request {req.rid} needs {need} pages "
+                f"({len(req.prompt)}+{req.n_tokens} tokens at "
+                f"page_size={self.page_size}) but the pool only has "
+                f"{self.n_pages - 1} allocatable")
+        return need
+
+    # -- admit / finish / evict ----------------------------------------------
+    def admit(self) -> List[Request]:
+        """FCFS: admit queue-head requests while a lane and their full page
+        budget are free. Head-of-line blocking is deliberate — skipping
+        ahead would starve large requests forever under steady traffic."""
+        admitted = []
+        while self.pending and self.free_lanes:
+            need = self.check_fits(self.pending[0])
+            if need > len(self.free_pages):
+                break
+            req = self.pending.popleft()
+            req.lane = self.free_lanes.popleft()
+            req.pages = tuple(self.free_pages.popleft() for _ in range(need))
+            self.active[req.lane] = req
+            admitted.append(req)
+        return admitted
+
+    def _release(self, lane: int) -> Request:
+        req = self.active.pop(lane)
+        self.free_lanes.append(lane)
+        self.free_pages.extend(req.pages)
+        req.lane, req.pages = -1, ()
+        return req
+
+    def finish(self, lane: int) -> Request:
+        return self._release(lane)
+
+    def evict(self, lane: int) -> Request:
+        req = self._release(lane)
+        self.pending.appendleft(req)     # preempted work resumes first
+        return req
