@@ -18,14 +18,23 @@ the row tracks regressions in that overhead; the batching win (shared
 weight streams, no head-of-batch stragglers, admission under load) is a
 device-memory-bandwidth property, not a CPU wall-clock one.
 
+A fifth path, ``stream``, drives the SAME pool through a ``ServeSession``
+and measures the latency story the closed batch loop cannot tell:
+time-to-first-token (wall clock until the first submitted request has a
+readable token) and mean inter-token latency under continuous load. The
+streaming gate asserts TTFT beats the closed-batch drain time — first
+tokens must not wait for the whole pool to finish.
+
 Emits ``name,us_per_call,derived`` rows like every other bench module, with
 tokens/sec and the scan-vs-eager speedup in the derived column so
 BENCH_*.json tracks a serving-throughput trajectory.
 
 ``REPRO_BENCH_SMOKE=1`` (the CI job) shrinks every point to a tiny config
-and turns the scan-vs-eager ratio into a hard gate: the fused path must
-beat the per-token loop by ``SMOKE_GATE``× or the process exits nonzero —
-the decode-fast-path contract is enforced on every push, not just locally.
+and turns the scan-vs-eager ratio AND the TTFT-vs-drain ratio into hard
+gates: the fused path must beat the per-token loop by ``SMOKE_GATE``× and
+streaming first tokens must land before the closed-batch pool drains, or
+the process exits nonzero — the decode fast-path and streaming contracts
+are enforced on every push, not just locally.
 """
 from __future__ import annotations
 
@@ -137,10 +146,54 @@ def run():
                  f"{total/(us_pool/1e6):.1f}tok_s_vs_seq="
                  f"{us_seq/us_pool:.2f}x"))
 
+    # streaming session over the same pool: time-to-first-token and mean
+    # inter-token latency under continuous load. The closed batch loop's
+    # "TTFT" is its full drain time (us_pool) — the whole point of the
+    # session API is that first tokens arrive segments, not pools, later.
+    from repro.serve import SamplingParams
+
+    def stream_pool():
+        with engine.session(lanes=BATCH_LANES, page_size=8,
+                            segment=4) as sess:
+            handles = [sess.submit(p, SamplingParams(max_tokens=g))
+                       for p, g in zip(pool_prompts, pool_gens)]
+            h0 = handles[0]
+            t0 = time.time()
+            ttft = arrivals = None
+            seen = 0
+            while not sess.idle:
+                sess.step()
+                if h0.tokens_ready > seen:
+                    now = time.time()
+                    if ttft is None:
+                        ttft, arrivals = now - t0, [now]
+                    else:
+                        arrivals.append(now)
+                    seen = h0.tokens_ready
+            for h in handles:
+                h.result()
+            itl = (arrivals[-1] - arrivals[0]) / max(seen - 1, 1)
+            return ttft, itl
+
+    stream_pool()                       # warm the session compile set
+    # min-of-N like _bench: this container is shared and scheduler noise
+    # only ever adds time (a single run can read 3-5x the settled value)
+    ttft, itl = map(min, zip(*(stream_pool() for _ in range(3))))
+    rows.append((f"decode/stream_ttft_pool{len(BATCH_POOL)}_l{BATCH_LANES}",
+                 f"{ttft*1e6:.0f}",
+                 f"vs_closed_batch_drain={us_pool/(ttft*1e6):.2f}x"))
+    rows.append((f"decode/stream_itl_pool{len(BATCH_POOL)}_l{BATCH_LANES}",
+                 f"{itl*1e6:.0f}", "mean_inter_token"))
+
     if SMOKE and max(speedups) < SMOKE_GATE:
         raise SystemExit(
             f"decode throughput gate FAILED: fused scan best speedup "
             f"{max(speedups):.2f}x < {SMOKE_GATE}x over the eager loop")
+    if SMOKE and ttft * 1e6 >= us_pool:
+        raise SystemExit(
+            f"streaming gate FAILED: time-to-first-token {ttft*1e6:.0f}us "
+            f"did not beat the closed-batch pool drain {us_pool:.0f}us — "
+            f"first tokens are waiting for the pool")
     return rows
 
 

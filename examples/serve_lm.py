@@ -1,7 +1,9 @@
 """Serve a B⊕LD LM with batched requests: prefill + greedy decode on int8
 Boolean weights (optionally with the int8-quantized KV cache), then a
 continuous-batching pass — mixed-length requests flowing through the paged
-cache pool and lane scheduler, token-identical to serving them one by one.
+cache pool and lane scheduler, token-identical to serving them one by one —
+and finally a streaming session: submit/stream/cancel request handles with
+tokens arriving mid-flight (the async serve API).
 
     PYTHONPATH=src python examples/serve_lm.py --batch 4 --gen 24
 """
@@ -68,7 +70,8 @@ def main():
                     for L in (args.prompt_len, args.prompt_len // 2,
                               args.prompt_len // 4 + 1, args.prompt_len - 1,
                               args.prompt_len // 2 + 3)]
-    pool_gens = [args.gen, args.gen // 2, args.gen, args.gen // 2, args.gen]
+    half_gen = max(args.gen // 2, 1)
+    pool_gens = [args.gen, half_gen, args.gen, half_gen, args.gen]
     t0 = time.time()
     outs = engine.generate_batch(pool_prompts, pool_gens, lanes=3,
                                  page_size=8, segment=2)
@@ -79,6 +82,34 @@ def main():
     ref = engine.generate(jnp.asarray(pool_prompts[1][None]), pool_gens[1])
     assert (np.asarray(outs[1]) == np.asarray(ref[0])).all()
     print("[serve] continuous-batching parity check passed")
+
+    # -- streaming session: the async request lifecycle. Submit, read
+    # tokens as segments complete, inject a request mid-flight, cancel one
+    # — the freed lane and pages are reused immediately. Greedy streams
+    # stay token-identical to `generate`.
+    from repro.serve import SamplingParams
+
+    with engine.session(lanes=2, page_size=8, segment=2) as sess:
+        h0 = sess.submit(pool_prompts[0], SamplingParams(max_tokens=args.gen))
+        h1 = sess.submit(pool_prompts[1],
+                         SamplingParams(max_tokens=args.gen))
+        stream = h0.tokens()
+        first = [next(stream) for _ in range(min(2, args.gen))]
+        print(f"[serve] session: req0 streamed {first} mid-flight "
+              f"(req0 {h0.tokens_ready}/{args.gen} tokens ready)")
+        h2 = sess.submit(pool_prompts[2],
+                         SamplingParams(max_tokens=args.gen))  # mid-flight
+        h1.cancel()       # frees its lane + pages for h2 immediately
+        rest = list(stream)
+        out2 = h2.result()
+        print(f"[serve] session: req0 done ({len(first + rest)} tokens), "
+              f"req1 cancelled at {h1.tokens_ready}, req2 (submitted "
+              f"mid-flight) done ({len(out2)} tokens)")
+    ref0 = engine.generate(jnp.asarray(pool_prompts[0][None]), args.gen)
+    assert first + rest == np.asarray(ref0[0]).tolist()
+    ref2 = engine.generate(jnp.asarray(pool_prompts[2][None]), args.gen)
+    assert (np.asarray(out2) == np.asarray(ref2[0])).all()
+    print("[serve] session streaming parity check passed")
 
 
 if __name__ == "__main__":

@@ -22,4 +22,8 @@ python -m pytest -q tests/test_serve_decode.py \
 echo "== continuous-batching parity gate =="
 python -m pytest -q tests/test_serve_batch.py -k "matches_sequential"
 
+echo "== streaming session parity gate =="
+python -m pytest -q tests/test_serve_session.py \
+    -k "matches_sequential or bucket"
+
 echo "check.sh: all green"

@@ -8,6 +8,12 @@ scheduler instead of one fixed-shape batch):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --smoke \
         --continuous --requests 8 --lanes 4 --gen 16
+
+Streaming session (tokens printed as decode segments complete, requests
+submitted mid-flight — the async serve API):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --smoke \
+        --stream --requests 8 --lanes 4 --gen 16
 """
 from __future__ import annotations
 
@@ -32,12 +38,17 @@ def main():
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching: a mixed-length request pool "
                          "through the paged-cache lane scheduler")
+    ap.add_argument("--stream", action="store_true",
+                    help="streaming session: submit/stream/cancel request "
+                         "lifecycle, tokens printed as segments complete")
     ap.add_argument("--requests", type=int, default=8,
-                    help="(--continuous) request pool size")
+                    help="(--continuous/--stream) request pool size")
     ap.add_argument("--lanes", type=int, default=4,
-                    help="(--continuous) fixed decode lane count")
+                    help="(--continuous/--stream) fixed decode lane count")
     ap.add_argument("--page-size", type=int, default=16,
-                    help="(--continuous) cache page size in tokens")
+                    help="(--continuous/--stream) cache page size in tokens")
+    ap.add_argument("--segment", type=int, default=2,
+                    help="(--stream) decode steps between scheduling points")
     args = ap.parse_args()
 
     import jax
@@ -58,7 +69,8 @@ def main():
     engine = ServeEngine(cfg, params, max_len=args.prompt_len + args.gen,
                          packed=args.packed)
 
-    if args.continuous:
+    if args.stream or args.continuous:
+        # one request-pool builder for both traffic-shaped modes
         import numpy as np
 
         rng = np.random.default_rng(1)
@@ -68,6 +80,45 @@ def main():
                    for _ in range(args.requests)]
         gens = [int(rng.integers(max(args.gen // 2, 1), args.gen + 1))
                 for _ in range(args.requests)]
+
+    if args.stream:
+        from repro.serve import SamplingParams
+
+        with engine.session(lanes=args.lanes, page_size=args.page_size,
+                            segment=args.segment) as sess:
+            # submit half up front, inject the rest mid-flight — the
+            # scheduler is re-entrant, admission happens between segments
+            handles = [sess.submit(p, SamplingParams(max_tokens=g))
+                       for p, g in zip(prompts[: args.requests // 2],
+                                       gens[: args.requests // 2])]
+            printed = [0] * args.requests
+            t0 = time.time()
+            ttft = None
+            injected = args.requests // 2
+            while not sess.idle or injected < args.requests:
+                if injected < args.requests:    # one mid-flight submit/step
+                    handles.append(sess.submit(
+                        prompts[injected],
+                        SamplingParams(max_tokens=gens[injected])))
+                    injected += 1
+                sess.step()
+                for i, h in enumerate(handles):
+                    if h.tokens_ready > printed[i]:
+                        if ttft is None:
+                            ttft = time.time() - t0
+                        new = h.tokens_so_far()[printed[i]:]
+                        print(f"[serve] req{i} +{new} "
+                              f"({h.tokens_ready}/{gens[i]} "
+                              f"{h.status.name.lower()})")
+                        printed[i] = h.tokens_ready
+            dt = time.time() - t0
+            total = sum(h.tokens_ready for h in handles)
+        print(f"[serve] stream: {args.requests} requests over {args.lanes} "
+              f"lanes in {dt:.2f}s ({total/dt:.1f} tok/s aggregate, "
+              f"first tokens after {ttft:.2f}s — no wait for pool drain)")
+        return
+
+    if args.continuous:
         engine.generate_batch(prompts, gens, lanes=args.lanes,
                               page_size=args.page_size)   # warmup/compile
         t0 = time.time()

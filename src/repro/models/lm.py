@@ -314,11 +314,13 @@ def lm_decode_step_paged(cfg: ModelConfig, params, cache, tokens):
 # or pads them and the whole (prefill + decode scan) jit can alias a donated
 # cache buffer end to end.
 # ---------------------------------------------------------------------------
-def _apply_block_prefill(cfg: ModelConfig, bp, role, x, positions):
+def _apply_block_prefill(cfg: ModelConfig, bp, role, x, positions,
+                         length=None):
     h = rmsnorm_apply(bp["norm1"], x)
     if role["mixer"] == "mamba":
         mix, (h_last, conv_state) = M.mamba_apply(cfg, bp["mamba"], h,
-                                                  return_state=True)
+                                                  return_state=True,
+                                                  length=length)
         new_c = {"h": h_last, "conv": conv_state.astype(jnp.float32)}
     else:
         local = role["mixer"] == "attn_local"
@@ -350,12 +352,21 @@ def _apply_block_prefill(cfg: ModelConfig, bp, role, x, positions):
 
 
 def lm_prefill(cfg: ModelConfig, params, batch, cache=None,
-               max_len: Optional[int] = None):
+               max_len: Optional[int] = None, length=None):
     """Prefill over (B,S) inputs -> (last-position logits, populated cache).
 
     ``cache`` is a preallocated ``cache_init`` tree (sized max_len) that the
     prompt state is written into; pass one to reuse/donate buffers across
     requests. When omitted, one is allocated at ``max_len`` (default S).
+
+    ``length`` (traced int32 scalar, optional) marks the true prompt length
+    when the inputs are right-padded to a compile bucket: logits come from
+    position ``length-1`` instead of ``S-1``, and the SSM recurrence freezes
+    on positions >= length (decay=1, input=0) so the returned state is
+    exactly the state after the true prompt. Attention rows < length are
+    already pad-invariant under the causal mask; their cache rows are
+    masked/committed by the caller (serve/paged_cache.commit_prefill). One
+    compiled prefill then serves every prompt length in the bucket.
     """
     h = _inputs_to_h(cfg, params, batch)
     B, S = h.shape[0], h.shape[1]
@@ -371,7 +382,7 @@ def lm_prefill(cfg: ModelConfig, params, batch, cache=None,
             blocks)
         for i, role in enumerate(roles):
             x, c = _apply_block_prefill(cfg, gparams[f"b{i}"], role, x,
-                                        positions)
+                                        positions, length=length)
             gcache[f"b{i}"] = jax.tree.map(A.cache_write, gcache[f"b{i}"], c)
         blocks = jax.tree.map(
             lambda full, nc: jax.lax.dynamic_update_index_in_dim(
@@ -385,6 +396,12 @@ def lm_prefill(cfg: ModelConfig, params, batch, cache=None,
         body, (h, cache["blocks"], jnp.zeros((), jnp.int32)),
         params["blocks"])
     h = rmsnorm_apply(params["final_norm"], h)
-    logits = head_apply(cfg, params["head"], h[:, -1:])
-    return logits, {"blocks": new_blocks,
-                    "pos": jnp.asarray(S, jnp.int32)}
+    if length is None:
+        last = h[:, -1:]
+        pos = jnp.asarray(S, jnp.int32)
+    else:
+        last = jax.lax.dynamic_slice_in_dim(
+            h, jnp.asarray(length, jnp.int32) - 1, 1, axis=1)
+        pos = jnp.asarray(length, jnp.int32)
+    logits = head_apply(cfg, params["head"], last)
+    return logits, {"blocks": new_blocks, "pos": pos}

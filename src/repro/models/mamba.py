@@ -137,20 +137,38 @@ def mamba_ssm(cfg: ModelConfig, p, xc, dt, Bm, Cm, h0=None,
 
 
 def mamba_apply(cfg: ModelConfig, p, x, h0=None, conv0=None,
-                return_state: bool = False):
-    """Train/prefill mamba block body. x: (B,S,D)."""
+                return_state: bool = False, length=None):
+    """Train/prefill mamba block body. x: (B,S,D).
+
+    ``length`` (traced scalar, optional): true sequence length when ``x`` is
+    right-padded to a compile bucket. Padded steps are frozen out of the
+    recurrence (dt=0 => decay=1, input=0 — the same identity element
+    ``mamba_ssm`` already pads chunks with), and the returned conv state is
+    sliced at ``length`` instead of the padded tail, so the state tuple is
+    bit-identical to running the unpadded sequence.
+    """
     DI = cfg.d_inner_
+    W = cfg.conv_width
     xin = proj_apply(cfg, p["in_x"], x)
     z = proj_apply(cfg, p["in_z"], x)
     xconv = _causal_conv(xin, p["conv_w"].astype(jnp.float32),
                          p["conv_b"]).astype(x.dtype)
     xc = jax.nn.silu(xconv.astype(jnp.float32)).astype(x.dtype)
     dt, Bm, Cm = _ssm_params(cfg, p, xc)
+    if length is not None:
+        live = jnp.arange(x.shape[1]) < jnp.asarray(length, jnp.int32)
+        dt = jnp.where(live[None, :, None], dt, 0.0)
     y, h_last = mamba_ssm(cfg, p, xc, dt, Bm, Cm, h0, chunk=cfg.ssm_chunk)
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
     out = proj_apply(cfg, p["out_proj"], y)
     if return_state:
-        conv_state = xin[:, -(cfg.conv_width - 1):, :]    # (B,W-1,DI)
+        if length is None:
+            conv_state = xin[:, -(W - 1):, :]             # (B,W-1,DI)
+        else:
+            # rows [length-W+1, length), zero-filled below row 0
+            xp = jnp.pad(xin, ((0, 0), (W - 1, 0), (0, 0)))
+            conv_state = jax.lax.dynamic_slice_in_dim(
+                xp, jnp.asarray(length, jnp.int32), W - 1, axis=1)
         return out, (h_last, conv_state)
     return out
 

@@ -1,3 +1,5 @@
 from .engine import ServeEngine, pack_weights
 from .paged_cache import CachePool, commit_prefill, paged_pool_init, pages_for
-from .scheduler import Request, Scheduler
+from .sampling import sample_tokens
+from .scheduler import (Request, RequestStatus, SamplingParams, Scheduler)
+from .session import RequestHandle, ServeSession

@@ -9,13 +9,16 @@ per token). The KV/SSM cache is preallocated at ``max_len`` by
 DONATED into every call: XLA aliases the multi-MiB cache buffers across
 requests rather than re-materializing them per token.
 
-``generate_batch`` is the traffic-shaped entry point: a pool of
-mixed-length requests flows through a continuous-batching scheduler
-(serve/scheduler.py) over block-table paged caches carved from one
-preallocated pool (serve/paged_cache.py). The decode batch is padded to a
-fixed LANE count so the fused decode-segment scan compiles once per
-(segment, lanes) and never retraces as requests come and go; greedy
-decoding is token-identical to per-request ``generate``, which — with
+``ServeEngine.session`` is the traffic-shaped entry point: an explicit
+submit/stream/cancel request lifecycle (serve/session.py) over a
+re-entrant continuous-batching scheduler (serve/scheduler.py) and
+block-table paged caches carved from one preallocated pool
+(serve/paged_cache.py). The decode batch is padded to a fixed LANE count
+so the fused decode-segment scan compiles once per (segment, lanes) and
+never retraces as requests come and go, and prefill compiles are bucketed
+by padded prompt length. ``generate_batch`` survives as a thin wrapper
+over a session (submit all, run until idle, collect); greedy decoding is
+token-identical to per-request ``generate``, which — with
 ``generate_eager`` — survives as the parity oracle.
 
 Weight serving modes:
@@ -40,14 +43,15 @@ from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import pack_boolean_weight
 from repro.models import (ModelConfig, cache_init, lm_decode_step,
                           lm_decode_step_paged, lm_prefill)
 
-from .paged_cache import CachePool, commit_prefill, paged_pool_init
-from .scheduler import Request, Scheduler
+from .paged_cache import CachePool, commit_prefill
+from .sampling import sample_tokens
+from .scheduler import SamplingParams
+from .session import ServeSession
 
 
 def _fusable(*projs) -> bool:
@@ -94,43 +98,11 @@ def pack_weights(params):
     return walk(params)
 
 
-def _sample(cfg: ModelConfig, logits, temperature, key, i):
-    """Greedy iff ``key`` is None (or a concrete non-positive temperature).
-    ``temperature`` may be a traced scalar — the sampled/greedy split is
-    made on ``key`` so a traced value never hits a Python comparison."""
-    logits = logits[..., :cfg.vocab_size]
-    if key is None or (isinstance(temperature, (int, float))
-                       and temperature <= 0.0):
-        return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    k = jax.random.fold_in(key, i)
-    t = jnp.maximum(jnp.asarray(temperature, jnp.float32), 1e-6)
-    return jax.random.categorical(
-        k, logits / t, axis=-1)[:, None].astype(jnp.int32)
-
-
-def _sample_lanes(cfg: ModelConfig, logits, temps, key, rids, steps):
-    """Per-lane sampling for the continuous batch: each lane folds its
-    (request id, per-request step) into the batch key, so a request's
-    random stream is independent of the lane it happens to land on and of
-    whatever else shares the batch. Lanes with temp<=0 take the argmax."""
-    lg = logits[..., :cfg.vocab_size]
-    greedy = jnp.argmax(lg, axis=-1)
-    if key is None:
-        return greedy[:, None].astype(jnp.int32)
-
-    def draw(r, s, l, t):
-        k = jax.random.fold_in(jax.random.fold_in(key, r), s)
-        return jax.random.categorical(
-            k, l.astype(jnp.float32) / jnp.maximum(t, 1e-6))
-
-    samp = jax.vmap(draw)(rids, steps, lg, temps)
-    return jnp.where(temps > 0, samp, greedy)[:, None].astype(jnp.int32)
-
-
 class ServeEngine:
     # Compiled generate fns are shape-specialized; bound the cache so novel
-    # (S, n_tokens) traffic can't grow host/device memory forever. (Bucketing
-    # request shapes to amortize compiles is a ROADMAP follow-up.)
+    # (S, n_tokens) traffic can't grow host/device memory forever. (Session
+    # prefills are bucketed by padded prompt length, so steady traffic sits
+    # well under this; the bound protects against one-off generate shapes.)
     MAX_COMPILED_FNS = 64
 
     def __init__(self, cfg: ModelConfig, params, max_len: int,
@@ -194,12 +166,12 @@ class ServeEngine:
             logits, cache = lm_prefill(cfg, params,
                                        self._inputs(params, prompts),
                                        cache=cache)
-            tok = _sample(cfg, logits[:, -1], t, k, 0)
+            tok = sample_tokens(cfg, logits[:, -1], t, k, 0)
 
             def step(carry, i):
                 tok, cache = carry
                 logits, cache = lm_decode_step(cfg, params, cache, tok)
-                nxt = _sample(cfg, logits[:, -1], t, k, i + 1)
+                nxt = sample_tokens(cfg, logits[:, -1], t, k, i + 1)
                 return (nxt, cache), tok[:, 0]
 
             (_, cache), toks = jax.lax.scan(
@@ -237,16 +209,20 @@ class ServeEngine:
 
     # -- continuous batching over paged caches ------------------------------
     def _build_prefill_commit(self, page_size: int):
-        """jitted (per prompt-length S): batch-1 prefill + scatter of the
-        prompt's cache rows / SSM state into the lane's pages. The pool is
-        donated — admission writes in place."""
+        """jitted (per prompt-length BUCKET): batch-1 prefill of the padded
+        prompt with the true ``length`` as a traced position mask, then a
+        masked scatter of the prompt's cache rows / SSM state into the
+        lane's pages (tail page ids point at the garbage page). The pool is
+        donated — admission writes in place. One compile serves every
+        prompt length in the bucket."""
         cfg = self.cfg
 
-        def fn(params, pool, prompt, page_ids, lane):
+        def fn(params, pool, prompt, length, page_ids, lane):
             logits, pcache = lm_prefill(cfg, params,
-                                        self._inputs(params, prompt))
+                                        self._inputs(params, prompt),
+                                        length=length)
             pool = commit_prefill(cfg, pool, pcache["blocks"], lane,
-                                  page_ids, page_size)
+                                  page_ids, page_size, length=length)
             return logits, pool
 
         return jax.jit(fn, donate_argnums=(1,))
@@ -254,21 +230,24 @@ class ServeEngine:
     def _build_batch_segment(self, segment: int, sampled: bool):
         """jitted fused scan of ``segment`` decode steps over the full lane
         pool. Compiled once per (segment, pool geometry): admission and
-        finish only rewrite the block table / pos / token vectors between
-        calls, never the graph. Emission-before-decode: step i records the
-        carried token, decodes it, and samples the next — matching
-        ``generate``'s scan so greedy outputs are token-identical."""
+        finish only rewrite the block table / pos / token / key vectors
+        between calls, never the graph. Emission-before-decode: step i
+        records the carried token, decodes it, and samples the next —
+        matching ``generate``'s scan so greedy outputs are token-identical.
+        Sampling state rides per lane: each lane folds its own per-request
+        step into its own per-request key (SamplingParams threaded through
+        the lanes by the session)."""
         cfg = self.cfg
 
-        def fn(params, pool, block_table, pos, tok, rids, steps, temps, key):
+        def fn(params, pool, block_table, pos, tok, steps, temps, keys):
             def step(carry, _):
                 tok, pool, pos, steps = carry
                 logits, nc = lm_decode_step_paged(
                     cfg, params,
                     {"blocks": pool, "block_table": block_table, "pos": pos},
                     tok)
-                nxt = _sample_lanes(cfg, logits[:, -1], temps,
-                                    key if sampled else None, rids, steps + 1)
+                nxt = sample_tokens(cfg, logits[:, -1], temps,
+                                    keys if sampled else None, steps + 1)
                 return (nxt, nc["blocks"], nc["pos"], steps + 1), tok[:, 0]
 
             (tok, pool, _, _), toks = jax.lax.scan(
@@ -276,6 +255,16 @@ class ServeEngine:
             return toks, tok, pool
 
         return jax.jit(fn, donate_argnums=(1,))
+
+    def session(self, *, lanes: int = 4, page_size: int = 16,
+                n_pages: Optional[int] = None, segment: int = 1,
+                key: Optional[jax.Array] = None,
+                buckets: Optional[Sequence[int]] = None) -> ServeSession:
+        """Open a streaming serve session: submit/stream/cancel requests at
+        any time over one paged pool (see serve/session.py)."""
+        return ServeSession(self, lanes=lanes, page_size=page_size,
+                            n_pages=n_pages, segment=segment, key=key,
+                            buckets=buckets)
 
     def generate_batch(self,
                        prompts: Sequence,
@@ -286,25 +275,21 @@ class ServeEngine:
                        page_size: int = 16,
                        n_pages: Optional[int] = None,
                        segment: int = 1):
-        """Continuous-batching generation over a paged cache pool.
+        """Continuous-batching generation over a paged cache pool — a thin
+        wrapper over ``session()``: submit every request, run the segment
+        loop until idle, collect results in request order.
 
         prompts: sequence of 1-D int32 token arrays (mixed lengths);
         n_tokens: per-request token budget (int broadcasts). Returns a list
         of (n_tokens_i,) int32 arrays in request order.
 
-        Requests flow through a FCFS scheduler: admitted into one of
-        ``lanes`` decode lanes when their full page budget fits, prefilled
-        individually (one compile per prompt length), then decoded together
-        in fused ``segment``-step scans over the fixed-width lane pool —
-        lanes whose request finished mid-segment compute into the garbage
-        page until the segment boundary frees them. GREEDY decode is
-        token-identical to per-request ``generate`` (the parity oracle);
-        sampled decode folds (request id, step) into ``key`` per lane, so a
-        request's stream doesn't depend on lane placement or co-tenants
-        (but differs from the single-request path's batch-level stream).
+        GREEDY decode is token-identical to per-request ``generate`` (the
+        parity oracle); sampled decode (``key`` given) folds (request id,
+        step) into ``key`` per lane, so a request's stream doesn't depend
+        on lane placement or co-tenants (but differs from the
+        single-request path's batch-level stream). ``temperatures`` without
+        a ``key`` decodes greedily, as before the session redesign.
         """
-        if segment < 1 or page_size < 1 or lanes < 1:
-            raise ValueError("segment, page_size and lanes must be >= 1")
         n = len(prompts)
         n_tok = ([int(n_tokens)] * n if isinstance(n_tokens, int)
                  else [int(t) for t in n_tokens])
@@ -313,96 +298,20 @@ class ServeEngine:
         if len(n_tok) != n or len(temps) != n:
             raise ValueError(f"{n} prompts but {len(n_tok)} n_tokens / "
                              f"{len(temps)} temperatures")
-        table_cols = -(-self.max_len // page_size)
-        if n_pages is None:     # full residency for every lane + garbage page
-            n_pages = lanes * table_cols + 1
-        sched = Scheduler(lanes, n_pages, page_size)
-        reqs = []
-        for i, p in enumerate(prompts):
-            p = np.asarray(p, np.int32).reshape(-1)
-            # validate every budget BEFORE any work: a never-fitting
-            # request must not abort the pool mid-serve, discarding other
-            # requests' already-generated tokens (and must fail under
-            # python -O too, so no asserts here)
-            if n_tok[i] < 1 or p.size < 1:
-                raise ValueError(f"request {i}: empty prompt or zero "
-                                 "token budget")
-            if p.size + n_tok[i] > self.max_len:
-                raise ValueError(
-                    f"request {i}: {p.size}+{n_tok[i]} tokens exceeds "
-                    f"max_len={self.max_len}")
-            req = Request(rid=i, prompt=p, n_tokens=n_tok[i],
-                          temperature=temps[i])
-            sched.check_fits(req)
-            reqs.append(req)
-            sched.submit(req)
-
-        pool_key = ("paged", lanes, page_size, n_pages)
-        pool = self._caches.take(pool_key)
-        if pool is None:
-            pool = paged_pool_init(self.cfg, lanes, n_pages, page_size)
-
-        # host-side device mirror of the lane state (tiny, re-uploaded per
-        # segment; the multi-MiB pool itself only moves via donation)
-        bt = np.zeros((lanes, table_cols), np.int32)
-        pos = np.zeros((lanes,), np.int32)
-        cur = np.zeros((lanes, 1), np.int32)
-        steps = np.zeros((lanes,), np.int32)
-        rids = np.zeros((lanes,), np.int32)
-        temps_v = np.zeros((lanes,), np.float32)
-        k = key if key is not None else jax.random.PRNGKey(0)
-        sampled = key is not None
-
-        while not sched.idle:
-            for req in sched.admit():
-                eff = req.effective_prompt
-                S = int(eff.shape[0])
-                npp = -(-S // page_size)
-                pfn = self._get_fn(
-                    ("prefill_commit", pool_key, S),
-                    lambda: self._build_prefill_commit(page_size))
-                logits, pool = pfn(
-                    self.params, pool, jnp.asarray(eff[None]),
-                    jnp.asarray(req.pages[:npp], jnp.int32),
-                    jnp.asarray(req.lane, jnp.int32))
-                first = _sample(
-                    self.cfg, logits[:, -1], req.temperature,
-                    jax.random.fold_in(k, req.rid)
-                    if sampled and req.temperature > 0 else None,
-                    len(req.emitted))
-                lane = req.lane
-                bt[lane] = 0
-                bt[lane, :len(req.pages)] = req.pages
-                pos[lane] = S
-                cur[lane, 0] = int(first[0, 0])
-                steps[lane] = len(req.emitted)
-                rids[lane] = req.rid
-                temps_v[lane] = req.temperature
-            if not sched.active:    # unreachable given check_fits up front
-                raise RuntimeError("scheduler deadlock: pending requests "
-                                   "but nothing admissible")
-            sfn = self._get_fn(
-                ("segment", pool_key, segment, sampled),
-                lambda: self._build_batch_segment(segment, sampled))
-            toks, cur_d, pool = sfn(
-                self.params, pool, jnp.asarray(bt), jnp.asarray(pos),
-                jnp.asarray(cur), jnp.asarray(rids), jnp.asarray(steps),
-                jnp.asarray(temps_v), k)
-            toks = np.asarray(toks)
-            cur = np.array(cur_d)    # copy: host mirror stays writable
-            pos += segment
-            steps += segment
-            for lane, req in list(sched.active.items()):
-                take = min(segment, req.n_tokens - len(req.emitted))
-                req.emitted.extend(int(t) for t in toks[:take, lane])
-                if req.done:
-                    sched.finish(lane)
-                    bt[lane] = 0
-                    pos[lane] = cur[lane] = steps[lane] = rids[lane] = 0
-                    temps_v[lane] = 0.0
-
-        self._caches.put(pool_key, pool)
-        return [jnp.asarray(r.emitted, jnp.int32) for r in reqs]
+        if key is None:
+            temps = [0.0] * n
+        sess = self.session(lanes=lanes, page_size=page_size,
+                            n_pages=n_pages, segment=segment, key=key)
+        try:
+            # submit everything BEFORE stepping: a never-fitting request
+            # fails here, before any compute is spent on its pool-mates
+            handles = [sess.submit(p, SamplingParams(max_tokens=nt,
+                                                     temperature=t))
+                       for p, nt, t in zip(prompts, n_tok, temps)]
+            sess.run_until_idle()
+            return [h.result() for h in handles]
+        finally:
+            sess.close()
 
     # -- seed per-token loop: parity oracle / benchmark baseline ------------
     def generate_eager(self, prompts: jax.Array, n_tokens: int,
@@ -418,9 +327,10 @@ class ServeEngine:
                                       self._inputs(self.params, prompts),
                                       cache)
         out = []
-        tok = _sample(self.cfg, logits[:, -1], temperature, key, 0)
+        tok = sample_tokens(self.cfg, logits[:, -1], temperature, key, 0)
         for i in range(n_tokens):
             out.append(tok)
             logits, cache = self._decode(self.params, cache, tok)
-            tok = _sample(self.cfg, logits[:, -1], temperature, key, i + 1)
+            tok = sample_tokens(self.cfg, logits[:, -1], temperature, key,
+                                i + 1)
         return jnp.concatenate(out, axis=1)

@@ -62,7 +62,7 @@ def paged_pool_init(cfg: ModelConfig, lanes: int, n_pages: int,
 
 
 def commit_prefill(cfg: ModelConfig, pool, prefill_blocks, lane, page_ids,
-                   page_size: int):
+                   page_size: int, length=None):
     """Scatter a batch-1 prefilled contiguous cache into the pool.
 
     prefill_blocks: ``lm_prefill``'s cache["blocks"] at batch 1 (leaves
@@ -72,6 +72,13 @@ def commit_prefill(cfg: ModelConfig, pool, prefill_blocks, lane, page_ids,
     The last page's tail rows beyond S are zero-filled — they are owned by
     this request alone and masked by its position until overwritten by
     decode. jit-stable in everything but S (one compile per prompt length).
+
+    ``length`` (traced scalar, optional): true prompt length when the
+    prefill was right-padded to a compile bucket (S = bucket >= length).
+    Rows >= length are zeroed before the scatter — identical pool bytes to
+    an unpadded commit — and ``page_ids`` entries past the request's real
+    pages may point at the garbage page 0, which harmlessly absorbs the
+    zeroed tail. One compile then serves every prompt length in the bucket.
     """
     roles = block_roles(cfg)
     npp = page_ids.shape[0]
@@ -86,6 +93,12 @@ def commit_prefill(cfg: ModelConfig, pool, prefill_blocks, lane, page_ids,
                 pad = [(0, 0), (0, npp * page_size - S)] \
                     + [(0, 0)] * (new.ndim - 3)
                 rows = jnp.pad(new[:, 0], pad)
+                if length is not None:
+                    live = jnp.arange(npp * page_size) \
+                        < jnp.asarray(length, jnp.int32)
+                    rows = jnp.where(
+                        live.reshape((1, -1) + (1,) * (rows.ndim - 2)),
+                        rows, 0)
                 rows = rows.reshape((G, npp, page_size) + new.shape[3:])
                 return full.at[:, page_ids].set(rows.astype(full.dtype))
 

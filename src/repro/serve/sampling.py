@@ -1,0 +1,52 @@
+"""One lane-vectorized sampling helper for every serve path.
+
+``sample_tokens`` replaces the old ``_sample`` / ``_sample_lanes`` pair:
+the single-request fused path, the eager oracle loop, the per-request
+prefill first-token draw, and the batched decode-segment scan all call the
+same function. The greedy/sampled split is made on ``key`` (never on a
+possibly-traced temperature), and the key's shape selects the RNG scheme:
+
+  * key is None            — greedy argmax for every row;
+  * key (2,)  + scalar step — ONE batch-level stream: fold the step into
+    the key and draw all rows from it (``generate``/``generate_eager``:
+    a request's stream is a function of its key and step alone);
+  * keys (L,2) + (L,) steps — per-lane streams: each lane folds its own
+    per-request step into its own per-request key, so a request's stream
+    is independent of the lane it lands on and of its co-tenants
+    (continuous batching / sessions). Lanes with temp<=0 take the argmax.
+
+Temperatures may be traced scalars or (L,) vectors; they are never a
+compile key.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig
+
+
+def sample_tokens(cfg: ModelConfig, logits, temperature, key, step):
+    """logits: (B, Vp) last-position logits -> (B, 1) int32 tokens."""
+    lg = logits[..., :cfg.vocab_size]
+    greedy = jnp.argmax(lg, axis=-1)
+    if key is None or (isinstance(temperature, (int, float))
+                       and temperature <= 0.0):
+        return greedy[:, None].astype(jnp.int32)
+
+    temps = jnp.broadcast_to(
+        jnp.asarray(temperature, jnp.float32), lg.shape[:1])
+    if getattr(key, "ndim", 1) == 2:      # (L, 2): per-lane request keys
+        steps = jnp.broadcast_to(jnp.asarray(step, jnp.int32), lg.shape[:1])
+
+        def draw(k, s, l, t):
+            return jax.random.categorical(
+                jax.random.fold_in(k, s),
+                l.astype(jnp.float32) / jnp.maximum(t, 1e-6))
+
+        samp = jax.vmap(draw)(key, steps, lg, temps)
+    else:                                  # (2,): one batch-level stream
+        k = jax.random.fold_in(key, step)
+        samp = jax.random.categorical(
+            k, lg / jnp.maximum(temps[:, None], 1e-6), axis=-1)
+    return jnp.where(temps > 0, samp, greedy)[:, None].astype(jnp.int32)

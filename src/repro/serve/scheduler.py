@@ -1,9 +1,11 @@
-"""Continuous-batching request scheduler — pure host-side bookkeeping.
+"""Re-entrant continuous-batching request scheduler — pure host bookkeeping.
 
 The scheduler owns three resources: LANES (slots in the fixed-width decode
 batch — the jit-stable shape), PAGES (physical cache pages in the paged
 pool; page 0 is reserved as the garbage page), and the FCFS pending queue.
-Per step it can
+It is RE-ENTRANT: ``submit`` may be called at any time — before, between,
+or after decode segments — and the next ``admit`` picks the new request up
+under the same FCFS page-budget rule. Per step it can
 
   * admit  — pop pending requests into free lanes while their full page
     budget fits (admission reserves every page the request can ever need,
@@ -12,37 +14,101 @@ Per step it can
   * evict  — preempt a running request, releasing lane + pages and
     requeueing it at the FRONT of the queue. Already-emitted tokens are
     kept: on re-admission the effective prompt is prompt+emitted and the
-    cache state is recomputed by prefill (recompute-on-preempt — exactly
-    equivalent for attention caches, whose rows depend only on their own
-    token/position).
+    cache state is recomputed by prefill. The recompute CONTRACT: the
+    resumed tail is exactly the stream the engine serves for the
+    effective prompt fresh — not necessarily bit-equal to the
+    uninterrupted stream, because prefill-computed and decode-computed
+    attention rows differ by bf16 reduction order (flash streaming-softmax
+    vs gathered decode) and B⊕LD's sign() activations amplify those ulps
+    into token flips (tests/test_serve_session.py pins the contract);
+  * cancel — drop a request wherever it is: pending requests leave the
+    queue, active requests release lane + pages immediately (the evict
+    path without the requeue), so a queued request can take the freed
+    capacity in the very next admit.
+
+Per-request sampling state lives in ``SamplingParams`` (one dataclass per
+request, threaded through the lanes by the session), not in parallel lists;
+``Request.status`` tracks the QUEUED → PREFILLING → DECODING → DONE
+lifecycle (plus CANCELLED and PREEMPTED) that ``RequestHandle.status``
+surfaces.
 
 No jax here: the device-side mirror (block table, positions, current
-tokens) lives in ``ServeEngine.generate_batch``, which drives this object.
+tokens, lane keys) lives in ``ServeSession``, which drives this object.
 """
 from __future__ import annotations
 
 import dataclasses
+import enum
 from collections import deque
-from typing import Deque, Dict, List, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .paged_cache import pages_for
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray                 # (S,) int32
-    n_tokens: int
+class RequestStatus(enum.Enum):
+    QUEUED = "queued"            # submitted, waiting for a lane + pages
+    PREFILLING = "prefilling"    # admitted; prompt being prefilled
+    DECODING = "decoding"        # live in a decode lane
+    DONE = "done"                # budget exhausted or stop token hit
+    CANCELLED = "cancelled"      # dropped by the caller; partial tokens kept
+    PREEMPTED = "preempted"      # evicted mid-decode; requeued at the front
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling state, threaded through the decode lanes.
+
+    temperature <= 0 decodes greedily; > 0 samples from the request's own
+    stream — ``PRNGKey(seed)`` when ``seed`` is given, else the session key
+    folded with the request id (independent of lane placement either way).
+    ``stop_token`` finishes the request early, releasing its lane + pages
+    before ``max_tokens``; the stop token itself is the last token emitted.
+    """
+    max_tokens: int = 16
     temperature: float = 0.0
-    emitted: List[int] = dataclasses.field(default_factory=list)
-    lane: int = -1
-    pages: Tuple[int, ...] = ()
+    seed: Optional[int] = None
+    stop_token: Optional[int] = None
+
+
+class Request:
+    """One request's full lifecycle state.
+
+    Constructed either with an explicit ``SamplingParams`` (the session
+    path) or with legacy ``n_tokens=``/``temperature=`` keywords (scheduler
+    unit tests, pre-session callers) — both read back through the
+    ``n_tokens``/``temperature`` properties, with ``params`` as the single
+    source of truth.
+    """
+
+    def __init__(self, rid: int, prompt: np.ndarray,
+                 params: Optional[SamplingParams] = None, *,
+                 n_tokens: Optional[int] = None, temperature: float = 0.0):
+        if params is None:
+            params = SamplingParams(
+                max_tokens=16 if n_tokens is None else int(n_tokens),
+                temperature=float(temperature))
+        self.rid = rid
+        self.prompt = prompt
+        self.params = params
+        self.emitted: List[int] = []
+        self.lane: int = -1
+        self.pages: Tuple[int, ...] = ()
+        self.status = RequestStatus.QUEUED
+        self.stopped = False          # stop_token hit before max_tokens
+
+    @property
+    def n_tokens(self) -> int:
+        return self.params.max_tokens
+
+    @property
+    def temperature(self) -> float:
+        return self.params.temperature
 
     @property
     def done(self) -> bool:
-        return len(self.emitted) >= self.n_tokens
+        return self.stopped or len(self.emitted) >= self.params.max_tokens
 
     @property
     def effective_prompt(self) -> np.ndarray:
@@ -53,6 +119,11 @@ class Request:
             return self.prompt
         return np.concatenate(
             [self.prompt, np.asarray(self.emitted, self.prompt.dtype)])
+
+    def __repr__(self):
+        return (f"Request(rid={self.rid}, len={len(self.prompt)}, "
+                f"emitted={len(self.emitted)}/{self.params.max_tokens}, "
+                f"status={self.status.name})")
 
 
 class Scheduler:
@@ -70,6 +141,8 @@ class Scheduler:
 
     # -- queue ---------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Enqueue at any time — including while other requests decode."""
+        req.status = RequestStatus.QUEUED
         self.pending.append(req)
 
     @property
@@ -83,8 +156,8 @@ class Scheduler:
 
     def check_fits(self, req: Request) -> int:
         """Raise unless the request's full page budget can EVER be met.
-        The single source of truth for the admission bound — the engine
-        calls it up front (before any compute) and ``admit`` enforces the
+        The single source of truth for the admission bound — sessions call
+        it at submit time (before any compute) and ``admit`` enforces the
         same rule at the queue head."""
         need = self.pages_needed(req)
         if need > self.n_pages - 1:
@@ -95,7 +168,7 @@ class Scheduler:
                 f"{self.n_pages - 1} allocatable")
         return need
 
-    # -- admit / finish / evict ----------------------------------------------
+    # -- admit / finish / evict / cancel -------------------------------------
     def admit(self) -> List[Request]:
         """FCFS: admit queue-head requests while a lane and their full page
         budget are free. Head-of-line blocking is deliberate — skipping
@@ -108,6 +181,7 @@ class Scheduler:
             req = self.pending.popleft()
             req.lane = self.free_lanes.popleft()
             req.pages = tuple(self.free_pages.popleft() for _ in range(need))
+            req.status = RequestStatus.PREFILLING
             self.active[req.lane] = req
             admitted.append(req)
         return admitted
@@ -120,9 +194,26 @@ class Scheduler:
         return req
 
     def finish(self, lane: int) -> Request:
-        return self._release(lane)
+        req = self._release(lane)
+        req.status = RequestStatus.DONE
+        return req
 
     def evict(self, lane: int) -> Request:
         req = self._release(lane)
+        req.status = RequestStatus.PREEMPTED
         self.pending.appendleft(req)     # preempted work resumes first
         return req
+
+    def cancel(self, req: Request) -> bool:
+        """Drop ``req`` wherever it is. Active requests release their lane
+        and pages immediately (freed capacity is admissible in the next
+        ``admit``); pending requests just leave the queue. Returns False if
+        the request already left the scheduler (done/cancelled)."""
+        if req.lane >= 0 and self.active.get(req.lane) is req:
+            self._release(req.lane)
+        elif req in self.pending:
+            self.pending.remove(req)
+        else:
+            return False
+        req.status = RequestStatus.CANCELLED
+        return True

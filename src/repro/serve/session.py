@@ -1,0 +1,405 @@
+"""Async-style streaming serve API: request handles over a re-entrant core.
+
+``ServeSession`` turns the closed batch loop (hand over a request pool,
+wait for the pool to drain) into an explicit request lifecycle:
+
+    session = engine.session(lanes=4, page_size=16, segment=2)
+    h = session.submit(prompt, SamplingParams(max_tokens=64, stop_token=2))
+    for tok in h.tokens():         # yields as decode segments complete
+        ...
+    h2 = session.submit(other)     # mid-flight: admitted as lanes free up
+    h.cancel()                     # frees the lane + pages immediately
+    session.run_until_idle()
+
+The session drives ONE scheduler/pool through three composable phases per
+``step()`` — ``_admit_and_prefill`` (pop pending requests into free lanes,
+bucketed prefill, commit pages), ``_decode_segment`` (one fused
+``segment``-step scan over the fixed lane pool), ``_drain_finished``
+(harvest emitted tokens, stop-token early finish, release lanes) — so
+callers can interleave submissions, token reads, and cancellations between
+segments. ``ServeEngine.generate_batch`` is a thin wrapper: submit all,
+run until idle, collect.
+
+Prefill compiles are BUCKETED by padded prompt length: a prompt of length
+S is right-padded to the smallest bucket >= S (powers of two by default,
+or an explicit ``buckets=`` tuple) and prefilled with the true length as a
+traced position mask (``lm_prefill(length=...)``), so a live stream of
+ragged prompts reuses a handful of compiled prefill fns instead of one per
+distinct length. Pool bytes after the masked commit are identical to an
+unpadded prefill, so greedy tokens stay bit-identical to ``generate``.
+
+Sampling state is per-request (``SamplingParams``): temperature, optional
+seed (else the session key folded with the request id), token budget, stop
+token. A request's sampled stream is a function of its own key and step
+only — independent of lane placement, co-tenants, and submission timing.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .paged_cache import paged_pool_init
+from .sampling import sample_tokens
+from .scheduler import Request, RequestStatus, SamplingParams, Scheduler
+
+
+def _default_bucket(S: int) -> int:
+    b = 8
+    while b < S:
+        b <<= 1
+    return b
+
+
+def _raw_key(key):
+    """Normalize a PRNG key to the raw (2,) uint32 form the lane mirrors
+    store: modern typed keys (``jax.random.key``) pass through
+    ``key_data``, legacy ``PRNGKey`` arrays pass through unchanged — both
+    work everywhere ``generate`` accepts a key, so they must here too."""
+    if jnp.issubdtype(jnp.asarray(key).dtype, jax.dtypes.prng_key):
+        return jax.random.key_data(key)
+    return key
+
+
+class RequestHandle:
+    """Caller-facing view of one submitted request."""
+
+    def __init__(self, session: "ServeSession", req: Request):
+        self._session = session
+        self._req = req
+
+    @property
+    def rid(self) -> int:
+        return self._req.rid
+
+    @property
+    def status(self) -> RequestStatus:
+        return self._req.status
+
+    @property
+    def tokens_ready(self) -> int:
+        """Tokens already emitted and readable without further stepping."""
+        return len(self._req.emitted)
+
+    def tokens_so_far(self) -> list:
+        """Snapshot of the tokens emitted so far, WITHOUT driving the
+        session — the non-blocking read for poll-style consumers (the
+        ``--stream`` launcher, an HTTP/SSE front-end) that interleave
+        their own ``session.step()`` calls with reads."""
+        return list(self._req.emitted)
+
+    def tokens(self) -> Iterator[int]:
+        """Yield this request's tokens as decode segments complete.
+
+        Drains whatever is already buffered, then drives ``session.step()``
+        (admitting/decoding EVERY live request, not just this one) until
+        the request finishes or is cancelled. Safe to interleave with other
+        handles' iterators — progress is shared.
+        """
+        i = 0
+        while True:
+            while i < len(self._req.emitted):
+                yield self._req.emitted[i]
+                i += 1
+            if self._req.status in (RequestStatus.DONE,
+                                    RequestStatus.CANCELLED):
+                return
+            if not self._session.step():
+                raise RuntimeError(
+                    f"session idle but request {self._req.rid} is "
+                    f"{self._req.status.name}")
+
+    def result(self) -> jax.Array:
+        """Drive the session until this request completes; returns its
+        tokens as a (n,) int32 array (partial if cancelled)."""
+        while self._req.status not in (RequestStatus.DONE,
+                                       RequestStatus.CANCELLED):
+            if not self._session.step():
+                raise RuntimeError(
+                    f"session idle but request {self._req.rid} is "
+                    f"{self._req.status.name}")
+        return jnp.asarray(self._req.emitted, jnp.int32)
+
+    def cancel(self) -> bool:
+        """Drop the request now. An active request releases its lane and
+        pages immediately (reusable by the next admit); already-emitted
+        tokens stay readable. Returns False if it already finished."""
+        req = self._req
+        if req.status in (RequestStatus.DONE, RequestStatus.CANCELLED):
+            return False
+        lane = req.lane
+        ok = self._session.sched.cancel(req)
+        if ok and lane >= 0:
+            self._session._reset_lane(lane)
+        if ok:
+            self._session._handles.pop(req.rid, None)
+        return ok
+
+
+class ServeSession:
+    """One live serving context: a scheduler + paged pool + host mirrors.
+
+    Compiled fns are cached on the ENGINE (keyed by pool geometry), so
+    sessions of the same shape share compiles; the paged pool is taken
+    from the engine's donation-safe cache pool lazily at first admission
+    and returned by ``close()`` (or the context manager).
+    """
+
+    def __init__(self, engine, *, lanes: int = 4, page_size: int = 16,
+                 n_pages: Optional[int] = None, segment: int = 1,
+                 key: Optional[jax.Array] = None,
+                 buckets: Optional[Sequence[int]] = None):
+        if segment < 1 or page_size < 1 or lanes < 1:
+            raise ValueError("segment, page_size and lanes must be >= 1")
+        self.engine = engine
+        self.cfg = engine.cfg
+        self.lanes = lanes
+        self.page_size = page_size
+        self.segment = segment
+        self._table_cols = -(-engine.max_len // page_size)
+        if n_pages is None:    # full residency for every lane + garbage page
+            n_pages = lanes * self._table_cols + 1
+        self.n_pages = n_pages
+        self.sched = Scheduler(lanes, n_pages, page_size)
+        self.key = _raw_key(key) if key is not None else jax.random.PRNGKey(0)
+        self.buckets = tuple(sorted(int(b) for b in buckets)) \
+            if buckets else None
+        self._pool = None
+        self._pool_key = ("paged", lanes, page_size, n_pages)
+        self._closed = False
+        self._next_rid = 0
+        self._handles = {}
+        self._last_toks = None
+        # host-side device mirror of the lane state (tiny, re-uploaded per
+        # segment; the multi-MiB pool itself only moves via donation)
+        self._bt = np.zeros((lanes, self._table_cols), np.int32)
+        self._pos = np.zeros((lanes,), np.int32)
+        self._cur = np.zeros((lanes, 1), np.int32)
+        self._steps = np.zeros((lanes,), np.int32)
+        self._temps = np.zeros((lanes,), np.float32)
+        self._keys = np.zeros((lanes, 2), np.uint32)
+
+    # -- lifecycle -----------------------------------------------------------
+    def submit(self, prompt, params: Optional[SamplingParams] = None
+               ) -> RequestHandle:
+        """Enqueue a request at any time — before, between, or after decode
+        segments. Validates the FULL capacity story up front: an empty
+        prompt, a zero budget, a prompt+budget past ``max_len``, or a page
+        budget the pool can never satisfy raise ``ValueError`` here, before
+        any compute is spent (and before other requests' tokens are at
+        risk). Returns a handle for streaming/result/cancel."""
+        if self._closed:
+            raise RuntimeError("session is closed")
+        p = np.asarray(prompt, np.int32).reshape(-1)
+        if params is None:
+            params = SamplingParams()
+        rid = self._next_rid
+        if params.max_tokens < 1 or p.size < 1:
+            raise ValueError(f"request {rid}: empty prompt or zero "
+                             "token budget")
+        if p.size + params.max_tokens > self.engine.max_len:
+            raise ValueError(
+                f"request {rid}: {p.size}+{params.max_tokens} tokens "
+                f"exceeds max_len={self.engine.max_len}")
+        req = Request(rid=rid, prompt=p, params=params)
+        self.sched.check_fits(req)          # never-fitting page budget
+        self._bucket_len(p.size)            # custom buckets must cover it
+        self._next_rid += 1
+        self.sched.submit(req)
+        handle = RequestHandle(self, req)
+        self._handles[rid] = handle
+        return handle
+
+    def step(self) -> bool:
+        """Drive one scheduling round: admit + prefill pending requests,
+        decode ONE fused segment over the lane pool, drain finished lanes.
+        Returns False (and does nothing) once the session is idle."""
+        if self._closed:
+            raise RuntimeError("session is closed")
+        if self.sched.idle:
+            return False
+        self._admit_and_prefill()
+        if self._decode_segment():
+            self._drain_finished()
+        return True
+
+    def run_until_idle(self) -> None:
+        while self.step():
+            pass
+
+    def preempt(self, handle: RequestHandle) -> bool:
+        """Evict a live request: its lane and pages free immediately, the
+        request requeues at the FRONT of the queue (status PREEMPTED), and
+        re-admission recomputes its cache by prefilling prompt+emitted.
+        The resumed tail is exactly the stream the engine would serve for
+        that effective prompt fresh (see scheduler.py on why recompute is
+        oracle-consistent rather than bit-equal to the uninterrupted
+        stream under Boolean numerics)."""
+        req = handle._req
+        if req.lane < 0 or self.sched.active.get(req.lane) is not req:
+            return False
+        lane = req.lane
+        self.sched.evict(lane)
+        self._reset_lane(lane)
+        return True
+
+    @property
+    def idle(self) -> bool:
+        return self.sched.idle
+
+    def close(self) -> None:
+        """Cancel anything outstanding and return the paged pool to the
+        engine's cache pool for the next session of this geometry."""
+        if self._closed:
+            return
+        for h in list(self._handles.values()):
+            h.cancel()
+        if self._pool is not None:
+            self.engine._caches.put(self._pool_key, self._pool)
+            self._pool = None
+        self._closed = True
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- phases composed by step() -------------------------------------------
+    def _bucket_len(self, S: int, strict: bool = True) -> int:
+        if self.buckets is not None:
+            for b in self.buckets:
+                if b >= S:
+                    return b
+            if strict:
+                raise ValueError(f"no prefill bucket >= prompt length {S} "
+                                 f"(buckets={self.buckets})")
+        # admission never hard-fails mid-serve: a preempted request whose
+        # effective prompt (prompt+emitted) outgrew an explicit bucket set
+        # takes one extra pow-2 compile instead of crashing the session
+        return _default_bucket(S)
+
+    def _lane_key(self, req: Request) -> np.ndarray:
+        if req.params.seed is not None:
+            k = _raw_key(jax.random.PRNGKey(req.params.seed))
+        else:
+            k = jax.random.fold_in(self.key, req.rid)
+        return np.asarray(k, np.uint32)
+
+    def _ensure_pool(self):
+        if self._pool is None:
+            self._pool = self.engine._caches.take(self._pool_key)
+            if self._pool is None:
+                self._pool = paged_pool_init(self.cfg, self.lanes,
+                                             self.n_pages, self.page_size)
+
+    def _take_pool(self):
+        """Detach the pool before a donating dispatch: donation invalidates
+        the buffers even when the dispatch later fails, so on an exception
+        ``self._pool`` must be None — ``close()`` then skips the put and the
+        engine cache never sees a poisoned tree (CachePool.take contract)."""
+        self._ensure_pool()
+        pool, self._pool = self._pool, None
+        return pool
+
+    def _reset_lane(self, lane: int) -> None:
+        """Point a released lane at the garbage page: its in-flight segment
+        writes land on page 0 and its position masks every read."""
+        self._bt[lane] = 0
+        self._pos[lane] = self._cur[lane] = self._steps[lane] = 0
+        self._temps[lane] = 0.0
+        self._keys[lane] = 0
+
+    def _admit_and_prefill(self):
+        """Pop pending requests into free lanes and prefill each through
+        its length bucket: pad to the bucket, prefill with the true length
+        as a traced mask, scatter the masked rows into the request's pages
+        (bucket-tail page ids point at the garbage page), sample the first
+        token, and arm the lane mirrors."""
+        admitted = self.sched.admit()
+        for req in admitted:
+            eff = req.effective_prompt
+            S = int(eff.shape[0])
+            bucket = self._bucket_len(S, strict=False)
+            npp_b = -(-bucket // self.page_size)
+            npp_t = -(-S // self.page_size)
+            page_ids = np.zeros((npp_b,), np.int32)
+            page_ids[:npp_t] = req.pages[:npp_t]
+            padded = np.zeros((bucket,), np.int32)
+            padded[:S] = eff
+            pfn = self.engine._get_fn(
+                ("prefill_commit", self._pool_key, bucket),
+                lambda: self.engine._build_prefill_commit(self.page_size))
+            logits, self._pool = pfn(
+                self.engine.params, self._take_pool(),
+                jnp.asarray(padded[None]), jnp.asarray(S, jnp.int32),
+                jnp.asarray(page_ids), jnp.asarray(req.lane, jnp.int32))
+            lane_key = self._lane_key(req)
+            first = sample_tokens(
+                self.cfg, logits[:, -1], req.params.temperature,
+                jnp.asarray(lane_key) if req.params.temperature > 0 else None,
+                len(req.emitted))
+            lane = req.lane
+            self._bt[lane] = 0
+            self._bt[lane, :len(req.pages)] = req.pages
+            self._pos[lane] = S
+            self._cur[lane, 0] = int(first[0, 0])
+            self._steps[lane] = len(req.emitted)
+            self._temps[lane] = req.params.temperature
+            self._keys[lane] = lane_key
+            req.status = RequestStatus.DECODING
+        return admitted
+
+    def _decode_segment(self) -> bool:
+        """One fused ``segment``-step scan over the full lane pool; lanes
+        whose request finished or was cancelled compute into the garbage
+        page until the boundary. Returns False when no lane is live."""
+        if not self.sched.active:
+            if self.sched.pending:   # unreachable given check_fits at submit
+                raise RuntimeError("scheduler deadlock: pending requests "
+                                   "but nothing admissible")
+            return False
+        # the sampled/greedy split is per SEGMENT, from the lanes actually
+        # live in it — all-greedy traffic never pays the per-step RNG work,
+        # and both variants stay cached for a mixed session
+        sampled = any(r.params.temperature > 0
+                      for r in self.sched.active.values())
+        sfn = self.engine._get_fn(
+            ("segment", self._pool_key, self.segment, sampled),
+            lambda: self.engine._build_batch_segment(self.segment, sampled))
+        toks, cur_d, self._pool = sfn(
+            self.engine.params, self._take_pool(), jnp.asarray(self._bt),
+            jnp.asarray(self._pos), jnp.asarray(self._cur),
+            jnp.asarray(self._steps), jnp.asarray(self._temps),
+            jnp.asarray(self._keys))
+        self._last_toks = np.asarray(toks)
+        self._cur = np.array(cur_d)     # copy: host mirror stays writable
+        self._pos += self.segment
+        self._steps += self.segment
+        return True
+
+    def _drain_finished(self):
+        """Harvest the segment's tokens into each live request, apply
+        stop-token early finish, and release completed lanes (freed pages
+        are admissible in the next step's admit)."""
+        finished = []
+        for lane, req in list(self.sched.active.items()):
+            take = min(self.segment,
+                       req.params.max_tokens - len(req.emitted))
+            new = [int(t) for t in self._last_toks[:take, lane]]
+            stop = req.params.stop_token
+            if stop is not None and stop in new:
+                new = new[:new.index(stop) + 1]
+                req.stopped = True
+            req.emitted.extend(new)
+            if req.done:
+                self.sched.finish(lane)
+                self._reset_lane(lane)
+                # handles stay valid (they hold the Request directly); the
+                # session just stops tracking finished work, so a long-lived
+                # session doesn't accumulate every request it ever served
+                self._handles.pop(req.rid, None)
+                finished.append(req)
+        return finished

@@ -1,0 +1,330 @@
+"""Streaming session API validation.
+
+Four layers, mirroring the PR contract:
+  1. ACCEPTANCE parity — greedy tokens from a ``ServeSession`` under live
+     traffic (submits injected mid-flight, a cancellation whose lane is
+     reused by a later request) are identical to sequential
+     ``ServeEngine.generate`` across dense, packed, kv-quant, ssm and
+     hybrid configs; a cancelled request's partial tokens are a prefix of
+     its sequential stream;
+  2. scheduler edge cases through the session: submit-while-running
+     admission, cancellation mid-decode freeing pages for a queued
+     request, preempt/resume (evict + recompute) parity, stop-token early
+     finish releasing the lane before ``max_tokens``;
+  3. request lifecycle — status transitions, the ``tokens()`` iterator
+     yielding mid-flight, capacity validation at submit time (before any
+     compute), per-request seeds;
+  4. compile discipline — prefill retraces bounded by the bucket count,
+     one segment fn regardless of traffic order.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import lm_init
+from repro.serve import (RequestStatus, SamplingParams, ServeEngine)
+
+RNG = np.random.default_rng(0)
+
+
+def _mixed_prompts(cfg, lens):
+    return [RNG.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+            for L in lens]
+
+
+def _engine(arch="gemma2-2b", packed=False, quant=False, max_len=32):
+    cfg = get_smoke(arch)
+    if quant:
+        cfg = cfg.scaled(kv_cache_quant=True)
+    params, _ = lm_init(jax.random.PRNGKey(0), cfg)
+    return ServeEngine(cfg, params, max_len=max_len, packed=packed), cfg
+
+
+def _ref(engine, p, n):
+    return np.asarray(engine.generate(jnp.asarray(p[None]), n)[0])
+
+
+# ---------------------------------------------------------------------------
+# 1. acceptance parity: live session traffic == sequential generate
+# ---------------------------------------------------------------------------
+def _assert_live_session_matches_sequential(engine, cfg, lens, ntoks,
+                                            page_size):
+    """Two requests up front, two injected mid-flight, one cancelled
+    mid-decode (its lane reused by a fifth), all token-identical to the
+    sequential oracle (the cancelled one as a prefix)."""
+    prompts = _mixed_prompts(cfg, lens)
+    with engine.session(lanes=2, page_size=page_size, segment=2) as sess:
+        handles = [sess.submit(p, SamplingParams(max_tokens=n))
+                   for p, n in zip(prompts[:2], ntoks[:2])]
+        assert sess.step()                     # admit + first segment
+        # mid-flight submissions while both lanes are busy
+        handles += [sess.submit(p, SamplingParams(max_tokens=n))
+                    for p, n in zip(prompts[2:4], ntoks[2:4])]
+        assert sess.step()
+        victim = next(h for h in handles
+                      if h.status == RequestStatus.DECODING)
+        got_before_cancel = victim.tokens_ready
+        assert victim.cancel()                 # frees the lane mid-decode
+        # the freed lane must serve a later request
+        handles.append(sess.submit(prompts[4],
+                                   SamplingParams(max_tokens=ntoks[4])))
+        sess.run_until_idle()
+    for h, p, n in zip(handles, prompts, ntoks):
+        ref = _ref(engine, p, n)
+        if h is victim:
+            assert h.status == RequestStatus.CANCELLED
+            got = np.asarray(h.tokens_so_far(), np.int32)
+            assert got_before_cancel <= len(got) < n
+            np.testing.assert_array_equal(got, ref[:len(got)])
+        else:
+            assert h.status == RequestStatus.DONE
+            np.testing.assert_array_equal(np.asarray(h.result()), ref)
+
+
+LENS, NTOKS = [5, 8, 11, 6, 9], [6, 3, 8, 5, 4]
+
+
+@pytest.mark.parametrize("packed", [False, True])
+def test_live_session_matches_sequential_dense(packed):
+    engine, cfg = _engine(packed=packed)
+    _assert_live_session_matches_sequential(engine, cfg, LENS, NTOKS, 4)
+
+
+def test_live_session_matches_sequential_kv_quant():
+    engine, cfg = _engine(quant=True)
+    _assert_live_session_matches_sequential(engine, cfg, LENS, NTOKS, 4)
+
+
+@pytest.mark.parametrize("arch", ["falcon-mamba-7b", "jamba-1.5-large-398b"])
+def test_live_session_matches_sequential_ssm_hybrid(arch):
+    """Lane-indexed SSM state (and hybrid mamba+attn+MoE groups): bucketed
+    masked prefill must leave the recurrence state bit-identical."""
+    engine, cfg = _engine(arch)
+    _assert_live_session_matches_sequential(engine, cfg,
+                                            [5, 7, 9, 6, 8], [6, 3, 5, 4, 4],
+                                            8)
+
+
+# ---------------------------------------------------------------------------
+# 2. scheduler edge cases through the session
+# ---------------------------------------------------------------------------
+def test_cancel_mid_decode_frees_pages_for_queued_request():
+    """A hogs every allocatable page; B waits on pages (a lane is free).
+    Cancelling A admits B on the next step, and B's tokens are unaffected
+    by having queued behind a cancelled co-tenant."""
+    engine, cfg = _engine()
+    pa, pb = _mixed_prompts(cfg, [8, 4])
+    with engine.session(lanes=2, page_size=4, n_pages=5) as sess:
+        a = sess.submit(pa, SamplingParams(max_tokens=8))    # 4 pages = all
+        assert sess.step()
+        b = sess.submit(pb, SamplingParams(max_tokens=4))    # needs 2
+        assert sess.step()
+        assert a.status == RequestStatus.DECODING
+        assert b.status == RequestStatus.QUEUED              # blocked on pages
+        assert a.cancel()
+        assert len(sess.sched.free_pages) == 4               # pages back
+        assert sess.step()
+        assert b.status in (RequestStatus.DECODING, RequestStatus.DONE)
+        out_b = b.result()
+    np.testing.assert_array_equal(np.asarray(out_b), _ref(engine, pb, 4))
+
+
+def test_preempt_resume_follows_effective_prompt_oracle():
+    """Evict + recompute: the evicted request keeps its emitted prefix and,
+    on re-admission, continues with EXACTLY the stream the engine serves
+    for prompt+emitted (the recompute contract — see scheduler.py: Boolean
+    activations amplify prefill-vs-decode reduction-order ulps, so the
+    resumed tail is oracle-consistent rather than bit-equal to the
+    uninterrupted stream). The queued request it yielded to is untouched."""
+    engine, cfg = _engine()
+    pa, pb = _mixed_prompts(cfg, [6, 5])
+    ref = _ref(engine, pa, 8)
+    with engine.session(lanes=1, page_size=4, segment=2) as sess:
+        a = sess.submit(pa, SamplingParams(max_tokens=8))
+        b = sess.submit(pb, SamplingParams(max_tokens=4))
+        assert sess.step()
+        assert a.status == RequestStatus.DECODING and a.tokens_ready == 2
+        assert sess.preempt(a)
+        assert a.status == RequestStatus.PREEMPTED
+        assert not sess.sched.active and a.tokens_ready == 2
+        sess.run_until_idle()
+        got_a = np.asarray(a.result())
+        np.testing.assert_array_equal(got_a[:2], ref[:2])    # prefix kept
+        # resumed tail == serving the effective prompt fresh
+        eff = np.concatenate([pa, got_a[:2].astype(np.int32)])
+        np.testing.assert_array_equal(got_a[2:], _ref(engine, eff, 6))
+        # the co-tenant (admitted only after a finished) is unaffected
+        np.testing.assert_array_equal(np.asarray(b.result()),
+                                      _ref(engine, pb, 4))
+
+
+def test_stop_token_early_finish_releases_lane():
+    """A stop token mid-stream finishes the request (stop token emitted
+    last), releases its lane + pages before max_tokens, and later tokens of
+    the sequential stream are never produced."""
+    engine, cfg = _engine()
+    (p,) = _mixed_prompts(cfg, [6])
+    ref = _ref(engine, p, 8)
+    stop = int(ref[3])
+    cut = int(np.argmax(ref == stop))        # earliest occurrence wins
+    with engine.session(lanes=2, page_size=4) as sess:
+        h = sess.submit(p, SamplingParams(max_tokens=8, stop_token=stop))
+        sess.run_until_idle()
+        assert h.status == RequestStatus.DONE
+        assert not sess.sched.active         # lane released early
+        assert len(sess.sched.free_pages) == sess.n_pages - 1
+    got = np.asarray(h.result())
+    assert got.shape[0] == cut + 1 < 8
+    np.testing.assert_array_equal(got, ref[:cut + 1])
+
+
+def test_submit_while_running_is_admitted_next_step():
+    engine, cfg = _engine()
+    pa, pb = _mixed_prompts(cfg, [5, 7])
+    with engine.session(lanes=2, page_size=4, segment=1) as sess:
+        a = sess.submit(pa, SamplingParams(max_tokens=6))
+        assert sess.step()
+        b = sess.submit(pb, SamplingParams(max_tokens=4))   # mid-flight
+        assert b.status == RequestStatus.QUEUED
+        assert sess.step()
+        assert b.status == RequestStatus.DECODING           # re-entrant admit
+        sess.run_until_idle()
+    np.testing.assert_array_equal(np.asarray(a.result()),
+                                  _ref(engine, pa, 6))
+    np.testing.assert_array_equal(np.asarray(b.result()),
+                                  _ref(engine, pb, 4))
+
+
+# ---------------------------------------------------------------------------
+# 3. request lifecycle
+# ---------------------------------------------------------------------------
+def test_status_lifecycle_and_streaming_iterator():
+    engine, cfg = _engine()
+    (p,) = _mixed_prompts(cfg, [6])
+    with engine.session(lanes=2, page_size=4, segment=2) as sess:
+        h = sess.submit(p, SamplingParams(max_tokens=6))
+        assert h.status == RequestStatus.QUEUED and h.tokens_ready == 0
+        it = h.tokens()
+        first = next(it)                     # drives the session itself
+        assert h.status == RequestStatus.DECODING
+        assert 0 < h.tokens_ready < 6        # mid-flight, not pool drain
+        rest = list(it)
+        assert h.status == RequestStatus.DONE
+        assert not sess._handles        # finished work is untracked (no
+        assert h.tokens_ready == 6      # leak) but the handle stays live
+    np.testing.assert_array_equal(np.asarray([first] + rest, np.int32),
+                                  _ref(engine, p, 6))
+
+
+def test_submit_validates_capacity_before_any_compute():
+    engine, cfg = _engine(max_len=16)
+    with engine.session(lanes=2, page_size=4, n_pages=4) as sess:
+        with pytest.raises(ValueError, match="max_len"):
+            sess.submit(_mixed_prompts(cfg, [12])[0],
+                        SamplingParams(max_tokens=8))
+        with pytest.raises(ValueError, match="pages"):
+            # fits max_len but can NEVER fit 3 allocatable pages
+            sess.submit(_mixed_prompts(cfg, [8])[0],
+                        SamplingParams(max_tokens=8))
+        with pytest.raises(ValueError, match="empty prompt or zero"):
+            sess.submit(np.zeros((0,), np.int32), SamplingParams(max_tokens=4))
+        with pytest.raises(ValueError, match="empty prompt or zero"):
+            sess.submit(_mixed_prompts(cfg, [4])[0],
+                        SamplingParams(max_tokens=0))
+    assert not engine._fns               # failed before any work
+    assert sess.idle
+
+
+def test_closed_session_rejects_use_and_returns_pool():
+    engine, cfg = _engine()
+    (p,) = _mixed_prompts(cfg, [5])
+    sess = engine.session(lanes=2, page_size=4)
+    h = sess.submit(p, SamplingParams(max_tokens=4))
+    sess.step()
+    sess.close()
+    assert h.status == RequestStatus.CANCELLED   # outstanding work dropped
+    assert any(isinstance(k, tuple) and k and k[0] == "paged"
+               for k in engine._caches._entries)
+    with pytest.raises(RuntimeError, match="closed"):
+        sess.submit(p, SamplingParams(max_tokens=4))
+    with pytest.raises(RuntimeError, match="closed"):
+        sess.step()
+
+
+def test_sampling_params_seed_is_lane_and_session_independent():
+    """A per-request seed pins the request's stream regardless of session
+    key, co-tenants, or lane placement."""
+    engine, cfg = _engine()
+    (p,) = _mixed_prompts(cfg, [6])
+    sp = SamplingParams(max_tokens=6, temperature=0.8, seed=7)
+
+    with engine.session(lanes=1, page_size=4,
+                        key=jax.random.PRNGKey(1)) as sess:
+        out_a = np.asarray(sess.submit(p, sp).result())
+    with engine.session(lanes=3, page_size=4,
+                        key=jax.random.PRNGKey(2)) as sess:
+        other = sess.submit(_mixed_prompts(cfg, [5])[0],
+                            SamplingParams(max_tokens=6, temperature=1.1))
+        out_b = np.asarray(sess.submit(p, sp).result())
+        other.result()
+    np.testing.assert_array_equal(out_a, out_b)
+    assert (out_a >= 0).all() and (out_a < cfg.vocab_size).all()
+
+
+def test_session_accepts_modern_typed_prng_keys():
+    """Anything ``generate`` accepts as a key, sessions must too: a typed
+    ``jax.random.key`` stream is identical to its legacy ``PRNGKey``
+    equivalent (same key data → same lane folds)."""
+    engine, cfg = _engine()
+    (p,) = _mixed_prompts(cfg, [6])
+    sp = SamplingParams(max_tokens=5, temperature=0.9)
+    with engine.session(lanes=1, page_size=4, key=jax.random.key(3)) as sess:
+        out_typed = np.asarray(sess.submit(p, sp).result())
+    with engine.session(lanes=1, page_size=4,
+                        key=jax.random.PRNGKey(3)) as sess:
+        out_legacy = np.asarray(sess.submit(p, sp).result())
+    np.testing.assert_array_equal(out_typed, out_legacy)
+
+
+# ---------------------------------------------------------------------------
+# 4. compile discipline: retraces bounded by the bucket count
+# ---------------------------------------------------------------------------
+def test_prefill_compiles_bounded_by_bucket_count():
+    """9 distinct prompt lengths (4..12) must land in exactly two pow-2
+    buckets (8, 16): two prefill compiles, one segment compile — retraces
+    are bounded by buckets, not by distinct lengths."""
+    engine, cfg = _engine()
+    lens = list(range(4, 13))
+    prompts = _mixed_prompts(cfg, lens)
+    with engine.session(lanes=2, page_size=4, segment=2) as sess:
+        handles = [sess.submit(p, SamplingParams(max_tokens=3))
+                   for p in prompts]
+        sess.run_until_idle()
+        for h, p in zip(handles, prompts):
+            np.testing.assert_array_equal(np.asarray(h.result()),
+                                          _ref(engine, p, 3))
+    pf = [k for k in engine._fns if k[0] == "prefill_commit"]
+    seg = [k for k in engine._fns if k[0] == "segment"]
+    assert len(pf) == 2                      # buckets {8, 16}
+    assert len(seg) == 1
+
+
+def test_custom_buckets_single_compile():
+    """An explicit buckets= tuple pins the compile set: every prompt pads
+    to 16, one prefill fn total, tokens still oracle-identical (the masked
+    prefill is what makes deep padding safe)."""
+    engine, cfg = _engine()
+    prompts = _mixed_prompts(cfg, [4, 9, 13])
+    with engine.session(lanes=2, page_size=4, buckets=(16,)) as sess:
+        handles = [sess.submit(p, SamplingParams(max_tokens=4))
+                   for p in prompts]
+        sess.run_until_idle()
+        for h, p in zip(handles, prompts):
+            np.testing.assert_array_equal(np.asarray(h.result()),
+                                          _ref(engine, p, 4))
+        with pytest.raises(ValueError, match="bucket"):
+            sess.submit(_mixed_prompts(cfg, [20])[0],
+                        SamplingParams(max_tokens=4))
+    assert len([k for k in engine._fns if k[0] == "prefill_commit"]) == 1
