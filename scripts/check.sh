@@ -26,4 +26,8 @@ echo "== streaming session parity gate =="
 python -m pytest -q tests/test_serve_session.py \
     -k "matches_sequential or bucket"
 
+echo "== prefix-cache bit-identity gate =="
+python -m pytest -q tests/test_prefix_cache.py \
+    -k "bit_identical or partial_hit"
+
 echo "check.sh: all green"

@@ -14,6 +14,12 @@ submitted mid-flight — the async serve API):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --smoke \
         --stream --requests 8 --lanes 4 --gen 16
+
+Prefix caching (requests share a system prompt; cache hits prefill only
+their unique tail — hit-rate/CoW/eviction stats printed at drain):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --smoke \
+        --stream --prefix-cache --requests 8 --lanes 4 --gen 16
 """
 from __future__ import annotations
 
@@ -49,6 +55,10 @@ def main():
                     help="(--continuous/--stream) cache page size in tokens")
     ap.add_argument("--segment", type=int, default=2,
                     help="(--stream) decode steps between scheduling points")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="(--stream) radix-indexed prompt-page sharing: "
+                         "requests share a system prompt; cache hits "
+                         "prefill only their unique tail")
     args = ap.parse_args()
 
     import jax
@@ -74,10 +84,25 @@ def main():
         import numpy as np
 
         rng = np.random.default_rng(1)
-        prompts = [rng.integers(0, cfg.vocab_size,
-                                (int(rng.integers(4, args.prompt_len + 1)),)
-                                ).astype(np.int32)
-                   for _ in range(args.requests)]
+        if args.prefix_cache:
+            # the traffic shape prefix caching exists for: one shared
+            # system prompt, short unique tails — capped at --prompt-len
+            # so every prompt fits the engine's max_len
+            sys_len = min(max(args.prompt_len * 3 // 4, 1),
+                          max(args.prompt_len - 1, 1))
+            sys_p = rng.integers(0, cfg.vocab_size, (sys_len,)
+                                 ).astype(np.int32)
+            prompts = [np.concatenate([sys_p, rng.integers(
+                0, cfg.vocab_size,
+                (int(rng.integers(1, max(args.prompt_len - sys_len, 1)
+                                  + 1)),)).astype(np.int32)]
+                )[:args.prompt_len]
+                       for _ in range(args.requests)]
+        else:
+            prompts = [rng.integers(
+                0, cfg.vocab_size,
+                (int(rng.integers(4, args.prompt_len + 1)),)
+            ).astype(np.int32) for _ in range(args.requests)]
         gens = [int(rng.integers(max(args.gen // 2, 1), args.gen + 1))
                 for _ in range(args.requests)]
 
@@ -85,7 +110,8 @@ def main():
         from repro.serve import SamplingParams
 
         with engine.session(lanes=args.lanes, page_size=args.page_size,
-                            segment=args.segment) as sess:
+                            segment=args.segment,
+                            prefix_cache=args.prefix_cache) as sess:
             # submit half up front, inject the rest mid-flight — the
             # scheduler is re-entrant, admission happens between segments
             handles = [sess.submit(p, SamplingParams(max_tokens=g))
@@ -113,6 +139,15 @@ def main():
                         printed[i] = h.tokens_ready
             dt = time.time() - t0
             total = sum(h.tokens_ready for h in handles)
+            if args.prefix_cache:
+                st = sess.prefix.stats
+                print(f"[serve] prefix cache: {st['exact_hits']} exact + "
+                      f"{st['partial_hits']} partial hits / "
+                      f"{st['lookups']} lookups "
+                      f"({100 * sess.prefix.hit_rate:.0f}% hit rate, "
+                      f"{st['hit_tokens']} prompt tokens served from cache,"
+                      f" {st['cow_forks']} CoW forks, "
+                      f"{st['evicted_pages']} pages LRU-evicted)")
         print(f"[serve] stream: {args.requests} requests over {args.lanes} "
               f"lanes in {dt:.2f}s ({total/dt:.1f} tok/s aggregate, "
               f"first tokens after {ttft:.2f}s — no wait for pool drain)")

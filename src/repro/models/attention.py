@@ -149,6 +149,88 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return out.astype(q.dtype)
 
 
+def flash_attention_abs(q, k, v, q_pos, k_pos, k_valid, *, window: int = 0,
+                        softcap_val: float = 0.0, chunk: int = 1024):
+    """Online-softmax attention with EXPLICIT absolute positions.
+
+    The prefix-cache tail prefill attends queries at absolute positions
+    ``q_pos`` (offset + tail index) over keys at ``k_pos`` — a cached
+    prefix gathered from pool pages concatenated with the tail's own keys
+    — so index-based causality (``flash_attention``) no longer applies:
+    masking is ``k_valid & (k_pos <= q_pos)`` (& the sliding window),
+    entirely in position space.
+
+    q: (B, T, H, hd); k/v: (B, K, H, hd) (kv already group-broadcast);
+    q_pos: (T,) int32; k_pos: (K,) int32; k_valid: (K,) bool (traced —
+    masks prefix-pad and bucket-pad rows). Scans KV in ``chunk``-row
+    chunks like ``flash_attention``; never materializes (T, K).
+    """
+    B, T, H, hd = q.shape
+    K = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    ck = min(chunk, K)
+    nk = -(-K // ck)
+    pad = ((0, 0), (0, nk * ck - K), (0, 0), (0, 0))
+    kb = jnp.pad(k, pad).reshape(B, nk, ck, H, hd).transpose(1, 0, 3, 2, 4)
+    vb = jnp.pad(v, pad).reshape(B, nk, ck, H, hd).transpose(1, 0, 3, 2, 4)
+    kpb = jnp.pad(k_pos, (0, nk * ck - K)).reshape(nk, ck)
+    kvb = jnp.pad(k_valid, (0, nk * ck - K)).reshape(nk, ck)
+    qt = q.transpose(0, 2, 1, 3)                    # (B, H, T, hd)
+
+    def kv_step(carry, inp):
+        m, l, acc = carry
+        k_chunk, v_chunk, kpos, kval = inp
+        s = jnp.einsum("bhqd,bhkd->bhqk", qt, k_chunk,
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap(s, softcap_val)
+        valid = kval[None, :] & (kpos[None, :] <= q_pos[:, None])
+        if window > 0:
+            valid &= q_pos[:, None] - kpos[None, :] < window
+        s = jnp.where(valid[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(v_chunk.dtype), v_chunk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, T), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, T), jnp.float32)
+    a0 = jnp.zeros((B, H, T, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, kpb, kvb))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def gather_prefix_kv(cfg: ModelConfig, bcache, page_ids):
+    """Gather a cached prefix's K/V rows out of one block's page pool.
+
+    bcache: a stacked-groups pool block ({"k"/"v": (G, n_pages, page, KVp,
+    hd)} plus scale pools under kv_cache_quant); page_ids: (npp,) int32
+    physical pages (garbage-page 0 padding allowed — rows masked by the
+    caller's ``prefix_len``). Returns {"k"/"v": (G, 1, npp*page, KVp, hd)}
+    fp32-dequantized — EXACTLY the bytes decode would read for those rows,
+    which is what makes a tail prefill consistent with decoding over the
+    same pages. The leading G axis lets the result ride the block scan as
+    xs alongside the stacked params.
+    """
+    npp = page_ids.shape[0]
+    page = bcache["k"].shape[2]
+
+    def rows(name):
+        g = bcache[name][:, page_ids]            # (G, npp, page, ...)
+        g = g.reshape((g.shape[0], npp * page) + g.shape[3:])
+        return g[:, None]                        # (G, 1, npp*page, ...)
+
+    k, v = rows("k"), rows("v")
+    if cfg.kv_cache_quant:
+        return {"k": kv_dequant(k, rows("k_scale")),
+                "v": kv_dequant(v, rows("v_scale"))}
+    return {"k": kv_dequant(k), "v": kv_dequant(v)}
+
+
 def attention_apply(cfg: ModelConfig, p, x, positions, *,
                     local: bool = False, axis_size: int = 16):
     """Full training/prefill attention block body (no residual/norm)."""
@@ -393,9 +475,17 @@ def attention_decode_paged(cfg: ModelConfig, p, x, cache, block_table, pos,
     qg = q[:, 0].reshape(B, kvp, n_rep, hd)
 
     # (page, offset) of each lane's write; lanes past their allocation land
-    # on table entries that are 0 (the garbage page) by construction.
-    col = jnp.clip(pos // page, 0, C - 1)
-    page_id = jnp.take_along_axis(block_table, col[:, None], axis=1)[:, 0]
+    # on table entries that are 0 (the garbage page) by construction, and
+    # lanes past the TABLE itself (segment overrun of a request whose page
+    # count fills every column) are routed to the garbage page explicitly —
+    # clipping the column would WRAP the write onto the lane's last real
+    # page, corrupting prompt rows that prefix caching later re-serves.
+    col = pos // page
+    page_id = jnp.where(
+        col < C,
+        jnp.take_along_axis(block_table, jnp.clip(col, 0, C - 1)[:, None],
+                            axis=1)[:, 0],
+        0)
     off = pos % page
 
     quant = cache["k"].dtype == jnp.int8

@@ -315,12 +315,31 @@ def lm_decode_step_paged(cfg: ModelConfig, params, cache, tokens):
 # cache buffer end to end.
 # ---------------------------------------------------------------------------
 def _apply_block_prefill(cfg: ModelConfig, bp, role, x, positions,
-                         length=None):
+                         length=None, prefix=None, prefix_len=None,
+                         ssm_init=None, state_at=None):
+    """One block of (possibly tail-) prefill. Returns (x, cache entry,
+    snap) — ``snap`` is the mamba page-boundary state snapshots when
+    ``state_at`` is set (None otherwise / for attention blocks).
+
+    ``prefix`` ({"k"/"v": (1, P, KVp, hd)} fp32, rows valid below
+    ``prefix_len``): a cached prefix's K/V gathered from pool pages —
+    queries attend over prefix + tail with absolute-position masking.
+    ``ssm_init``: the prefix-boundary mamba state the recurrence resumes
+    from. Both None ⇒ exactly the cold prefill graph.
+    """
+    snap = None
     h = rmsnorm_apply(bp["norm1"], x)
     if role["mixer"] == "mamba":
-        mix, (h_last, conv_state) = M.mamba_apply(cfg, bp["mamba"], h,
-                                                  return_state=True,
-                                                  length=length)
+        h0 = conv0 = None
+        if ssm_init is not None:
+            h0, conv0 = ssm_init["h"], ssm_init["conv"]
+        res = M.mamba_apply(cfg, bp["mamba"], h, h0=h0, conv0=conv0,
+                            return_state=True, length=length,
+                            state_at=state_at)
+        if state_at is not None:
+            mix, (h_last, conv_state), snap = res
+        else:
+            mix, (h_last, conv_state) = res
         new_c = {"h": h_last, "conv": conv_state.astype(jnp.float32)}
     else:
         local = role["mixer"] == "attn_local"
@@ -330,10 +349,28 @@ def _apply_block_prefill(cfg: ModelConfig, bp, role, x, positions,
         kvp = cfg.kv_heads_padded()
         kk = A._repeat_kv(k, hp // kvp)
         vv = A._repeat_kv(v, hp // kvp)
-        out = A.flash_attention(q, kk, vv, causal=True,
-                                window=cfg.sliding_window if local else 0,
-                                softcap_val=cfg.attn_logit_softcap,
-                                chunk=cfg.attn_chunk)
+        window = cfg.sliding_window if local else 0
+        if prefix is None:
+            out = A.flash_attention(q, kk, vv, causal=True, window=window,
+                                    softcap_val=cfg.attn_logit_softcap,
+                                    chunk=cfg.attn_chunk)
+        else:
+            P = prefix["k"].shape[1]
+            pk = A._repeat_kv(prefix["k"].astype(x.dtype), hp // kvp)
+            pv = A._repeat_kv(prefix["v"].astype(x.dtype), hp // kvp)
+            live = (jnp.arange(S) < jnp.asarray(length, jnp.int32)
+                    if length is not None else jnp.ones((S,), bool))
+            out = A.flash_attention_abs(
+                q, jnp.concatenate([pk, kk], axis=1),
+                jnp.concatenate([pv, vv], axis=1),
+                q_pos=positions[0],
+                k_pos=jnp.concatenate([jnp.arange(P, dtype=jnp.int32),
+                                       positions[0]]),
+                k_valid=jnp.concatenate(
+                    [jnp.arange(P) < jnp.asarray(prefix_len, jnp.int32),
+                     live]),
+                window=window, softcap_val=cfg.attn_logit_softcap,
+                chunk=cfg.attn_chunk)
         out = A._head_mask(cfg, out)
         mix = A.proj_apply(cfg, bp["attn"]["wo"],
                            out.reshape(B, S, hp * cfg.head_dim_))
@@ -348,11 +385,12 @@ def _apply_block_prefill(cfg: ModelConfig, bp, role, x, positions,
         if "dense" in role["ffn"]:
             out = out + F.ffn_apply(cfg, bp["ffn"], hh)
         x = x + out
-    return x, new_c
+    return x, new_c, snap
 
 
 def lm_prefill(cfg: ModelConfig, params, batch, cache=None,
-               max_len: Optional[int] = None, length=None):
+               max_len: Optional[int] = None, length=None, offset=None,
+               prefix=None, prefix_len=None, ssm_init=None, state_at=None):
     """Prefill over (B,S) inputs -> (last-position logits, populated cache).
 
     ``cache`` is a preallocated ``cache_init`` tree (sized max_len) that the
@@ -367,34 +405,58 @@ def lm_prefill(cfg: ModelConfig, params, batch, cache=None,
     already pad-invariant under the causal mask; their cache rows are
     masked/committed by the caller (serve/paged_cache.commit_prefill). One
     compiled prefill then serves every prompt length in the bucket.
+
+    Prefix-cache TAIL prefill (serve/prefix_cache.py): the inputs are the
+    UNCACHED tail of a prompt whose first ``offset`` tokens already live in
+    pool pages. ``offset`` (traced scalar) shifts positions (RoPE is
+    absolute); ``prefix`` ({bi: {"k"/"v": (G, 1, P, KVp, hd)}} gathered via
+    ``gather_prefix_kv``, rows valid below ``prefix_len``) lets tail
+    queries attend over the cached rows; ``ssm_init`` ({bi: {"h", "conv"}},
+    leading G) resumes each mamba recurrence from the prefix-boundary
+    state. ``state_at`` (STATIC position tuple) additionally returns mamba
+    state snapshots at those tail-relative positions — the page-boundary
+    states a finished request donates to the prefix index — as a third
+    result {bi: {"h": (G, B, len(state_at), DI, N), "conv": ...}}.
+    All four default to None ⇒ the exact cold-prefill graph.
     """
     h = _inputs_to_h(cfg, params, batch)
     B, S = h.shape[0], h.shape[1]
     if cache is None:
         cache, _ = cache_init(cfg, B, max_len or S)
-    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    pos_row = jnp.arange(S, dtype=jnp.int32)
+    if offset is not None:
+        pos_row = pos_row + jnp.asarray(offset, jnp.int32)
+    positions = jnp.broadcast_to(pos_row, (B, S))
     roles = block_roles(cfg)
 
-    def body(carry, gparams):
+    def body(carry, xs):
+        gparams, gprefix, gssm = xs
         x, blocks, g = carry
         gcache = jax.tree.map(
             lambda c: jax.lax.dynamic_index_in_dim(c, g, 0, keepdims=False),
             blocks)
+        snaps = {}
         for i, role in enumerate(roles):
-            x, c = _apply_block_prefill(cfg, gparams[f"b{i}"], role, x,
-                                        positions, length=length)
+            x, c, snap = _apply_block_prefill(
+                cfg, gparams[f"b{i}"], role, x, positions, length=length,
+                prefix=None if gprefix is None else gprefix.get(f"b{i}"),
+                prefix_len=prefix_len,
+                ssm_init=None if gssm is None else gssm.get(f"b{i}"),
+                state_at=state_at)
+            if snap is not None:
+                snaps[f"b{i}"] = snap
             gcache[f"b{i}"] = jax.tree.map(A.cache_write, gcache[f"b{i}"], c)
         blocks = jax.tree.map(
             lambda full, nc: jax.lax.dynamic_update_index_in_dim(
                 full, nc.astype(full.dtype), g, 0),
             blocks, gcache)
-        return (x, blocks, g + 1), None
+        return (x, blocks, g + 1), snaps
 
     if cfg.remat:
         body = jax.checkpoint(body, prevent_cse=False)
-    (h, new_blocks, _), _ = jax.lax.scan(
+    (h, new_blocks, _), snaps = jax.lax.scan(
         body, (h, cache["blocks"], jnp.zeros((), jnp.int32)),
-        params["blocks"])
+        (params["blocks"], prefix, ssm_init))
     h = rmsnorm_apply(params["final_norm"], h)
     if length is None:
         last = h[:, -1:]
@@ -403,5 +465,10 @@ def lm_prefill(cfg: ModelConfig, params, batch, cache=None,
         last = jax.lax.dynamic_slice_in_dim(
             h, jnp.asarray(length, jnp.int32) - 1, 1, axis=1)
         pos = jnp.asarray(length, jnp.int32)
+    if offset is not None:
+        pos = pos + jnp.asarray(offset, jnp.int32)
     logits = head_apply(cfg, params["head"], last)
-    return logits, {"blocks": new_blocks, "pos": pos}
+    new_cache = {"blocks": new_blocks, "pos": pos}
+    if state_at is not None:
+        return logits, new_cache, snaps
+    return logits, new_cache

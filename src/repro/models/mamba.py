@@ -57,10 +57,18 @@ def fp_ones_di(di):
     return (jnp.ones((di,), jnp.float32), P(MODEL_AXIS))
 
 
-def _causal_conv(x, w, b):
-    """Depthwise causal conv over seq. x: (B,S,DI); w: (W,DI)."""
+def _causal_conv(x, w, b, conv0=None):
+    """Depthwise causal conv over seq. x: (B,S,DI); w: (W,DI).
+
+    ``conv0`` (B,W-1,DI), optional: the last W-1 inputs BEFORE this
+    sequence (a cached-prefix boundary state) — they replace the zero
+    left-padding so a tail continues the conv exactly where the prefix
+    left off."""
     W = w.shape[0]
-    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    if conv0 is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv0.astype(x.dtype), x], axis=1)
     out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
               for i in range(W))
     return out + b[None, None, :]
@@ -97,10 +105,13 @@ def _scan_chunk(carry, chunk):
 
 
 def mamba_ssm(cfg: ModelConfig, p, xc, dt, Bm, Cm, h0=None,
-              chunk: int = SSM_CHUNK):
+              chunk: int = SSM_CHUNK, return_hs: bool = False):
     """Selective scan. xc: (B,S,DI); dt: (B,S,DI); Bm/Cm: (B,S,N).
 
-    Returns (y (B,S,DI), h_final (B,DI,N)).
+    Returns (y (B,S,DI), h_final (B,DI,N)); with ``return_hs`` also the
+    per-position states hs (B,S,DI,N) — ``hs[:, t]`` is the state after
+    consuming token t (already materialized for the y einsum, so exposing
+    it costs nothing).
     """
     Bsz, S, DI = xc.shape
     N = cfg.ssm_state
@@ -133,11 +144,13 @@ def mamba_ssm(cfg: ModelConfig, p, xc, dt, Bm, Cm, h0=None,
     y = jnp.einsum("bsdn,bsn->bsd", hs, Cm,
                    preferred_element_type=jnp.float32)
     y = y + p["D"].astype(jnp.float32)[None, None] * xc.astype(jnp.float32)
+    if return_hs:
+        return y.astype(xc.dtype), h_last, hs
     return y.astype(xc.dtype), h_last
 
 
 def mamba_apply(cfg: ModelConfig, p, x, h0=None, conv0=None,
-                return_state: bool = False, length=None):
+                return_state: bool = False, length=None, state_at=None):
     """Train/prefill mamba block body. x: (B,S,D).
 
     ``length`` (traced scalar, optional): true sequence length when ``x`` is
@@ -146,31 +159,56 @@ def mamba_apply(cfg: ModelConfig, p, x, h0=None, conv0=None,
     ``mamba_ssm`` already pads chunks with), and the returned conv state is
     sliced at ``length`` instead of the padded tail, so the state tuple is
     bit-identical to running the unpadded sequence.
+
+    ``h0``/``conv0``: initial recurrence state and conv history (the
+    boundary state of a cached prefix) — the sequence then continues
+    exactly where the prefix left off instead of from zeros.
+
+    ``state_at`` (static tuple of positions, optional): also return
+    ``{"h": (B,len,DI,N), "conv": (B,len,W-1,DI)}`` — the state after
+    consuming the first ``b`` tokens, for each ``b`` in ``state_at``
+    (prefix-cache page-boundary snapshots). Positions past ``length`` hold
+    the frozen state at ``length`` (the recurrence identity) and garbage
+    conv rows; callers discard them. Free beyond the slices: the
+    per-position states already exist for the output einsum.
     """
     DI = cfg.d_inner_
     W = cfg.conv_width
     xin = proj_apply(cfg, p["in_x"], x)
     z = proj_apply(cfg, p["in_z"], x)
     xconv = _causal_conv(xin, p["conv_w"].astype(jnp.float32),
-                         p["conv_b"]).astype(x.dtype)
+                         p["conv_b"], conv0=conv0).astype(x.dtype)
     xc = jax.nn.silu(xconv.astype(jnp.float32)).astype(x.dtype)
     dt, Bm, Cm = _ssm_params(cfg, p, xc)
     if length is not None:
         live = jnp.arange(x.shape[1]) < jnp.asarray(length, jnp.int32)
         dt = jnp.where(live[None, :, None], dt, 0.0)
-    y, h_last = mamba_ssm(cfg, p, xc, dt, Bm, Cm, h0, chunk=cfg.ssm_chunk)
+    y, h_last, *hs = mamba_ssm(cfg, p, xc, dt, Bm, Cm, h0,
+                               chunk=cfg.ssm_chunk,
+                               return_hs=state_at is not None)
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
     out = proj_apply(cfg, p["out_proj"], y)
-    if return_state:
-        if length is None:
-            conv_state = xin[:, -(W - 1):, :]             # (B,W-1,DI)
-        else:
-            # rows [length-W+1, length), zero-filled below row 0
-            xp = jnp.pad(xin, ((0, 0), (W - 1, 0), (0, 0)))
-            conv_state = jax.lax.dynamic_slice_in_dim(
-                xp, jnp.asarray(length, jnp.int32), W - 1, axis=1)
+    if not return_state:
+        return out
+    # conv history: conv0 (or zeros) prepended, so rows [b-W+1, b) of the
+    # full input stream live at xp[:, b : b+W-1] for ANY b, including the
+    # dynamic ``length`` slice and the static ``state_at`` snapshots.
+    if conv0 is None:
+        xp = jnp.pad(xin, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv0.astype(xin.dtype), xin], axis=1)
+    if length is None:
+        conv_state = xp[:, x.shape[1]:x.shape[1] + W - 1, :]
+    else:
+        conv_state = jax.lax.dynamic_slice_in_dim(
+            xp, jnp.asarray(length, jnp.int32), W - 1, axis=1)
+    if state_at is None:
         return out, (h_last, conv_state)
-    return out
+    snaps = {
+        "h": jnp.stack([hs[0][:, b - 1] for b in state_at], axis=1),
+        "conv": jnp.stack([xp[:, b:b + W - 1] for b in state_at], axis=1),
+    }
+    return out, (h_last, conv_state), snaps
 
 
 def mamba_cache_init(cfg: ModelConfig, batch: int):

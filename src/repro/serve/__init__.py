@@ -1,5 +1,7 @@
 from .engine import ServeEngine, pack_weights
-from .paged_cache import CachePool, commit_prefill, paged_pool_init, pages_for
+from .paged_cache import (CachePool, PageAllocator, commit_prefill,
+                          fork_page, paged_pool_init, pages_for)
+from .prefix_cache import PrefixCache
 from .sampling import sample_tokens
 from .scheduler import (Request, RequestStatus, SamplingParams, Scheduler)
 from .session import RequestHandle, ServeSession

@@ -45,10 +45,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import pack_boolean_weight
-from repro.models import (ModelConfig, cache_init, lm_decode_step,
-                          lm_decode_step_paged, lm_prefill)
+from repro.models import (ModelConfig, block_roles, cache_init,
+                          lm_decode_step, lm_decode_step_paged, lm_prefill)
+from repro.models import attention as A
+from repro.models import mamba as M
 
-from .paged_cache import CachePool, commit_prefill
+from .paged_cache import CachePool, commit_prefill, fork_page
 from .sampling import sample_tokens
 from .scheduler import SamplingParams
 from .session import ServeSession
@@ -106,10 +108,14 @@ class ServeEngine:
     MAX_COMPILED_FNS = 64
 
     def __init__(self, cfg: ModelConfig, params, max_len: int,
-                 packed: bool = False):
+                 packed: bool = False, prefix_cache: bool = False,
+                 cache_pool_limit: int = 8):
         self.cfg = cfg
         self.max_len = max_len
         self.packed = packed
+        # default for sessions (overridable per session): radix-indexed
+        # cross-request prompt-page sharing — see serve/prefix_cache.py
+        self.prefix_cache = prefix_cache
         if packed:
             from repro.core import PackedBool
 
@@ -126,7 +132,7 @@ class ServeEngine:
         # preallocated cache trees, donated per call: contiguous oracle
         # caches keyed by batch size, paged pools keyed by pool geometry —
         # one bounded pool abstraction instead of an unbounded per-shape dict
-        self._caches = CachePool()
+        self._caches = CachePool(limit=cache_pool_limit)
         self._fns = {}      # compile-shape key -> jitted fn (FIFO-bounded)
         # (temperature is a TRACED argument, deliberately not a compile key)
         self._prefill = jax.jit(
@@ -231,9 +237,11 @@ class ServeEngine:
         """jitted fused scan of ``segment`` decode steps over the full lane
         pool. Compiled once per (segment, pool geometry): admission and
         finish only rewrite the block table / pos / token / key vectors
-        between calls, never the graph. Emission-before-decode: step i
-        records the carried token, decodes it, and samples the next —
-        matching ``generate``'s scan so greedy outputs are token-identical.
+        between calls, never the graph. The session emits each request's
+        prefill-sampled first token AT ADMISSION, so the scan emits the
+        NEWLY sampled token of every step (the carried token was already
+        reported) — matching ``generate``'s [prefill sample, decode
+        samples...] stream so greedy outputs stay token-identical.
         Sampling state rides per lane: each lane folds its own per-request
         step into its own per-request key (SamplingParams threaded through
         the lanes by the session)."""
@@ -248,7 +256,7 @@ class ServeEngine:
                     tok)
                 nxt = sample_tokens(cfg, logits[:, -1], temps,
                                     keys if sampled else None, steps + 1)
-                return (nxt, nc["blocks"], nc["pos"], steps + 1), tok[:, 0]
+                return (nxt, nc["blocks"], nc["pos"], steps + 1), nxt[:, 0]
 
             (tok, pool, _, _), toks = jax.lax.scan(
                 step, (tok, pool, pos, steps), None, length=segment)
@@ -256,15 +264,92 @@ class ServeEngine:
 
         return jax.jit(fn, donate_argnums=(1,))
 
+    def _role_ids(self, mixer_is_mamba: bool):
+        return [i for i, r in enumerate(block_roles(self.cfg))
+                if (r["mixer"] == "mamba") == mixer_is_mamba]
+
+    def _build_pfx_prefill(self, page_size: int, tail: bool):
+        """jitted prefill for prefix-cached sessions (per prompt-length
+        bucket × prefix-page bucket). ``tail=False`` is the cold miss: the
+        same masked prefill-commit as ``_build_prefill_commit`` but ALSO
+        returning the device payload a finish donates to the index — the
+        mamba end state, the page-boundary state snapshots (static slice
+        positions per bucket; free — the per-position states already exist
+        for the scan's output einsum), and the end logits the exact record
+        stores. ``tail=True`` prefills ONLY the uncached tail of a partial
+        hit: positions offset by the hit length, tail queries attending
+        over the prefix K/V gathered from pool pages (garbage-page padding
+        masked by ``prefix_len``), and each mamba recurrence resumed from
+        the hit's boundary state."""
+        cfg = self.cfg
+        attn_ids = self._role_ids(False)
+        mamba_ids = self._role_ids(True)
+
+        def run(params, pool, prompt, length, offset, prefix_ids,
+                prefix_len, page_ids, lane, ssm_init):
+            S = prompt.shape[1]
+            boundaries = tuple(range(page_size, S + 1, page_size))
+            kw = {}
+            if tail:
+                kw = dict(offset=offset, prefix_len=prefix_len,
+                          ssm_init=ssm_init,
+                          prefix={f"b{i}": A.gather_prefix_kv(
+                              cfg, pool[f"b{i}"], prefix_ids)
+                              for i in attn_ids})
+            res = lm_prefill(cfg, params, self._inputs(params, prompt),
+                             length=length, state_at=boundaries or None,
+                             **kw)
+            logits, pcache = res[0], res[1]
+            snaps = res[2] if boundaries else {}
+            pool = commit_prefill(cfg, pool, pcache["blocks"], lane,
+                                  page_ids, page_size, length=length)
+            end_ssm = {f"b{i}": pcache["blocks"][f"b{i}"]
+                       for i in mamba_ids}
+            return logits, pool, end_ssm, snaps
+
+        if tail:
+            def fn(params, pool, prompt, length, offset, prefix_ids,
+                   prefix_len, page_ids, lane, ssm_init):
+                return run(params, pool, prompt, length, offset, prefix_ids,
+                           prefix_len, page_ids, lane, ssm_init)
+        else:
+            def fn(params, pool, prompt, length, page_ids, lane):
+                return run(params, pool, prompt, length, None, None, None,
+                           page_ids, lane, None)
+        return jax.jit(fn, donate_argnums=(1,))
+
+    def _build_hit_admit(self, fork: bool, has_ssm: bool):
+        """jitted exact-hit admission: CoW-fork the record's partially-
+        filled boundary page onto the request's private page (src → dst)
+        and/or write the stored mamba end state into the request's lane.
+        The only device work a bit-identical cache hit pays — no prefill."""
+        cfg = self.cfg
+        mamba_ids = self._role_ids(True)
+
+        def fn(pool, src, dst, lane, end_ssm):
+            if fork:
+                pool = fork_page(cfg, pool, src, dst)
+            if has_ssm:
+                pool = dict(pool)
+                for i in mamba_ids:
+                    pool[f"b{i}"] = M.mamba_cache_lane_write(
+                        pool[f"b{i}"], end_ssm[f"b{i}"], lane)
+            return pool
+
+        return jax.jit(fn, donate_argnums=(0,))
+
     def session(self, *, lanes: int = 4, page_size: int = 16,
                 n_pages: Optional[int] = None, segment: int = 1,
                 key: Optional[jax.Array] = None,
-                buckets: Optional[Sequence[int]] = None) -> ServeSession:
+                buckets: Optional[Sequence[int]] = None,
+                prefix_cache: Optional[bool] = None) -> ServeSession:
         """Open a streaming serve session: submit/stream/cancel requests at
-        any time over one paged pool (see serve/session.py)."""
+        any time over one paged pool (see serve/session.py).
+        ``prefix_cache`` overrides the engine default (radix-indexed
+        cross-request prompt-page sharing — serve/prefix_cache.py)."""
         return ServeSession(self, lanes=lanes, page_size=page_size,
                             n_pages=n_pages, segment=segment, key=key,
-                            buckets=buckets)
+                            buckets=buckets, prefix_cache=prefix_cache)
 
     def generate_batch(self,
                        prompts: Sequence,
@@ -274,7 +359,8 @@ class ServeEngine:
                        lanes: int = 4,
                        page_size: int = 16,
                        n_pages: Optional[int] = None,
-                       segment: int = 1):
+                       segment: int = 1,
+                       prefix_cache: Optional[bool] = None):
         """Continuous-batching generation over a paged cache pool — a thin
         wrapper over ``session()``: submit every request, run the segment
         loop until idle, collect results in request order.
@@ -301,7 +387,8 @@ class ServeEngine:
         if key is None:
             temps = [0.0] * n
         sess = self.session(lanes=lanes, page_size=page_size,
-                            n_pages=n_pages, segment=segment, key=key)
+                            n_pages=n_pages, segment=segment, key=key,
+                            prefix_cache=prefix_cache)
         try:
             # submit everything BEFORE stepping: a never-fitting request
             # fails here, before any compute is spent on its pool-mates

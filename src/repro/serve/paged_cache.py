@@ -28,6 +28,8 @@ after, with FIFO eviction bounding device memory.
 """
 from __future__ import annotations
 
+from collections import deque
+
 import jax
 import jax.numpy as jnp
 
@@ -37,11 +39,17 @@ from repro.models import mamba as M
 
 
 def pages_for(prompt_len: int, n_tokens: int, page_size: int) -> int:
-    """Pages a request must own: one row per prompt token + generated token.
-    (The emission-before-decode schedule writes at most prompt+n-1 rows;
-    the +n bound leaves one spare row, and any segment overrun past the
-    allocation spills to the garbage page harmlessly.)"""
-    return -(-(prompt_len + n_tokens) // page_size)
+    """Pages a request must own: ceil((prompt + n - 1) / page).
+
+    The first token is sampled from prefill logits and emitted AT ADMISSION
+    (before any decode segment), so decode steps only ever produce tokens
+    t1..t_{n-1}, writing cache rows prompt .. prompt+n-2 — prompt+n-1 rows
+    total. Segment overrun past the allocation spills into block-table
+    entries beyond the request's pages, which point at the garbage page
+    harmlessly. Invariant under eviction: emitted tokens move from the
+    token budget into the effective prompt, leaving prompt+n-1 unchanged.
+    """
+    return -(-(prompt_len + n_tokens - 1) // page_size)
 
 
 def paged_pool_init(cfg: ModelConfig, lanes: int, n_pages: int,
@@ -104,6 +112,82 @@ def commit_prefill(cfg: ModelConfig, pool, prefill_blocks, lane, page_ids,
 
             out[f"b{i}"] = jax.tree.map(put, pl, pc)
     return out
+
+
+def fork_page(cfg: ModelConfig, pool, src, dst):
+    """Copy-on-write fork: copy physical page ``src`` onto page ``dst`` in
+    every attention pool leaf (k/v rows + quant scales). The CoW primitive
+    for shared partially-filled boundary pages: a request admitted off a
+    cached prefix whose last page it must WRITE INTO (decode rows land past
+    the prompt) gets a private byte-identical copy instead of dirtying the
+    shared page. src/dst are traced scalars; mamba blocks (lane-indexed,
+    never paged) pass through untouched. Pure — jit/donate at the caller.
+    """
+    roles = block_roles(cfg)
+    out = {}
+    for i, role in enumerate(roles):
+        b = pool[f"b{i}"]
+        if role["mixer"] == "mamba":
+            out[f"b{i}"] = b
+        else:
+            out[f"b{i}"] = jax.tree.map(
+                lambda l: l.at[:, dst].set(l[:, src]), b)
+    return out
+
+
+class PageAllocator:
+    """Host-side reference-counted physical-page allocator.
+
+    Page 0 is the reserved garbage page (permanently pinned). Every other
+    page is either FREE or carries a refcount: 1 per owner (a request's
+    private pages, or the prefix index for cached pages) plus 1 per extra
+    live user (requests decoding over a shared prefix page). A page returns
+    to the free list exactly when its count reaches zero — the
+    "refcount-never-negative / owned+free == n_pages" invariants are
+    asserted here, not distributed over callers.
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the garbage page)")
+        self.n_pages = n_pages
+        self.refs = [0] * n_pages
+        self.refs[0] = 1                       # garbage page: never freed
+        self._free = deque(range(1, n_pages))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def free_pages(self):
+        """Snapshot view of the free list (tests/diagnostics)."""
+        return tuple(self._free)
+
+    def alloc(self, n: int):
+        """Take ``n`` fresh pages at refcount 1 (FIFO order)."""
+        if n > len(self._free):
+            raise ValueError(f"alloc({n}) with only {len(self._free)} free")
+        pages = [self._free.popleft() for _ in range(n)]
+        for p in pages:
+            self.refs[p] = 1
+        return pages
+
+    def incref(self, page: int) -> None:
+        if page <= 0 or self.refs[page] <= 0:
+            raise ValueError(f"incref on free/garbage page {page}")
+        self.refs[page] += 1
+
+    def decref(self, page: int) -> bool:
+        """Drop one reference; returns True iff the page actually freed
+        (reclaim accounting must not count still-referenced pages)."""
+        if page <= 0 or self.refs[page] <= 0:
+            raise ValueError(f"decref on free/garbage page {page}")
+        self.refs[page] -= 1
+        if self.refs[page] == 0:
+            self._free.append(page)
+            return True
+        return False
 
 
 class CachePool:

@@ -1,0 +1,385 @@
+"""Radix-indexed prefix cache: ref-counted, copy-on-write page sharing.
+
+At traffic scale most requests open with the same bytes — a system prompt,
+a few-shot preamble — and without sharing every one of them re-prefills
+and RE-STORES that prefix in its own pages. BOLD's decode path is
+memory-bound (bit-packed XNOR weights stream once per batched step), so
+the redundant work is exactly the kind the dataflow exists to avoid: this
+module turns shared prompts into O(1) admission cost by indexing token-ID
+prefixes over the physical pages of the existing block-table pool
+(serve/paged_cache.py).
+
+Structure (vLLM/SGLang-style, page-granular):
+
+  * a RADIX TREE over token-ID prefixes — each node owns a run of FULL
+    pages (key length = pages * page_size) plus, for SSM-carrying configs,
+    the mamba (h, conv) state snapshot at every page boundary (captured
+    for free during prefill — the per-position states already exist for
+    the selective scan's output einsum). Divergence inside a node SPLITS
+    it at the page boundary; the node keeps its identity as the tail so
+    live pins (parent-chain walks) stay consistent.
+  * EXACT RECORDS keyed by the full prompt: the partially-filled boundary
+    page (if any), the end-of-prompt logits and mamba end state. An
+    identical prompt re-admits with ZERO prefill — first token sampled
+    from the stored logits, decode reading the very same page bytes — so
+    cache-hit generation is bit-identical to the cold run by construction.
+  * PER-PAGE REFERENCE COUNTS (paged_cache.PageAllocator): the index owns
+    one ref on every cached page; each live request using a shared page
+    holds one more. Pages free exactly at refcount zero.
+  * COPY-ON-WRITE: a request admitted off an exact record must write its
+    decode rows into the record's partially-filled boundary page — it
+    gets a private byte-identical fork (paged_cache.fork_page) instead of
+    dirtying the shared page.
+  * LRU RECLAIM: under page pressure the scheduler asks ``reclaim`` to
+    free least-recently-used unpinned leaves / records until the incoming
+    request's unshared tail fits. Pinned paths (live requests, records)
+    are never reclaimed.
+
+Partial hits resume at a page boundary: the session prefills ONLY the
+uncached tail (``lm_prefill(offset=, prefix=, ssm_init=)``) — exact
+position arithmetic for attention (RoPE is absolute; tail queries attend
+over the gathered prefix rows) and exact state resumption for the SSM
+recurrence. Numerics note: a partial-hit tail attends over the prefix
+rows AS STORED (dequantized under kv_cache_quant — the same bytes decode
+reads), so its tokens follow the serve-over-cache semantics rather than
+being bit-equal to a cold full prefill; EXACT hits re-read identical
+bytes end to end and are bit-identical (tests/test_prefix_cache.py).
+
+Pure host bookkeeping — no jax here. Device work (page fork, lane state
+write, tail prefill) lives in serve/engine.py builders driven by the
+session; this index only moves page ids and opaque device trees around.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class _Node:
+    """One radix-tree node: a run of full pages extending the parent."""
+
+    __slots__ = ("parent", "children", "key", "pages", "snaps", "ref",
+                 "tick")
+
+    def __init__(self, parent, key: np.ndarray, pages: List[int],
+                 snaps: List[Any], tick: int, ref: int = 0):
+        self.parent = parent
+        self.children: Dict[bytes, "_Node"] = {}
+        self.key = key                  # int32 tokens, len == pages * P
+        self.pages = pages              # physical page ids, logical order
+        self.snaps = snaps              # per-page boundary SSM state (|None)
+        self.ref = ref                  # pass-through pins (requests+records)
+        self.tick = tick
+
+
+@dataclasses.dataclass
+class _Record:
+    """Exact full-prompt entry: boundary page + end state + end logits."""
+    node: _Node                         # deepest full-page node of the path
+    page: Optional[int]                 # partially-filled boundary page
+    logits: Any                         # (1, 1, Vp) device array
+    end_ssm: Any                        # {bi: {"h", "conv"}} device tree
+    n_tokens: int
+    tick: int
+
+
+@dataclasses.dataclass
+class Hit:
+    """Lookup result the scheduler/session admit a request against."""
+    exact: bool
+    hit_len: int                        # tokens covered by shared pages
+    node: _Node                         # deepest node on the path
+    pages: List[int]                    # shared pages, logical order
+    ssm: Any                            # boundary state at hit_len (partial)
+    record: Optional[_Record]           # exact hits only
+
+
+class PrefixCache:
+    def __init__(self, page_size: int, max_records: int = 256):
+        self.page_size = page_size
+        # records hold off-page device arrays (full-vocab logits + SSM end
+        # state) that PAGE-pressure reclaim never sees, so the record map
+        # is count-bounded with its own LRU — distinct-prompt traffic must
+        # not grow device memory without bound
+        self.max_records = max_records
+        self.root = _Node(None, np.zeros((0,), np.int32), [], [], 0)
+        self.records: Dict[bytes, _Record] = {}
+        self._tick = 0
+        self.stats = {"lookups": 0, "exact_hits": 0, "partial_hits": 0,
+                      "misses": 0, "hit_tokens": 0, "prompt_tokens": 0,
+                      "inserted_pages": 0, "evicted_pages": 0,
+                      "cow_forks": 0}
+
+    # -- path helpers --------------------------------------------------------
+    def _chain(self, node: _Node) -> List[_Node]:
+        out = []
+        while node is not self.root:
+            out.append(node)
+            node = node.parent
+        return out[::-1]                # root-first
+
+    def path_pages(self, node: _Node) -> List[int]:
+        return [p for n in self._chain(node) for p in n.pages]
+
+    def pin(self, node: _Node) -> None:
+        for n in self._chain(node):
+            n.ref += 1
+
+    def unpin(self, node: _Node) -> None:
+        for n in self._chain(node):
+            n.ref -= 1
+            assert n.ref >= 0, "prefix-cache pin count went negative"
+
+    def _touch(self, node: _Node) -> None:
+        self._tick += 1
+        for n in self._chain(node):
+            n.tick = self._tick
+
+    # -- split / walk --------------------------------------------------------
+    def _split(self, node: _Node, j: int) -> _Node:
+        """Split ``node`` after its first ``j`` pages; returns the new HEAD.
+        ``node`` keeps its identity as the tail so every live parent-chain
+        walk (request pins, record anchors) passes through the head —
+        ``head.ref`` therefore starts at ``node.ref``."""
+        P = self.page_size
+        head = _Node(node.parent, node.key[:j * P], node.pages[:j],
+                     node.snaps[:j], node.tick, ref=node.ref)
+        node.parent.children[node.key[:P].tobytes()] = head
+        head.children[node.key[j * P:(j + 1) * P].tobytes()] = node
+        node.key = node.key[j * P:]
+        node.pages = node.pages[j:]
+        node.snaps = node.snaps[j:]
+        node.parent = head
+        return head
+
+    def _walk(self, tokens: np.ndarray, max_pages: int
+              ) -> Tuple[_Node, List[int], int]:
+        """Longest page-aligned match of ``tokens`` (up to ``max_pages``
+        pages), splitting any partially-matched node so the returned node
+        run ends exactly at the match boundary."""
+        P = self.page_size
+        node, pages, m = self.root, [], 0
+        while m < max_pages:
+            child = node.children.get(
+                tokens[m * P:(m + 1) * P].tobytes())
+            if child is None:
+                break
+            usable = min(len(child.pages), max_pages - m)
+            j = 1                       # first page matched (the child key)
+            while j < usable and np.array_equal(
+                    child.key[j * P:(j + 1) * P],
+                    tokens[(m + j) * P:(m + j + 1) * P]):
+                j += 1
+            if j < len(child.pages):
+                child = self._split(child, j)
+            node = child
+            pages.extend(child.pages)
+            m += j
+        return node, pages, m
+
+    # -- lookup --------------------------------------------------------------
+    def lookup(self, tokens: np.ndarray) -> Optional[Hit]:
+        """Longest cached prefix of ``tokens``. Exact records win (zero
+        prefill); otherwise the longest page-aligned prefix STRICTLY
+        shorter than the prompt, so the tail prefill always has >= 1 token
+        to produce the next-token logits from. Pure w.r.t. stats and LRU
+        ticks — those move on ``commit_hit`` when the request actually
+        admits, so a blocked queue head retrying every scheduling round
+        inflates nothing."""
+        tokens = np.ascontiguousarray(tokens, np.int32)
+        rec = self.records.get(tokens.tobytes())
+        if rec is not None:
+            return Hit(exact=True, hit_len=int(tokens.size), node=rec.node,
+                       pages=self.path_pages(rec.node), ssm=None, record=rec)
+        node, pages, m = self._walk(tokens, (tokens.size - 1)
+                                    // self.page_size)
+        if m == 0:
+            return None
+        return Hit(exact=False, hit_len=m * self.page_size, node=node,
+                   pages=pages, ssm=node.snaps[-1] if node.snaps else None,
+                   record=None)
+
+    def commit_hit(self, hit: Optional[Hit], n_tokens: int) -> None:
+        """Fold an ADMITTED request's lookup into stats + LRU ticks."""
+        self.stats["lookups"] += 1
+        self.stats["prompt_tokens"] += int(n_tokens)
+        if hit is None:
+            self.stats["misses"] += 1
+            return
+        self._touch(hit.node)
+        if hit.exact:
+            hit.record.tick = self._tick
+            self.stats["exact_hits"] += 1
+        else:
+            self.stats["partial_hits"] += 1
+        self.stats["hit_tokens"] += hit.hit_len
+
+    # -- insert / release ----------------------------------------------------
+    def release(self, req, alloc, insert: bool) -> None:
+        """Drop a request's hold on the index. ``insert=True`` (the finish
+        path) first donates the request's prefilled prompt pages to the
+        index (dedup frees byte-duplicate private pages); cancel/evict pass
+        ``insert=False``. Either way the request's per-page user refs and
+        its path pin are released — pages it alone owned free here."""
+        consumed = set()
+        if insert and req.cache_extras is not None:
+            consumed = self._insert(req, alloc)
+        for p in req.shared_pages:
+            alloc.decref(p)
+        for p in req.private_pages:
+            if p not in consumed:
+                alloc.decref(p)
+        if req.hit is not None:
+            if req.hit.exact and req.hit.record.page is not None:
+                alloc.decref(req.hit.record.page)   # CoW-source hold
+            self.unpin(req.hit.node)
+        req.hit = None
+        req.cache_extras = None
+
+    def _insert(self, req, alloc) -> set:
+        """Donate a finished request's prompt pages. Returns the private
+        pages whose ownership TRANSFERRED to the index (their refcount-1
+        now means "owned by the cache"); duplicates of already-cached
+        pages are left to ``release`` to free."""
+        ex = req.cache_extras
+        tokens = np.ascontiguousarray(ex["tokens"], np.int32)
+        P = self.page_size
+        S = int(tokens.size)
+        n_full = S // P
+        node, _, m = self._walk(tokens, n_full)
+        consumed = set()
+        self._tick += 1
+        if m < n_full:
+            # logical page j's physical id is req.pages[j]; snapshots are
+            # tail-relative to the request's prefill offset o: page j's
+            # boundary (j+1)*P maps to snap index (j+1) - o/P - 1.
+            o = ex["offset"]
+            new_pages = [req.pages[j] for j in range(m, n_full)]
+            snaps = [self._slice_snap(ex["snaps"], (j + 1) - o // P - 1)
+                     for j in range(m, n_full)]
+            child = _Node(node, tokens[m * P:n_full * P], new_pages, snaps,
+                          self._tick)
+            node.children[tokens[m * P:(m + 1) * P].tobytes()] = child
+            consumed.update(new_pages)
+            self.stats["inserted_pages"] += len(new_pages)
+            node = child
+        kb = tokens.tobytes()
+        if kb not in self.records and ex.get("record_ok", True):
+            if len(self.records) >= self.max_records:
+                self._evict_lru_record(alloc)
+            bpage = req.pages[n_full] if S % P else None
+            if bpage is not None:
+                consumed.add(bpage)
+                self.stats["inserted_pages"] += 1
+            self.records[kb] = _Record(
+                node=node, page=bpage, logits=ex["logits"],
+                end_ssm=ex["end_ssm"], n_tokens=S, tick=self._tick)
+            self.pin(node)              # the record pins its path
+        self._touch(node)
+        return consumed
+
+    def _evict_record(self, kb: bytes, alloc) -> bool:
+        """Drop one record: unpin its path, release its boundary page.
+        Returns True iff a page actually freed."""
+        rec = self.records.pop(kb)
+        self.unpin(rec.node)
+        if rec.page is not None and alloc.decref(rec.page):
+            self.stats["evicted_pages"] += 1
+            return True
+        return False
+
+    def _evict_lru_record(self, alloc) -> None:
+        kb = min(self.records, key=lambda k: self.records[k].tick)
+        self._evict_record(kb, alloc)
+
+    @staticmethod
+    def _slice_snap(snaps, idx: int):
+        if not snaps:
+            return None
+        import jax
+
+        return jax.tree.map(lambda a: a[:, :, idx], snaps)
+
+    # -- reclaim -------------------------------------------------------------
+    def _evictable_nodes(self) -> List[_Node]:
+        out, stack = [], [self.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n is not self.root and n.ref == 0 and not n.children:
+                out.append(n)
+        return out
+
+    def _reclaimable(self, alloc) -> int:
+        """Pages a full sweep COULD free right now: record boundary pages
+        with no extra holders, plus every node whose pass-through ref is
+        entirely record pins (pins are transitive, so a node with zero
+        non-record refs heads a fully drainable subtree once its records
+        go)."""
+        rec_pins: Dict[int, int] = {}
+        n = 0
+        for rec in self.records.values():
+            for node in self._chain(rec.node):
+                rec_pins[id(node)] = rec_pins.get(id(node), 0) + 1
+            if rec.page is not None and alloc.refs[rec.page] == 1:
+                n += 1
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            if node is not self.root \
+                    and node.ref == rec_pins.get(id(node), 0):
+                n += len(node.pages)
+        return n
+
+    def reclaim(self, alloc, need: int) -> bool:
+        """Free >= ``need`` pages by evicting LRU records and unpinned
+        leaf nodes (evicting a record unpins its path, surfacing its
+        leaves for the next round). Infeasible targets fail FAST — before
+        any eviction — so a transiently unadmittable request never flushes
+        the index for nothing; the caller's request waits, and it is never
+        deadlocked by cache-held pages since everything unpinned stays
+        reachable."""
+        if need > self._reclaimable(alloc):
+            return False
+        freed = 0
+        while freed < need:
+            cands: List[Tuple[int, int, Any]] = []
+            for kb, rec in self.records.items():
+                cands.append((rec.tick, 0, (kb, rec)))
+            for n in self._evictable_nodes():
+                cands.append((n.tick, 1, n))
+            if not cands:
+                return False
+            cands.sort(key=lambda c: (c[0], c[1]))
+            _, kind, victim = cands[0]
+            if kind == 0:
+                kb, _rec = victim
+                if self._evict_record(kb, alloc):
+                    freed += 1
+            else:
+                victim.parent.children.pop(
+                    victim.key[:self.page_size].tobytes())
+                for p in victim.pages:
+                    if alloc.decref(p):
+                        freed += 1
+                        self.stats["evicted_pages"] += 1
+        return True
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def owned_pages(self) -> int:
+        n = sum(1 for r in self.records.values() if r.page is not None)
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            n += len(node.pages)
+        return n
+
+    @property
+    def hit_rate(self) -> float:
+        h = self.stats["exact_hits"] + self.stats["partial_hits"]
+        return h / max(self.stats["lookups"], 1)

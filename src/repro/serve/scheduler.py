@@ -2,7 +2,13 @@
 
 The scheduler owns three resources: LANES (slots in the fixed-width decode
 batch — the jit-stable shape), PAGES (physical cache pages in the paged
-pool; page 0 is reserved as the garbage page), and the FCFS pending queue.
+pool via the ref-counted ``PageAllocator``; page 0 is reserved as the
+garbage page), and the FCFS pending queue. With a ``PrefixCache`` attached
+(serve/prefix_cache.py), admission additionally looks up the longest
+cached prefix of each request: shared pages enter the block table at the
+cost of a refcount, only the UNSHARED tail allocates, and finishing
+requests donate their prompt pages back to the index instead of freeing
+them (LRU-reclaimed under pressure).
 It is RE-ENTRANT: ``submit`` may be called at any time — before, between,
 or after decode segments — and the next ``admit`` picks the new request up
 under the same FCFS page-budget rule. Per step it can
@@ -44,7 +50,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .paged_cache import pages_for
+from .paged_cache import PageAllocator, pages_for
 
 
 class RequestStatus(enum.Enum):
@@ -97,6 +103,15 @@ class Request:
         self.pages: Tuple[int, ...] = ()
         self.status = RequestStatus.QUEUED
         self.stopped = False          # stop_token hit before max_tokens
+        # prefix-cache state (all vacuous when the cache is disabled):
+        # pages = shared_pages + private_pages in logical (block-table)
+        # order; hit is the pinned lookup this admission rode; cache_extras
+        # holds the device payload (prefill logits, SSM end/boundary
+        # states) a finish donates to the index.
+        self.shared_pages: Tuple[int, ...] = ()
+        self.private_pages: Tuple[int, ...] = ()
+        self.hit = None
+        self.cache_extras = None
 
     @property
     def n_tokens(self) -> int:
@@ -127,7 +142,8 @@ class Request:
 
 
 class Scheduler:
-    def __init__(self, lanes: int, n_pages: int, page_size: int):
+    def __init__(self, lanes: int, n_pages: int, page_size: int,
+                 prefix_cache=None):
         if lanes < 1 or n_pages < 2:
             raise ValueError("need >=1 lane and >=2 pages (page 0 is the "
                              "reserved garbage page)")
@@ -135,9 +151,17 @@ class Scheduler:
         self.page_size = page_size
         self.n_pages = n_pages
         self.free_lanes: Deque[int] = deque(range(lanes))
-        self.free_pages: Deque[int] = deque(range(1, n_pages))
+        self.alloc = PageAllocator(n_pages)
+        self.prefix_cache = prefix_cache
         self.pending: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}
+
+    @property
+    def free_pages(self):
+        """Free-list view (tests/diagnostics); allocation goes through
+        ``self.alloc`` so per-page refcounts stay the single source of
+        truth."""
+        return self.alloc.free_pages
 
     # -- queue ---------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -170,31 +194,99 @@ class Scheduler:
 
     # -- admit / finish / evict / cancel -------------------------------------
     def admit(self) -> List[Request]:
-        """FCFS: admit queue-head requests while a lane and their full page
-        budget are free. Head-of-line blocking is deliberate — skipping
-        ahead would starve large requests forever under steady traffic."""
+        """FCFS: admit queue-head requests while a lane and their UNSHARED
+        page budget are free. Head-of-line blocking is deliberate —
+        skipping ahead would starve large requests forever under steady
+        traffic.
+
+        With a prefix cache, admission first looks up the longest cached
+        prefix; only the uncached tail + decode pages count against the
+        free list (shared pages cost an incref, not an allocation). Under
+        pressure the cache reclaims LRU unpinned entries to make room; if
+        even that cannot cover the tail, the head request waits — live
+        requests' pins are never reclaimed, so waiting resolves as lanes
+        finish, never deadlocks.
+        """
         admitted = []
         while self.pending and self.free_lanes:
-            need = self.check_fits(self.pending[0])
-            if need > len(self.free_pages):
-                break
+            head = self.pending[0]
+            need = self.check_fits(head)
+            hit = None
+            if self.prefix_cache is not None:
+                hit = self.prefix_cache.lookup(head.effective_prompt)
+            shared = list(hit.pages) if hit is not None else []
+            private_need = need - len(shared)
+
+            def _hold(h=hit):
+                """Pin the hit path AND take the CoW-source hold before any
+                reclaim can run: the record itself is always LRU-evictable,
+                so without the hold a sweep could free the boundary page
+                this admission is about to fork."""
+                self.prefix_cache.pin(h.node)
+                if h.exact and h.record.page is not None:
+                    self.alloc.incref(h.record.page)
+
+            def _drop(h=hit):
+                if h.exact and h.record.page is not None:
+                    self.alloc.decref(h.record.page)
+                self.prefix_cache.unpin(h.node)
+
+            if private_need > self.alloc.n_free:
+                if self.prefix_cache is None:
+                    break
+                if hit is not None:
+                    _hold()
+                ok = self.prefix_cache.reclaim(
+                    self.alloc, private_need - self.alloc.n_free)
+                if not ok and hit is not None:
+                    # the hit itself may pin the last reclaimable pages
+                    # (e.g. its own CoW fork source, at minimum pool
+                    # size): fall back to a COLD admission — dropping the
+                    # hit makes the whole unpinned index reclaimable, so
+                    # an otherwise-idle pool can never livelock on its
+                    # own cache
+                    _drop()
+                    hit, shared, private_need = None, [], need
+                    ok = self.prefix_cache.reclaim(
+                        self.alloc, need - self.alloc.n_free)
+                if not ok:
+                    break
+            elif hit is not None:
+                _hold()
             req = self.pending.popleft()
             req.lane = self.free_lanes.popleft()
-            req.pages = tuple(self.free_pages.popleft() for _ in range(need))
+            if self.prefix_cache is not None:
+                self.prefix_cache.commit_hit(hit, head.effective_prompt.size)
+            for p in shared:
+                self.alloc.incref(p)
+            private = self.alloc.alloc(private_need)
+            req.shared_pages = tuple(shared)
+            req.private_pages = tuple(private)
+            req.pages = tuple(shared + private)
+            req.hit = hit
             req.status = RequestStatus.PREFILLING
             self.active[req.lane] = req
             admitted.append(req)
         return admitted
 
-    def _release(self, lane: int) -> Request:
+    def _release(self, lane: int, insert: bool = False) -> Request:
         req = self.active.pop(lane)
         self.free_lanes.append(lane)
-        self.free_pages.extend(req.pages)
+        if self.prefix_cache is not None:
+            self.prefix_cache.release(req, self.alloc, insert=insert)
+        else:
+            for p in req.pages:
+                self.alloc.decref(p)
         req.lane, req.pages = -1, ()
+        req.shared_pages = req.private_pages = ()
         return req
 
     def finish(self, lane: int) -> Request:
-        req = self._release(lane)
+        """Release a completed request — with a prefix cache, its prompt
+        pages are DONATED to the index (dedup frees byte-duplicates)
+        instead of freed, so the next identical/shared prompt admits
+        against them."""
+        req = self._release(lane, insert=True)
         req.status = RequestStatus.DONE
         return req
 

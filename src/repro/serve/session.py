@@ -11,14 +11,17 @@ wait for the pool to drain) into an explicit request lifecycle:
     h.cancel()                     # frees the lane + pages immediately
     session.run_until_idle()
 
-The session drives ONE scheduler/pool through three composable phases per
-``step()`` — ``_admit_and_prefill`` (pop pending requests into free lanes,
-bucketed prefill, commit pages), ``_decode_segment`` (one fused
-``segment``-step scan over the fixed lane pool), ``_drain_finished``
-(harvest emitted tokens, stop-token early finish, release lanes) — so
-callers can interleave submissions, token reads, and cancellations between
-segments. ``ServeEngine.generate_batch`` is a thin wrapper: submit all,
-run until idle, collect.
+The session drives ONE scheduler/pool through three composable phases —
+``_admit_and_prefill`` (pop pending requests into free lanes, bucketed
+prefill — or, with ``prefix_cache=True``, a tail-only / zero prefill off
+the radix index — commit pages, EMIT the prefill-sampled first token),
+``_decode_segment`` (one fused ``segment``-step scan over the fixed lane
+pool), ``_drain_finished`` (harvest emitted tokens, stop-token early
+finish, release lanes) — so callers can interleave submissions, token
+reads, and cancellations between segments. A ``step()`` that admitted
+returns before decoding: streaming TTFT equals prefill latency.
+``ServeEngine.generate_batch`` is a thin wrapper: submit all, run until
+idle, collect.
 
 Prefill compiles are BUCKETED by padded prompt length: a prompt of length
 S is right-padded to the smallest bucket >= S (powers of two by default,
@@ -41,13 +44,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import block_roles
+
 from .paged_cache import paged_pool_init
+from .prefix_cache import PrefixCache
 from .sampling import sample_tokens
 from .scheduler import Request, RequestStatus, SamplingParams, Scheduler
 
 
-def _default_bucket(S: int) -> int:
-    b = 8
+def _default_bucket(S: int, floor: int = 8) -> int:
+    b = floor
     while b < S:
         b <<= 1
     return b
@@ -150,7 +156,8 @@ class ServeSession:
     def __init__(self, engine, *, lanes: int = 4, page_size: int = 16,
                  n_pages: Optional[int] = None, segment: int = 1,
                  key: Optional[jax.Array] = None,
-                 buckets: Optional[Sequence[int]] = None):
+                 buckets: Optional[Sequence[int]] = None,
+                 prefix_cache: Optional[bool] = None):
         if segment < 1 or page_size < 1 or lanes < 1:
             raise ValueError("segment, page_size and lanes must be >= 1")
         self.engine = engine
@@ -162,7 +169,13 @@ class ServeSession:
         if n_pages is None:    # full residency for every lane + garbage page
             n_pages = lanes * self._table_cols + 1
         self.n_pages = n_pages
-        self.sched = Scheduler(lanes, n_pages, page_size)
+        if prefix_cache is None:
+            prefix_cache = engine.prefix_cache
+        self.prefix = PrefixCache(page_size) if prefix_cache else None
+        self._has_ssm = any(r["mixer"] == "mamba"
+                            for r in block_roles(engine.cfg))
+        self.sched = Scheduler(lanes, n_pages, page_size,
+                               prefix_cache=self.prefix)
         self.key = _raw_key(key) if key is not None else jax.random.PRNGKey(0)
         self.buckets = tuple(sorted(int(b) for b in buckets)) \
             if buckets else None
@@ -213,14 +226,19 @@ class ServeSession:
         return handle
 
     def step(self) -> bool:
-        """Drive one scheduling round: admit + prefill pending requests,
-        decode ONE fused segment over the lane pool, drain finished lanes.
-        Returns False (and does nothing) once the session is idle."""
+        """Drive one scheduling round. EMISSION-BEFORE-DECODE: an admission
+        round (admit + prefill + emit each new request's prefill-sampled
+        first token) returns immediately, so streaming consumers observe
+        TTFT = prefill latency — first tokens never wait out a decode
+        segment. Rounds with nothing to admit decode ONE fused segment over
+        the lane pool and drain finished lanes. Returns False (and does
+        nothing) once the session is idle."""
         if self._closed:
             raise RuntimeError("session is closed")
         if self.sched.idle:
             return False
-        self._admit_and_prefill()
+        if self._admit_and_prefill():
+            return True
         if self._decode_segment():
             self._drain_finished()
         return True
@@ -312,44 +330,141 @@ class ServeSession:
         self._temps[lane] = 0.0
         self._keys[lane] = 0
 
-    def _admit_and_prefill(self):
-        """Pop pending requests into free lanes and prefill each through
-        its length bucket: pad to the bucket, prefill with the true length
-        as a traced mask, scatter the masked rows into the request's pages
-        (bucket-tail page ids point at the garbage page), sample the first
-        token, and arm the lane mirrors."""
-        admitted = self.sched.admit()
-        for req in admitted:
-            eff = req.effective_prompt
-            S = int(eff.shape[0])
-            bucket = self._bucket_len(S, strict=False)
-            npp_b = -(-bucket // self.page_size)
-            npp_t = -(-S // self.page_size)
-            page_ids = np.zeros((npp_b,), np.int32)
-            page_ids[:npp_t] = req.pages[:npp_t]
-            padded = np.zeros((bucket,), np.int32)
-            padded[:S] = eff
+    def _prefix_page_bucket(self, n: int) -> int:
+        """Pow-2 bucket for the prefix-gather page count — bounds tail
+        prefill compiles by O(log pool) instead of one per hit length."""
+        return _default_bucket(n, floor=1)
+
+    def _admit_exact(self, req, S: int):
+        """Exact-record admission: ZERO prefill. Shared full pages enter
+        the block table as-is; a partially-filled boundary page is CoW-
+        forked onto the request's first private page (its decode rows land
+        there); the stored mamba end state is written into the lane. The
+        first token comes from the record's stored end-of-prompt logits —
+        the same bytes the cold run sampled from, which (with decode then
+        re-reading identical page bytes) makes the whole cache-hit stream
+        bit-identical to the cold run."""
+        rec = req.hit.record
+        fork = rec.page is not None
+        if fork or self._has_ssm:
+            fn = self.engine._get_fn(
+                ("hit_admit", self._pool_key, fork, self._has_ssm),
+                lambda: self.engine._build_hit_admit(fork, self._has_ssm))
+            # fork dst = the request's logical page S // page_size, which
+            # scheduler page ordering puts first among its private pages
+            self._pool = fn(
+                self._take_pool(),
+                jnp.asarray(rec.page if fork else 0, jnp.int32),
+                jnp.asarray(req.private_pages[0] if fork else 0, jnp.int32),
+                jnp.asarray(req.lane, jnp.int32),
+                rec.end_ssm if self._has_ssm else {})
+            if fork:
+                self.prefix.stats["cow_forks"] += 1
+        req.cache_extras = None         # index already holds this prompt
+        return rec.logits
+
+    def _admit_prefill(self, req, eff, S: int):
+        """Cold / partial-hit admission: prefill ONLY the uncached tail
+        through its length bucket (pad to the bucket, true length as a
+        traced mask), scatter the masked rows into the request's tail
+        pages, and — when the prefix index is on — capture the device
+        payload a finish donates to it (end logits, mamba end state,
+        page-boundary state snapshots). A partial hit threads the position
+        offset, the gathered prefix K/V pages, and the boundary SSM state
+        through ``lm_prefill`` so the tail is computed exactly as a
+        continuation of the cached prefix."""
+        o = req.hit.hit_len if req.hit is not None else 0
+        T = S - o
+        o_pages = o // self.page_size
+        bucket = self._bucket_len(T, strict=False)
+        npp_b = -(-bucket // self.page_size)
+        npp_t = -(-T // self.page_size)
+        page_ids = np.zeros((npp_b,), np.int32)
+        page_ids[:npp_t] = req.pages[o_pages:o_pages + npp_t]
+        padded = np.zeros((bucket,), np.int32)
+        padded[:T] = eff[o:]
+        if self.prefix is None:
             pfn = self.engine._get_fn(
                 ("prefill_commit", self._pool_key, bucket),
                 lambda: self.engine._build_prefill_commit(self.page_size))
             logits, self._pool = pfn(
                 self.engine.params, self._take_pool(),
-                jnp.asarray(padded[None]), jnp.asarray(S, jnp.int32),
+                jnp.asarray(padded[None]), jnp.asarray(T, jnp.int32),
                 jnp.asarray(page_ids), jnp.asarray(req.lane, jnp.int32))
+            return logits
+        ppb = self._prefix_page_bucket(o_pages) if o_pages else 0
+        prefix_ids = np.zeros((ppb,), np.int32)
+        prefix_ids[:o_pages] = req.pages[:o_pages]
+        pfn = self.engine._get_fn(
+            ("pfx_prefill", self._pool_key, bucket, ppb),
+            lambda: self.engine._build_pfx_prefill(self.page_size,
+                                                   tail=ppb > 0))
+        ssm_init = {}
+        if ppb > 0:
+            args = (jnp.asarray(o, jnp.int32), jnp.asarray(prefix_ids),
+                    jnp.asarray(o, jnp.int32))
+            if self._has_ssm:
+                ssm_init = req.hit.ssm
+        else:
+            args = ()
+        logits, self._pool, end_ssm, snaps = pfn(
+            self.engine.params, self._take_pool(),
+            jnp.asarray(padded[None]), jnp.asarray(T, jnp.int32), *args,
+            jnp.asarray(page_ids), jnp.asarray(req.lane, jnp.int32),
+            *((ssm_init,) if ppb > 0 else ()))
+        req.cache_extras = {"tokens": np.array(eff, np.int32), "offset": o,
+                            "logits": logits, "end_ssm": end_ssm,
+                            "snaps": snaps,
+                            # exact records promise bit-identity with a
+                            # COLD run; a kv-quant tail prefill computes
+                            # over DEQUANTIZED prefix rows, so its end
+                            # state is serve-over-cache, not cold-faithful
+                            # — donate its tail pages to the trie (partial
+                            # hits are documented as serve-over-cache) but
+                            # never as an exact record
+                            "record_ok": not (self.cfg.kv_cache_quant
+                                              and o > 0)}
+        return logits
+
+    def _admit_and_prefill(self):
+        """Pop pending requests into free lanes, produce each one's
+        end-of-prompt logits (full prefill, tail prefill, or an exact-hit
+        record read), arm the lane mirrors, and EMIT the prefill-sampled
+        first token immediately — streaming TTFT equals prefill latency,
+        and a budget-1 (or instant stop-token) request finishes without
+        ever occupying a decode segment."""
+        admitted = self.sched.admit()
+        for req in admitted:
+            eff = req.effective_prompt
+            S = int(eff.shape[0])
+            if req.hit is not None and req.hit.exact:
+                logits = self._admit_exact(req, S)
+            else:
+                logits = self._admit_prefill(req, eff, S)
             lane_key = self._lane_key(req)
+            e = len(req.emitted)
             first = sample_tokens(
                 self.cfg, logits[:, -1], req.params.temperature,
                 jnp.asarray(lane_key) if req.params.temperature > 0 else None,
-                len(req.emitted))
+                e)
+            tok0 = int(first[0, 0])
             lane = req.lane
             self._bt[lane] = 0
             self._bt[lane, :len(req.pages)] = req.pages
             self._pos[lane] = S
-            self._cur[lane, 0] = int(first[0, 0])
-            self._steps[lane] = len(req.emitted)
+            self._cur[lane, 0] = tok0
+            self._steps[lane] = e
             self._temps[lane] = req.params.temperature
             self._keys[lane] = lane_key
             req.status = RequestStatus.DECODING
+            if req.params.stop_token is not None \
+                    and tok0 == req.params.stop_token:
+                req.stopped = True
+            req.emitted.append(tok0)
+            if req.done:                 # budget 1 / instant stop token
+                self.sched.finish(lane)
+                self._reset_lane(lane)
+                self._handles.pop(req.rid, None)
         return admitted
 
     def _decode_segment(self) -> bool:

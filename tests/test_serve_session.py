@@ -144,17 +144,19 @@ def test_preempt_resume_follows_effective_prompt_oracle():
     with engine.session(lanes=1, page_size=4, segment=2) as sess:
         a = sess.submit(pa, SamplingParams(max_tokens=8))
         b = sess.submit(pb, SamplingParams(max_tokens=4))
-        assert sess.step()
-        assert a.status == RequestStatus.DECODING and a.tokens_ready == 2
+        assert sess.step()          # admission round: first token emitted
+        assert a.status == RequestStatus.DECODING and a.tokens_ready == 1
+        assert sess.step()          # one decode segment (+2 tokens)
+        assert a.tokens_ready == 3
         assert sess.preempt(a)
         assert a.status == RequestStatus.PREEMPTED
-        assert not sess.sched.active and a.tokens_ready == 2
+        assert not sess.sched.active and a.tokens_ready == 3
         sess.run_until_idle()
         got_a = np.asarray(a.result())
-        np.testing.assert_array_equal(got_a[:2], ref[:2])    # prefix kept
+        np.testing.assert_array_equal(got_a[:3], ref[:3])    # prefix kept
         # resumed tail == serving the effective prompt fresh
-        eff = np.concatenate([pa, got_a[:2].astype(np.int32)])
-        np.testing.assert_array_equal(got_a[2:], _ref(engine, eff, 6))
+        eff = np.concatenate([pa, got_a[:3].astype(np.int32)])
+        np.testing.assert_array_equal(got_a[3:], _ref(engine, eff, 5))
         # the co-tenant (admitted only after a finished) is unaffected
         np.testing.assert_array_equal(np.asarray(b.result()),
                                       _ref(engine, pb, 4))
