@@ -30,4 +30,11 @@ echo "== prefix-cache bit-identity gate =="
 python -m pytest -q tests/test_prefix_cache.py \
     -k "bit_identical or partial_hit"
 
+echo "== paged-kernel parity gate (interpret mode) =="
+# Pallas in-place-page decode kernel vs the XLA gather fallback: kernel-
+# level bit parity + serve-path token streams unchanged with the kernel
+# enabled (REPRO_PAGED_KERNEL=1, the default) across the config matrix.
+python -m pytest -q tests/test_paged_kernel.py \
+    -k "bit_parity or fallback_parity or serve_tokens_unchanged"
+
 echo "check.sh: all green"

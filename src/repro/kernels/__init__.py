@@ -1,10 +1,13 @@
 """B⊕LD Pallas TPU kernels (validated in interpret mode on CPU).
 
-boolean_matmul -- int8 +-1 MXU GEMM with fused threshold activation
-packed_xnor    -- uint32 bit-packed XNOR-popcount GEMM (1-bit dataflow floor)
-boolean_bwd    -- fused vote-aggregation weight backward with tanh' masking
+boolean_matmul  -- int8 +-1 MXU GEMM with fused threshold activation
+packed_xnor     -- uint32 bit-packed XNOR-popcount GEMM (1-bit dataflow floor)
+                   + the thin-M serving GEMV with its Mosaic tile autotable
+boolean_bwd     -- fused vote-aggregation weight backward with tanh' masking
+paged_attention -- serve-decode flash attention that walks the block table
+                   in-kernel and reads K/V pool pages IN PLACE (no gather)
 
 Each kernel ships with ops.py (jit wrappers) and ref.py (pure-jnp oracles).
 """
 from . import ops, ref
-from .packed_xnor import pack_bits, unpack_bits
+from .packed_xnor import gemv_tile_config, pack_bits, unpack_bits

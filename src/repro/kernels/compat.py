@@ -2,10 +2,14 @@
 
 ``pltpu.CompilerParams`` was renamed from ``TPUCompilerParams`` across jax
 releases; resolve whichever this runtime ships so the kernels import on both.
+``pl.CostEstimate`` is newer still — None on runtimes that predate it
+(callers skip the hint).
 """
 from __future__ import annotations
 
+from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) \
     or pltpu.TPUCompilerParams
+CostEstimate = getattr(pl, "CostEstimate", None)

@@ -49,3 +49,25 @@ def flash_attention_tpu(q, k, v, **kw):
 
     kw.setdefault("interpret", INTERPRET)
     return _fa.flash_attention_tpu(q, k, v, **kw)
+
+
+def paged_flash_decode(q, k_pool, v_pool, block_table, pos,
+                       k_scale=None, v_scale=None, **kw):
+    """Serve decode over a block-table paged pool, pages read in place."""
+    from . import paged_attention as _pa
+
+    kw.setdefault("interpret", INTERPRET)
+    return _pa.paged_flash_decode(q, k_pool, v_pool, block_table, pos,
+                                  k_scale, v_scale, **kw)
+
+
+def paged_prefix_attention(q, k_tail, v_tail, k_pool, v_pool, page_ids,
+                           offset, prefix_len, length,
+                           k_scale=None, v_scale=None, **kw):
+    """Prefix-cache tail prefill over in-place prefix pages."""
+    from . import paged_attention as _pa
+
+    kw.setdefault("interpret", INTERPRET)
+    return _pa.paged_prefix_attention(q, k_tail, v_tail, k_pool, v_pool,
+                                      page_ids, offset, prefix_len, length,
+                                      k_scale, v_scale, **kw)

@@ -23,7 +23,65 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .compat import CompilerParams
+from .compat import CompilerParams, CostEstimate
+
+
+# ---------------------------------------------------------------------------
+# GEMV tile autotune table
+# ---------------------------------------------------------------------------
+# Mosaic-real tiling for the thin-M serving GEMV: the weight tile (bkw, bn)
+# wants sublane-aligned bkw (uint32 tiles are (8, 128)) and lane-full bn
+# (multiples of 128); the in-VMEM unpacked ±1 view is (bkw*32, bn) fp32, so
+# bkw also bounds the transient VMEM footprint (bkw=16, bn=256 -> 512 KiB,
+# the cap every entry must respect). Entries are (block_n, block_kw), keyed
+# by the GEMV shape signature (N, Kw, activation dtype) and populated from
+# the tile sweep in benchmarks/bench_kernels.py (``python
+# benchmarks/bench_kernels.py --sweep-gemv`` prints entries in this literal
+# form; re-sweep on real TPU — the checked-in entries come from the
+# interpret harness and encode layout, not silicon, preferences). All tile
+# candidates come from the sweep grid (bn ∈ {128, 256}, bkw ∈ {8, 16}) so
+# a re-sweep can reproduce or overturn any entry.
+GEMV_TILE_TABLE = {
+    # the decode GEMVs the packed smoke serve configs actually issue
+    # (fused wqkv/wgu thin projections + wo/wd down projections)
+    (320, 2, "float32"): (128, 8),
+    (256, 2, "float32"): (128, 8),
+    (64, 4, "float32"): (128, 8),
+    (64, 8, "float32"): (128, 8),
+    # square serving shapes (bench_kernels trajectory points)
+    (512, 16, "float32"): (256, 8),
+    (1024, 32, "float32"): (256, 16),
+    (4096, 128, "float32"): (256, 16),
+}
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def gemv_tile_config(N: int, Kw: int, dtype=jnp.float32):
+    """(block_n, block_kw) for a (M thin, Kw packed words, N) GEMV.
+
+    Table hit wins; otherwise a Mosaic-aligned heuristic: lane-full
+    ``block_n`` (128, or 256 once N spans multiple lanes of tiles) and an
+    8-sublane-aligned ``block_kw`` capped so the transient unpacked weight
+    tile stays ≲ 512 KiB of VMEM.
+
+    ``dtype`` is the caller's activation dtype. The kernel unpacks and
+    accumulates in fp32 regardless (activations are cast before the grid —
+    see ``packed_xnor_gemv``), so a miss on the exact dtype falls back to
+    the shape's ``float32`` entry before the heuristic; the dtype stays in
+    the key for a future in-kernel bf16 variant whose tiles WILL differ.
+    bf16 serving (cfg.dtype default) therefore hits the fp32-swept entries.
+    """
+    N, Kw = int(N), int(Kw)
+    name = jnp.dtype(dtype).name
+    for key in ((N, Kw, name), (N, Kw, "float32")):
+        if key in GEMV_TILE_TABLE:
+            return GEMV_TILE_TABLE[key]
+    bn = 128 if N <= 128 else 256
+    bkw = min(_round_up(max(Kw, 1), 8), 16)
+    return bn, bkw
 
 
 # ---------------------------------------------------------------------------
@@ -109,7 +167,7 @@ def _xnor_gemv_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_kw: int):
 )
 def packed_xnor_gemv(x: jax.Array, w_packed: jax.Array, *,
                      k_valid: int,
-                     block_n: int = 128, block_kw: int = 16,
+                     block_n: int = None, block_kw: int = None,
                      interpret: bool = True) -> jax.Array:
     """y[i,j] = Σ_k x[i,k]·e(w[k,j]) with only the weights bit-packed.
 
@@ -117,6 +175,8 @@ def packed_xnor_gemv(x: jax.Array, w_packed: jax.Array, *,
       x: (M, K) real (or ±1 int8) activations, M thin (decode batch).
       w_packed: (Kw, N) uint32 — K packed along axis 0 (``pack_bits`` layout).
       k_valid: the true contraction length K (= x.shape[1]).
+      block_n/block_kw: tile override; None consults the autotune table
+        (``gemv_tile_config``, keyed by (N, Kw, x.dtype)).
 
     Returns (M, N) float32 counting outputs (exact: ±1·x accumulated fp32).
     """
@@ -126,16 +186,33 @@ def packed_xnor_gemv(x: jax.Array, w_packed: jax.Array, *,
         raise ValueError(
             f"packed gemv mismatch: x {x.shape}, w {w_packed.shape}, "
             f"k_valid={k_valid}")
+    if block_n is None or block_kw is None:
+        tn, tkw = gemv_tile_config(N, Kw, x.dtype)
+        block_n = tn if block_n is None else block_n
+        block_kw = tkw if block_kw is None else block_kw
 
-    bkw = min(block_kw, Kw)
-    bn = min(block_n, N)
-    Kwp, Np = -(-Kw // bkw) * bkw, -(-N // bn) * bn
-    Mp = -(-M // 8) * 8                        # fp32 sublane tile
+    # Mosaic alignment: bkw on uint32 sublane tiles (8), bn on full lanes
+    # (128), M on fp32 sublanes (8) — padded compute over aligned tiles
+    # beats Mosaic relayouts of ragged ones; pads are sliced off below.
+    bkw = min(block_kw, _round_up(Kw, 8))
+    bn = min(block_n, _round_up(N, 128))
+    Kwp, Np = _round_up(Kw, bkw), _round_up(N, bn)
+    Mp = _round_up(M, 8)
     n_kw = Kwp // bkw
     xp = jnp.pad(x.astype(jnp.float32), ((0, Mp - M), (0, Kwp * 32 - K)))
     wp = jnp.pad(w_packed, ((0, Kwp - Kw), (0, Np - N)))
 
     kernel = functools.partial(_xnor_gemv_kernel, n_kw=n_kw)
+    # runtimes old enough to lack pl.CostEstimate also predate the
+    # ``cost_estimate`` kwarg itself, so the hint must be omitted from the
+    # call entirely, not passed as None
+    cost_kw = {} if CostEstimate is None else dict(cost_estimate=CostEstimate(
+        # the MAC work after the in-VMEM unpack, and the HBM bytes that
+        # actually move: fp32 activations + PACKED weight words + fp32 out
+        flops=2 * Mp * Kwp * 32 * Np,
+        bytes_accessed=xp.nbytes + wp.nbytes + Mp * Np * 4,
+        transcendentals=0,
+    ))
     yp = pl.pallas_call(
         kernel,
         grid=(Np // bn, n_kw),
@@ -150,6 +227,7 @@ def packed_xnor_gemv(x: jax.Array, w_packed: jax.Array, *,
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
+        **cost_kw,
     )(xp, wp)
     return yp[:M, :N]
 

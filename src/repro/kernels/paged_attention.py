@@ -1,0 +1,390 @@
+"""Pallas paged-attention decode kernels: in-place page reads, no pool gather.
+
+The serve decode path keeps K/V in a block-table paged pool
+(serve/paged_cache.py). The portable XLA path reads it by materializing a
+lane-contiguous ``(L, C*page, KVp, hd)`` gather via fancy indexing — per-token
+HBM traffic scales with the whole pool slab, throwing away the very
+data-movement win B⊕LD packing buys. These kernels walk each lane's block
+table *inside* the kernel (``PrefetchScalarGridSpec`` scalar prefetch) and DMA
+only the pages the lane actually attends over — O(tokens-attended) pool bytes
+per step — straight from the pool refs (``pltpu.ANY``) into VMEM scratch.
+
+Two entry points:
+
+  * ``paged_flash_decode`` — one-token decode over L lanes. Grid is per-lane;
+    the lane's live pages (``ceil((pos+1)/page)``, clamped to the table) are
+    the K-loop; int8 KV rows dequantize in-kernel from the per-(token, head)
+    scale pools; garbage-page-0 rows and rows beyond ``pos`` are masked.
+  * ``paged_prefix_attention`` — the prefix-cache tail prefill: tail queries
+    attend over [cached prefix pages ; the tail's own K/V] without ever
+    materializing the gathered prefix rows (``gather_prefix_kv``'s job on the
+    fallback path).
+
+BIT-IDENTITY CONTRACT: Boolean sign() amplifies reduction-order ulps into
+different tokens, so greedy parity between the kernel and the XLA fallback
+(``REPRO_PAGED_KERNEL=0``) requires bitwise-equal attention outputs, not just
+allclose. Both kernels therefore replicate their XLA references' exact op
+sequence — the same chunk sizes (``decode_chunk`` / ``attn_chunk``), the same
+dequant-then-astype chain, the same einsum shapes per lane/head slice, the
+same masking constants — and only replace the HBM gather with in-place page
+DMA. Rows the XLA path gathers-then-masks are zero-filled here: their
+post-softmax weight is exactly 0.0 either way, so accumulators agree to the
+bit (±0 at worst). Changing any op below requires re-checking
+tests/test_paged_kernel.py's bit-parity gates.
+
+VMEM model: one lane's window (C*page rows) must fit VMEM scratch — true for
+serving-sized tables (e.g. 2048 rows × 8 kv × 256 hd × 2B = 8 MiB). Splitting
+the page loop into multiple online-softmax passes would lift that ceiling but
+break bit-parity with the single-chunk XLA path; it is a recorded follow-up
+(ROADMAP) gated on relaxing the parity contract to token-level.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _softcap(x, cap: float):
+    # mirror of models/modules.softcap (kept local: kernels must not import
+    # models — the dependency points the other way)
+    return cap * jnp.tanh(x / cap) if cap > 0 else x
+
+
+def _dequant(x, scale):
+    # mirror of models/attention.kv_dequant
+    if x.dtype == jnp.int8:
+        return x.astype(jnp.float32) * scale[..., None]
+    return x.astype(jnp.float32)
+
+
+def _iota(shape, dim):
+    return jax.lax.broadcasted_iota(jnp.int32, shape, dim)
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token per lane over the lane's block-table pages
+# ---------------------------------------------------------------------------
+def _decode_kernel(bt_ref, pos_ref, q_ref, kpool_ref, vpool_ref, *rest,
+                   page: int, C: int, chunk: int, window: int,
+                   softcap_val: float, scale: float, quant: bool):
+    if quant:
+        (kspool_ref, vspool_ref, o_ref,
+         kbuf, vbuf, ksbuf, vsbuf, sems) = rest
+    else:
+        o_ref, kbuf, vbuf, sems = rest
+        ksbuf = vsbuf = None
+
+    lane = pl.program_id(0)
+    pos = pos_ref[lane]
+    S_loc = C * page
+
+    # zero the scratch: rows never DMA'd are masked to weight exactly 0.0
+    # below, but they still ride the accumulator einsum — uninitialized VMEM
+    # could hold NaN bits and 0*NaN would poison the lane.
+    kbuf[...] = jnp.zeros_like(kbuf)
+    vbuf[...] = jnp.zeros_like(vbuf)
+    if quant:
+        ksbuf[...] = jnp.zeros_like(ksbuf)
+        vsbuf[...] = jnp.zeros_like(vsbuf)
+
+    # live pages: rows 0..pos inclusive (the new token is already scattered
+    # at ``pos``); an overrun lane (pos past its table) clamps to the full
+    # table, exactly the row set the XLA gather reads and masks.
+    n_live = jnp.minimum(C, (pos + page) // page)
+
+    def copy_page(c, _):
+        pid = bt_ref[lane, c]
+        dst = pl.ds(c * page, page)
+        cps = [pltpu.make_async_copy(kpool_ref.at[pid], kbuf.at[dst],
+                                     sems.at[0]),
+               pltpu.make_async_copy(vpool_ref.at[pid], vbuf.at[dst],
+                                     sems.at[1])]
+        if quant:
+            cps += [pltpu.make_async_copy(kspool_ref.at[pid], ksbuf.at[dst],
+                                          sems.at[2]),
+                    pltpu.make_async_copy(vspool_ref.at[pid], vsbuf.at[dst],
+                                          sems.at[3])]
+        for cp in cps:
+            cp.start()
+        for cp in cps:
+            cp.wait()
+        return 0
+
+    jax.lax.fori_loop(0, n_live, copy_page, 0)
+
+    # _flash_decode_local's chunk loop, batch dim dropped (one lane here).
+    q = q_ref[0]                                   # (KV, R, hd)
+    Cc = min(chunk, S_loc)
+    n = -(-S_loc // Cc)
+    KV, R, hd = q.shape
+    m = jnp.full((KV, R), -1e30, jnp.float32)
+    l = jnp.zeros((KV, R), jnp.float32)
+    acc = jnp.zeros((KV, R, hd), jnp.float32)
+    for ci in range(n):
+        rows = pl.ds(ci * Cc, Cc)
+        kf = _dequant(kbuf[rows], None if not quant else ksbuf[rows])
+        s = jnp.einsum("grd,cgd->grc", q.astype(jnp.float32), kf,
+                       preferred_element_type=jnp.float32) * scale
+        s = _softcap(s, softcap_val)
+        lrow = ci * Cc + _iota((1, 1, Cc), 2)
+        kpos = lrow
+        valid = (kpos <= pos) & (lrow < S_loc)
+        if window > 0:
+            valid &= kpos > pos - window
+        s = jnp.where(valid, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        pexp = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(pexp, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "grc,cgd->grd", pexp,
+            _dequant(vbuf[rows], None if not quant else vsbuf[rows]),
+            preferred_element_type=jnp.float32)
+        m = m_new
+    o_ref[0] = acc / jnp.maximum(l[..., None], 1e-30)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap_val", "chunk", "interpret"),
+)
+def paged_flash_decode(q, k_pool, v_pool, block_table, pos,
+                       k_scale=None, v_scale=None, *, window: int = 0,
+                       softcap_val: float = 0.0, chunk: int = 2048,
+                       interpret: bool = True):
+    """Flash-decode over a paged pool, pages read in place per lane.
+
+    Args:
+      q: (L, KV, R, hd) grouped queries (R = GQA group size).
+      k_pool/v_pool: (n_pages, page, KV, hd) pool blocks (cfg.dtype or int8).
+      block_table: (L, C) int32 lane-logical page -> physical page.
+      pos: (L,) int32 per-lane positions (new token already written at pos).
+      k_scale/v_scale: (n_pages, page, KV) fp32 per-(token, head) scales,
+        required iff the pools are int8.
+
+    Returns (L, KV, R, hd) fp32 — bitwise equal to the XLA block-table
+    gather + ``_flash_decode_local`` reference.
+    """
+    L, KV, R, hd = q.shape
+    n_pages, page = k_pool.shape[:2]
+    C = block_table.shape[1]
+    S_loc = C * page
+    Cc = min(chunk, S_loc)
+    Spad = -(-S_loc // Cc) * Cc
+    quant = k_pool.dtype == jnp.int8
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _decode_kernel, page=page, C=C, chunk=chunk, window=window,
+        softcap_val=softcap_val, scale=scale, quant=quant)
+    scratch = [pltpu.VMEM((Spad, KV, hd), k_pool.dtype),
+               pltpu.VMEM((Spad, KV, hd), v_pool.dtype)]
+    in_specs = [
+        pl.BlockSpec((1, KV, R, hd), lambda lane, bt, pv: (lane, 0, 0, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+    ]
+    args = [block_table, pos, q, k_pool, v_pool]
+    if quant:
+        in_specs += [pl.BlockSpec(memory_space=pltpu.ANY)] * 2
+        args += [k_scale, v_scale]
+        scratch += [pltpu.VMEM((Spad, KV), jnp.float32),
+                    pltpu.VMEM((Spad, KV), jnp.float32)]
+    scratch.append(pltpu.SemaphoreType.DMA((4,)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(L,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, KV, R, hd),
+                               lambda lane, bt, pv: (lane, 0, 0, 0)),
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((L, KV, R, hd), jnp.float32),
+        interpret=interpret,
+    )(*args)
+
+
+# ---------------------------------------------------------------------------
+# Prefix-cache tail prefill: tail queries over [prefix pages ; tail K/V]
+# ---------------------------------------------------------------------------
+def _prefix_kernel(page_ids_ref, lens_ref, q_ref, kt_ref, vt_ref,
+                   kpool_ref, vpool_ref, *rest, page: int, npp: int,
+                   S: int, chunk: int, n_rep: int, window: int,
+                   softcap_val: float, scale: float, quant: bool):
+    if quant:
+        (kspool_ref, vspool_ref, o_ref,
+         kbuf, vbuf, kq, vq, ks, vs, sems) = rest
+    else:
+        o_ref, kbuf, vbuf, sems = rest
+        kq = vq = ks = vs = None
+
+    prefix_len = lens_ref[0]
+    length = lens_ref[1]
+    offset = lens_ref[2]
+    P = npp * page
+    H, T, hd = q_ref.shape
+    KV = kt_ref.shape[1]
+
+    kbuf[...] = jnp.zeros_like(kbuf)
+    vbuf[...] = jnp.zeros_like(vbuf)
+    if quant:
+        kq[...] = jnp.zeros_like(kq)
+        vq[...] = jnp.zeros_like(vq)
+        ks[...] = jnp.zeros_like(ks)
+        vs[...] = jnp.zeros_like(vs)
+
+    # DMA only the pages that hold live prefix rows; the rest of the bucket
+    # (garbage-page padding on the fallback path) is masked below anyway.
+    n_live = jnp.minimum(npp, (prefix_len + page - 1) // page)
+    kdst = kbuf if not quant else kq
+    vdst = vbuf if not quant else vq
+
+    def copy_page(c, _):
+        pid = page_ids_ref[c]
+        dst = pl.ds(c * page, page)
+        cps = [pltpu.make_async_copy(kpool_ref.at[pid], kdst.at[dst],
+                                     sems.at[0]),
+               pltpu.make_async_copy(vpool_ref.at[pid], vdst.at[dst],
+                                     sems.at[1])]
+        if quant:
+            cps += [pltpu.make_async_copy(kspool_ref.at[pid], ks.at[dst],
+                                          sems.at[2]),
+                    pltpu.make_async_copy(vspool_ref.at[pid], vs.at[dst],
+                                          sems.at[3])]
+        for cp in cps:
+            cp.start()
+        for cp in cps:
+            cp.wait()
+        return 0
+
+    jax.lax.fori_loop(0, n_live, copy_page, 0)
+
+    if quant:
+        # gather_prefix_kv's chain: int8 rows -> fp32 * scale -> cfg.dtype
+        kbuf[pl.ds(0, P)] = _dequant(kq[...], ks[...]).astype(kbuf.dtype)
+        vbuf[pl.ds(0, P)] = _dequant(vq[...], vs[...]).astype(vbuf.dtype)
+    kbuf[pl.ds(P, S)] = kt_ref[...]
+    vbuf[pl.ds(P, S)] = vt_ref[...]
+
+    # flash_attention_abs's chunk loop, batch dim dropped (batch-1 prefill):
+    # K = prefix bucket + tail bucket, kv group-broadcast to H heads.
+    K = P + S
+    ck = min(chunk, K)
+    nk = -(-K // ck)
+    q = q_ref[...]                                  # (H, T, hd)
+    qpos = offset + _iota((T, 1), 0)                # absolute tail positions
+    m = jnp.full((H, T), -1e30, jnp.float32)
+    l = jnp.zeros((H, T), jnp.float32)
+    acc = jnp.zeros((H, T, hd), jnp.float32)
+    for ci in range(nk):
+        rows = pl.ds(ci * ck, ck)
+        kc = kbuf[rows]                             # (ck, KV, hd)
+        vc = vbuf[rows]
+        kc_h = jnp.broadcast_to(
+            kc.transpose(1, 0, 2)[:, None], (KV, n_rep, ck, hd)
+        ).reshape(H, ck, hd)
+        vc_h = jnp.broadcast_to(
+            vc.transpose(1, 0, 2)[:, None], (KV, n_rep, ck, hd)
+        ).reshape(H, ck, hd)
+        r = ci * ck + _iota((1, ck), 1)             # global row ids
+        in_prefix = r < P
+        # prefix rows sit at absolute positions 0..P-1; tail row j sits at
+        # offset + j (the tail's own RoPE positions).
+        kpos = jnp.where(in_prefix, r, offset + (r - P))
+        kval = jnp.where(in_prefix, r < prefix_len,
+                         ((r - P) < length) & (r < K))
+        s = jnp.einsum("htd,hkd->htk", q, kc_h,
+                       preferred_element_type=jnp.float32) * scale
+        s = _softcap(s, softcap_val)
+        valid = kval & (kpos <= qpos)               # (T, ck)
+        if window > 0:
+            valid &= qpos - kpos < window
+        s = jnp.where(valid[None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        pexp = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(pexp, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "htk,hkd->htd", pexp.astype(vc_h.dtype), vc_h,
+            preferred_element_type=jnp.float32)
+        m = m_new
+    o_ref[...] = acc / jnp.maximum(l[..., None], 1e-30)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_rep", "window", "softcap_val", "chunk", "interpret"),
+)
+def paged_prefix_attention(q, k_tail, v_tail, k_pool, v_pool, page_ids,
+                           offset, prefix_len, length,
+                           k_scale=None, v_scale=None, *, n_rep: int,
+                           window: int = 0, softcap_val: float = 0.0,
+                           chunk: int = 1024, interpret: bool = True):
+    """Tail-prefill attention over in-place prefix pages + the tail's K/V.
+
+    Args:
+      q: (H, T, hd) tail queries, H = KV * n_rep (GQA broadcast order).
+      k_tail/v_tail: (S, KV, hd) the tail's own K/V rows (S = T bucket).
+      k_pool/v_pool: (n_pages, page, KV, hd) pool blocks; page_ids: (npp,)
+        int32 physical pages of the cached prefix (garbage-page padding ok).
+      offset: traced int32 — absolute position of tail row 0 (= hit length).
+      prefix_len/length: traced int32 — live prefix rows / true tail length.
+      k_scale/v_scale: scale pools, required iff the pool is int8.
+
+    Returns (H, T, hd) fp32 — bitwise equal to gather_prefix_kv +
+    ``flash_attention_abs`` over the concatenated rows.
+    """
+    H, T, hd = q.shape
+    S, KV, _ = k_tail.shape
+    npp = page_ids.shape[0]
+    page = k_pool.shape[1]
+    quant = k_pool.dtype == jnp.int8
+    P = npp * page
+    K = P + S
+    ck = min(chunk, K)
+    Kpad = -(-K // ck) * ck
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _prefix_kernel, page=page, npp=npp, S=S, chunk=chunk, n_rep=n_rep,
+        window=window, softcap_val=softcap_val, scale=scale, quant=quant)
+    scratch = [pltpu.VMEM((Kpad, KV, hd), k_tail.dtype),
+               pltpu.VMEM((Kpad, KV, hd), v_tail.dtype)]
+    in_specs = [pl.BlockSpec(memory_space=pltpu.VMEM)] * 3 + \
+               [pl.BlockSpec(memory_space=pltpu.ANY)] * 2
+    args = [page_ids,
+            jnp.stack([jnp.asarray(prefix_len, jnp.int32),
+                       jnp.asarray(length, jnp.int32),
+                       jnp.asarray(offset, jnp.int32)]),
+            q, k_tail, v_tail, k_pool, v_pool]
+    if quant:
+        in_specs += [pl.BlockSpec(memory_space=pltpu.ANY)] * 2
+        args += [k_scale, v_scale]
+        scratch += [pltpu.VMEM((P, KV, hd), jnp.int8),
+                    pltpu.VMEM((P, KV, hd), jnp.int8),
+                    pltpu.VMEM((P, KV), jnp.float32),
+                    pltpu.VMEM((P, KV), jnp.float32)]
+    scratch.append(pltpu.SemaphoreType.DMA((4,)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(1,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((H, T, hd), jnp.float32),
+        interpret=interpret,
+    )(*args)

@@ -10,6 +10,7 @@ replicated; larger kv counts are padded+sharded like Q.
 from __future__ import annotations
 
 import math
+import os
 from typing import Optional, Tuple
 
 import jax
@@ -18,6 +19,19 @@ from jax.sharding import PartitionSpec as P
 
 from .modules import (FSDP_AXIS, MODEL_AXIS, ModelConfig, proj_apply,
                       proj_init, rope, softcap)
+
+
+def paged_kernel_enabled() -> bool:
+    """Whether paged serve attention runs the Pallas in-place-page kernels
+    (kernels/paged_attention.py) instead of the XLA block-table gather.
+
+    Checked at TRACE time — compiled serve fns bake the choice in, so the
+    session/engine compile-cache keys include this flag and flipping
+    ``REPRO_PAGED_KERNEL`` mid-process recompiles instead of serving stale
+    graphs. ``REPRO_PAGED_KERNEL=0`` keeps the gather path as the reference
+    fallback (bitwise-identical outputs — tests/test_paged_kernel.py).
+    """
+    return os.environ.get("REPRO_PAGED_KERNEL", "1") != "0"
 
 
 def attention_init(key, cfg: ModelConfig, axis_size: int = 16):
@@ -229,6 +243,39 @@ def gather_prefix_kv(cfg: ModelConfig, bcache, page_ids):
         return {"k": kv_dequant(k, rows("k_scale")),
                 "v": kv_dequant(v, rows("v_scale"))}
     return {"k": kv_dequant(k), "v": kv_dequant(v)}
+
+
+def flash_prefix_attention_paged(cfg: ModelConfig, bcache, page_ids, q, k, v,
+                                 positions, prefix_len, length, *,
+                                 local: bool = False):
+    """Tail-prefill attention over a cached prefix read IN PLACE from pool
+    pages — the Pallas replacement for ``gather_prefix_kv`` +
+    ``flash_attention_abs`` (bitwise-identical; see
+    kernels/paged_attention.py for the parity contract).
+
+    bcache: one block's group-sliced pool leaves ({"k"/"v": (n_pages, page,
+    KVp, hd)} plus scale pools under kv_cache_quant); page_ids: (npp,) int32
+    physical prefix pages (garbage-page padding allowed); q: (1, S, Hp, hd)
+    tail queries; k/v: (1, S, KVp, hd) the tail's own rows (pre-GQA-repeat);
+    positions: (1, S) absolute tail positions (offset + i); prefix_len /
+    ``length``: traced int32 live-row bounds (``length`` None ⇒ S).
+    Returns (1, S, Hp, hd) in q.dtype.
+    """
+    from repro.kernels import ops as kops
+
+    B, S, hp, hd = q.shape
+    if B != 1:
+        raise ValueError("paged prefix attention serves batch-1 admission "
+                         f"prefills; got batch {B}")
+    kvp = k.shape[2]
+    out = kops.paged_prefix_attention(
+        q[0].transpose(1, 0, 2), k[0], v[0], bcache["k"], bcache["v"],
+        page_ids, positions[0, 0], prefix_len,
+        jnp.asarray(S if length is None else length, jnp.int32),
+        bcache.get("k_scale"), bcache.get("v_scale"),
+        n_rep=hp // kvp, window=cfg.sliding_window if local else 0,
+        softcap_val=cfg.attn_logit_softcap, chunk=cfg.attn_chunk)
+    return out.transpose(1, 0, 2)[None].astype(q.dtype)
 
 
 def attention_apply(cfg: ModelConfig, p, x, positions, *,
@@ -450,7 +497,7 @@ def attention_decode(cfg: ModelConfig, p, x, cache, pos, *,
 
 
 def attention_decode_paged(cfg: ModelConfig, p, x, cache, block_table, pos,
-                           *, local: bool = False, axis_size: int = 16):
+                           *, local: bool = False):
     """One-token decode over a block-table PAGED cache (continuous batching).
 
     x: (L,1,D) with L scheduler lanes; cache{k,v}: (n_pages, page, KVp, hd)
@@ -458,19 +505,26 @@ def attention_decode_paged(cfg: ModelConfig, p, x, cache, block_table, pos,
     block_table: (L, C) int32 mapping lane-logical page j -> physical page;
     pos: (L,) int32 per-lane positions. Logical cache row r of lane l lives
     at ``pool[block_table[l, r // page], r % page]`` — the write scatters
-    the new token into its (page, offset) cell, the read gathers the lane's
-    pages back into a contiguous (L, C·page, ...) window and runs the same
-    flash-decode with per-lane position masking. Physical page 0 is the
-    reserved garbage page: idle/overrun lanes point at it, so their writes
-    never touch pages owned by live requests.
+    the new token into its (page, offset) cell; the read walks the lane's
+    live pages IN PLACE inside the Pallas flash-decode kernel
+    (kernels/paged_attention.py — O(tokens-attended) pool bytes per step),
+    or, under ``REPRO_PAGED_KERNEL=0``, gathers them back into a contiguous
+    (L, C·page, ...) window and runs the same flash-decode with per-lane
+    position masking (the bitwise-identical XLA reference). Physical page 0
+    is the reserved garbage page: idle/overrun lanes point at it, so their
+    writes never touch pages owned by live requests.
+
+    (The TP ``axis_size`` parameter this signature used to take was dead
+    since the shard_map rework — paged decode always runs the replicated
+    single-host layout; head padding uses the default axis.)
     """
     B = x.shape[0]
     hd = cfg.head_dim_
-    hp = cfg.heads_padded(axis_size)
-    kvp = cfg.kv_heads_padded(axis_size)
+    hp = cfg.heads_padded()
+    kvp = cfg.kv_heads_padded()
     page = cache["k"].shape[1]
     C = block_table.shape[1]
-    q, k_new, v_new = _qkv(cfg, p, x, pos[:, None], axis_size)
+    q, k_new, v_new = _qkv(cfg, p, x, pos[:, None])
     n_rep = hp // kvp
     qg = q[:, 0].reshape(B, kvp, n_rep, hd)
 
@@ -503,19 +557,31 @@ def attention_decode_paged(cfg: ModelConfig, p, x, cache, block_table, pos,
     new_cache["k"] = cache["k"].at[page_id, off].set(k_new[:, 0])
     new_cache["v"] = cache["v"].at[page_id, off].set(v_new[:, 0])
 
-    # block-table gather: lane-contiguous (L, C*page, KVp, hd) view
-    k = new_cache["k"][block_table].reshape(B, C * page, kvp, hd)
-    v = new_cache["v"][block_table].reshape(B, C * page, kvp, hd)
-    ks = (new_cache["k_scale"][block_table].reshape(B, C * page, kvp)
-          if quant else None)
-    vs = (new_cache["v_scale"][block_table].reshape(B, C * page, kvp)
-          if quant else None)
-    m, l, acc = _flash_decode_local(cfg, qg, k, v, pos, 0, local=local,
-                                    k_scale=ks, v_scale=vs)
-    out = acc / jnp.maximum(l[..., None], 1e-30)
+    if paged_kernel_enabled():
+        # Pallas kernel: the lane's block table is walked in-kernel and only
+        # its live pages are DMA'd from the pool refs — no (L, C*page, ...)
+        # slab ever materializes in HBM.
+        from repro.kernels import ops as kops
+
+        out = kops.paged_flash_decode(
+            qg, new_cache["k"], new_cache["v"], block_table, pos,
+            new_cache.get("k_scale"), new_cache.get("v_scale"),
+            window=cfg.sliding_window if local else 0,
+            softcap_val=cfg.attn_logit_softcap, chunk=cfg.decode_chunk)
+    else:
+        # XLA reference: lane-contiguous (L, C*page, KVp, hd) gather
+        k = new_cache["k"][block_table].reshape(B, C * page, kvp, hd)
+        v = new_cache["v"][block_table].reshape(B, C * page, kvp, hd)
+        ks = (new_cache["k_scale"][block_table].reshape(B, C * page, kvp)
+              if quant else None)
+        vs = (new_cache["v_scale"][block_table].reshape(B, C * page, kvp)
+              if quant else None)
+        m, l, acc = _flash_decode_local(cfg, qg, k, v, pos, 0, local=local,
+                                        k_scale=ks, v_scale=vs)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
 
     out = out.reshape(B, 1, hp, hd).astype(x.dtype)
-    out = _head_mask(cfg, out, axis_size)
+    out = _head_mask(cfg, out)
     out = out.reshape(B, 1, hp * hd)
     return proj_apply(cfg, p["wo"], out), new_cache
 

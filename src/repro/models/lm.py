@@ -316,6 +316,7 @@ def lm_decode_step_paged(cfg: ModelConfig, params, cache, tokens):
 # ---------------------------------------------------------------------------
 def _apply_block_prefill(cfg: ModelConfig, bp, role, x, positions,
                          length=None, prefix=None, prefix_len=None,
+                         prefix_pages=None, prefix_ids=None,
                          ssm_init=None, state_at=None):
     """One block of (possibly tail-) prefill. Returns (x, cache entry,
     snap) — ``snap`` is the mamba page-boundary state snapshots when
@@ -324,8 +325,12 @@ def _apply_block_prefill(cfg: ModelConfig, bp, role, x, positions,
     ``prefix`` ({"k"/"v": (1, P, KVp, hd)} fp32, rows valid below
     ``prefix_len``): a cached prefix's K/V gathered from pool pages —
     queries attend over prefix + tail with absolute-position masking.
+    ``prefix_pages``/``prefix_ids`` (the in-place alternative — default
+    when the paged kernel is enabled): the block's RAW pool leaves plus the
+    prefix's physical page ids; the Pallas kernel reads the pages straight
+    from the pool, so the gathered prefix rows never materialize.
     ``ssm_init``: the prefix-boundary mamba state the recurrence resumes
-    from. Both None ⇒ exactly the cold prefill graph.
+    from. All None ⇒ exactly the cold prefill graph.
     """
     snap = None
     h = rmsnorm_apply(bp["norm1"], x)
@@ -350,7 +355,11 @@ def _apply_block_prefill(cfg: ModelConfig, bp, role, x, positions,
         kk = A._repeat_kv(k, hp // kvp)
         vv = A._repeat_kv(v, hp // kvp)
         window = cfg.sliding_window if local else 0
-        if prefix is None:
+        if prefix_pages is not None:
+            out = A.flash_prefix_attention_paged(
+                cfg, prefix_pages, prefix_ids, q, k, v, positions,
+                prefix_len, length, local=local)
+        elif prefix is None:
             out = A.flash_attention(q, kk, vv, causal=True, window=window,
                                     softcap_val=cfg.attn_logit_softcap,
                                     chunk=cfg.attn_chunk)
@@ -390,7 +399,8 @@ def _apply_block_prefill(cfg: ModelConfig, bp, role, x, positions,
 
 def lm_prefill(cfg: ModelConfig, params, batch, cache=None,
                max_len: Optional[int] = None, length=None, offset=None,
-               prefix=None, prefix_len=None, ssm_init=None, state_at=None):
+               prefix=None, prefix_len=None, prefix_pages=None,
+               prefix_ids=None, ssm_init=None, state_at=None):
     """Prefill over (B,S) inputs -> (last-position logits, populated cache).
 
     ``cache`` is a preallocated ``cache_init`` tree (sized max_len) that the
@@ -411,7 +421,11 @@ def lm_prefill(cfg: ModelConfig, params, batch, cache=None,
     pool pages. ``offset`` (traced scalar) shifts positions (RoPE is
     absolute); ``prefix`` ({bi: {"k"/"v": (G, 1, P, KVp, hd)}} gathered via
     ``gather_prefix_kv``, rows valid below ``prefix_len``) lets tail
-    queries attend over the cached rows; ``ssm_init`` ({bi: {"h", "conv"}},
+    queries attend over the cached rows — or, when the Pallas paged kernel
+    is on, ``prefix_pages`` ({bi: the block's RAW pool leaves, leading G})
+    plus ``prefix_ids`` ((npp,) int32 physical pages) reads them IN PLACE
+    from the pool so the gathered rows never materialize (bitwise-identical
+    outputs); ``ssm_init`` ({bi: {"h", "conv"}},
     leading G) resumes each mamba recurrence from the prefix-boundary
     state. ``state_at`` (STATIC position tuple) additionally returns mamba
     state snapshots at those tail-relative positions — the page-boundary
@@ -430,7 +444,7 @@ def lm_prefill(cfg: ModelConfig, params, batch, cache=None,
     roles = block_roles(cfg)
 
     def body(carry, xs):
-        gparams, gprefix, gssm = xs
+        gparams, gprefix, gpages, gssm = xs
         x, blocks, g = carry
         gcache = jax.tree.map(
             lambda c: jax.lax.dynamic_index_in_dim(c, g, 0, keepdims=False),
@@ -441,6 +455,8 @@ def lm_prefill(cfg: ModelConfig, params, batch, cache=None,
                 cfg, gparams[f"b{i}"], role, x, positions, length=length,
                 prefix=None if gprefix is None else gprefix.get(f"b{i}"),
                 prefix_len=prefix_len,
+                prefix_pages=None if gpages is None else gpages.get(f"b{i}"),
+                prefix_ids=prefix_ids,
                 ssm_init=None if gssm is None else gssm.get(f"b{i}"),
                 state_at=state_at)
             if snap is not None:
@@ -456,7 +472,7 @@ def lm_prefill(cfg: ModelConfig, params, batch, cache=None,
         body = jax.checkpoint(body, prevent_cse=False)
     (h, new_blocks, _), snaps = jax.lax.scan(
         body, (h, cache["blocks"], jnp.zeros((), jnp.int32)),
-        (params["blocks"], prefix, ssm_init))
+        (params["blocks"], prefix, prefix_pages, ssm_init))
     h = rmsnorm_apply(params["final_norm"], h)
     if length is None:
         last = h[:, -1:]

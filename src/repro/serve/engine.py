@@ -278,9 +278,11 @@ class ServeEngine:
         for the scan's output einsum), and the end logits the exact record
         stores. ``tail=True`` prefills ONLY the uncached tail of a partial
         hit: positions offset by the hit length, tail queries attending
-        over the prefix K/V gathered from pool pages (garbage-page padding
-        masked by ``prefix_len``), and each mamba recurrence resumed from
-        the hit's boundary state."""
+        over the prefix K/V — read IN PLACE from the pool pages by the
+        Pallas paged kernel, or (``REPRO_PAGED_KERNEL=0``) materialized via
+        ``gather_prefix_kv`` (garbage-page padding masked by ``prefix_len``
+        either way; bitwise-identical outputs) — and each mamba recurrence
+        resumed from the hit's boundary state."""
         cfg = self.cfg
         attn_ids = self._role_ids(False)
         mamba_ids = self._role_ids(True)
@@ -290,7 +292,12 @@ class ServeEngine:
             S = prompt.shape[1]
             boundaries = tuple(range(page_size, S + 1, page_size))
             kw = {}
-            if tail:
+            if tail and A.paged_kernel_enabled():
+                kw = dict(offset=offset, prefix_len=prefix_len,
+                          ssm_init=ssm_init, prefix_ids=prefix_ids,
+                          prefix_pages={f"b{i}": pool[f"b{i}"]
+                                        for i in attn_ids})
+            elif tail:
                 kw = dict(offset=offset, prefix_len=prefix_len,
                           ssm_init=ssm_init,
                           prefix={f"b{i}": A.gather_prefix_kv(

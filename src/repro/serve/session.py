@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import block_roles
+from repro.models.attention import paged_kernel_enabled
 
 from .paged_cache import paged_pool_init
 from .prefix_cache import PrefixCache
@@ -395,8 +396,12 @@ class ServeSession:
         ppb = self._prefix_page_bucket(o_pages) if o_pages else 0
         prefix_ids = np.zeros((ppb,), np.int32)
         prefix_ids[:o_pages] = req.pages[:o_pages]
+        # the kernel flag is part of the key: REPRO_PAGED_KERNEL is read at
+        # trace time, so a mid-process flip must recompile, not serve the
+        # other path's cached graph
         pfn = self.engine._get_fn(
-            ("pfx_prefill", self._pool_key, bucket, ppb),
+            ("pfx_prefill", self._pool_key, bucket, ppb,
+             paged_kernel_enabled()),
             lambda: self.engine._build_pfx_prefill(self.page_size,
                                                    tail=ppb > 0))
         ssm_init = {}
@@ -482,7 +487,8 @@ class ServeSession:
         sampled = any(r.params.temperature > 0
                       for r in self.sched.active.values())
         sfn = self.engine._get_fn(
-            ("segment", self._pool_key, self.segment, sampled),
+            ("segment", self._pool_key, self.segment, sampled,
+             paged_kernel_enabled()),
             lambda: self.engine._build_batch_segment(self.segment, sampled))
         toks, cur_d, self._pool = sfn(
             self.engine.params, self._take_pool(), jnp.asarray(self._bt),

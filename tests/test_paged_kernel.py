@@ -1,0 +1,308 @@
+"""Pallas paged-attention kernel validation (interpret mode).
+
+The serve decode/prefix paths dispatch to kernels/paged_attention.py by
+default (``REPRO_PAGED_KERNEL=1``); the XLA block-table gather survives as
+the reference fallback. Because Boolean sign() amplifies reduction-order
+ulps into different tokens, the pinned contract is BITWISE equality of the
+kernel against the gather reference — not allclose — which in turn makes
+every serve-level stream token-identical across the two paths.
+
+Four layers:
+  1. kernel-level bit parity of ``paged_flash_decode`` vs the gather +
+     ``_flash_decode_local`` oracle — ragged lane positions, idle
+     garbage-page lanes, table-overrun lanes, sliding window + softcap,
+     multi-chunk, int8 kv-quant, and CoW-forked boundary pages;
+  2. kernel-level bit parity of ``paged_prefix_attention`` vs
+     ``gather_prefix_kv`` + ``flash_attention_abs`` (the prefix-cache tail);
+  3. model-level: one paged decode step and one partial-hit session produce
+     bit-identical logits/streams with the kernel on vs the fallback
+     (``REPRO_PAGED_KERNEL=0``), across dense / packed / kv-quant /
+     ssm-hybrid configs;
+  4. serve-level CI gate: greedy ``generate_batch`` token streams are
+     unchanged by the kernel across the config matrix, and the prefix-cache
+     exact/partial-hit bit-identity holds with the kernel enabled.
+"""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.kernels.paged_attention import (paged_flash_decode,
+                                           paged_prefix_attention)
+from repro.models import attention as A
+from repro.models import lm_decode_step_paged, lm_init, lm_prefill
+from repro.serve import SamplingParams, ServeEngine, commit_prefill, \
+    paged_pool_init
+from repro.serve.paged_cache import fork_page
+
+RNG = np.random.default_rng(0)
+
+
+def _prompts(cfg, lens):
+    return [RNG.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+            for L in lens]
+
+
+# ---------------------------------------------------------------------------
+# 1. paged_flash_decode ≡ gather + _flash_decode_local, bit for bit
+# ---------------------------------------------------------------------------
+def _rand_pool(key, n_pages, page, KV, hd, quant, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    if quant:
+        kp = jax.random.randint(ks[0], (n_pages, page, KV, hd), -127, 127,
+                                jnp.int8)
+        vp = jax.random.randint(ks[1], (n_pages, page, KV, hd), -127, 127,
+                                jnp.int8)
+        kscale = jax.random.uniform(ks[2], (n_pages, page, KV), jnp.float32,
+                                    1e-3, 0.1)
+        vscale = jax.random.uniform(ks[3], (n_pages, page, KV), jnp.float32,
+                                    1e-3, 0.1)
+        return kp, vp, kscale, vscale
+    kp = jax.random.normal(ks[0], (n_pages, page, KV, hd),
+                           jnp.float32).astype(dtype)
+    vp = jax.random.normal(ks[1], (n_pages, page, KV, hd),
+                           jnp.float32).astype(dtype)
+    return kp, vp, None, None
+
+
+def _gather_decode_ref(cfg, q, kp, vp, bt, pos, ks, vs, local):
+    """The XLA fallback: block-table gather + _flash_decode_local."""
+    L, C = bt.shape
+    page, KV, hd = kp.shape[1], kp.shape[2], kp.shape[3]
+    k = kp[bt].reshape(L, C * page, KV, hd)
+    v = vp[bt].reshape(L, C * page, KV, hd)
+    kss = ks[bt].reshape(L, C * page, KV) if ks is not None else None
+    vss = vs[bt].reshape(L, C * page, KV) if vs is not None else None
+    m, l, acc = A._flash_decode_local(cfg, q, k, v, pos, 0, local=local,
+                                      k_scale=kss, v_scale=vss)
+    return acc / jnp.maximum(l[..., None], 1e-30)
+
+
+@pytest.mark.parametrize("quant,window,softcap,chunk", [
+    (False, 0, 0.0, 2048),      # global attention, single chunk
+    (False, 9, 50.0, 8),        # sliding window + softcap, multi-chunk
+    (True, 0, 0.0, 2048),       # int8 kv-quant
+    (True, 7, 30.0, 16),        # quant + window + softcap, multi-chunk
+])
+def test_decode_kernel_bit_parity(quant, window, softcap, chunk):
+    """Ragged positions, an idle garbage-page lane, and a table-overrun
+    lane: the kernel's in-place page reads reproduce the gather reference
+    bit for bit."""
+    cfg = types.SimpleNamespace(decode_chunk=chunk,
+                                attn_logit_softcap=softcap,
+                                sliding_window=window)
+    L, C, page, KV, R, hd = 4, 5, 4, 2, 8, 16
+    key = jax.random.PRNGKey(0)
+    kq, kpool = jax.random.split(key)
+    q = jax.random.normal(kq, (L, KV, R, hd), jnp.float32).astype(
+        jnp.bfloat16)
+    kp, vp, ks, vs = _rand_pool(kpool, 12, page, KV, hd, quant)
+    bt = jnp.asarray([[3, 1, 7, 0, 0],
+                      [2, 5, 9, 11, 4],
+                      [0, 0, 0, 0, 0],       # idle lane: garbage page only
+                      [6, 8, 0, 0, 0]], jnp.int32)
+    pos = jnp.asarray([6, 19, 0, 35], jnp.int32)   # 35 overruns the table
+    ref = _gather_decode_ref(cfg, q, kp, vp, bt, pos, ks, vs, window > 0)
+    out = paged_flash_decode(q, kp, vp, bt, pos, ks, vs, window=window,
+                             softcap_val=softcap, chunk=chunk,
+                             interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref, np.float32),
+                                  np.asarray(out, np.float32))
+
+
+def test_decode_kernel_bit_parity_after_cow_fork():
+    """A CoW-forked boundary page (prefix-cache exact-hit admission) is
+    just another physical page: decode over the forked copy matches the
+    gather reference bit for bit, and differs from decoding the stale
+    source page once the fork diverges."""
+    cfg = get_smoke("gemma2-2b")
+    ns = types.SimpleNamespace(decode_chunk=cfg.decode_chunk,
+                               attn_logit_softcap=cfg.attn_logit_softcap,
+                               sliding_window=0)
+    page, KV, hd = 4, cfg.kv_heads_padded(), cfg.head_dim_
+    pool = paged_pool_init(cfg, lanes=1, n_pages=8, page_size=page)
+    params, _ = lm_init(jax.random.PRNGKey(0), cfg)
+    S = 7
+    prompts = jnp.asarray(_prompts(cfg, [S])[0][None])
+    _, pcache = lm_prefill(cfg, params, {"tokens": prompts})
+    pool = commit_prefill(cfg, pool, pcache["blocks"], jnp.asarray(0),
+                          jnp.asarray([2, 5], jnp.int32), page)
+    pool = fork_page(cfg, pool, jnp.asarray(5), jnp.asarray(3))   # CoW copy
+    b0 = jax.tree.map(lambda x: x[0], pool["b0"])    # group 0 slice
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, KV, 8, hd),
+                          jnp.float32).astype(cfg.dtype)
+    for table in ([[2, 3, 0, 0]], [[2, 5, 0, 0]]):   # forked vs source page
+        bt = jnp.asarray(table, jnp.int32)
+        pos = jnp.asarray([S], jnp.int32)
+        ref = _gather_decode_ref(ns, q, b0["k"], b0["v"], bt, pos,
+                                 b0.get("k_scale"), b0.get("v_scale"), False)
+        out = paged_flash_decode(q, b0["k"], b0["v"], bt, pos,
+                                 b0.get("k_scale"), b0.get("v_scale"),
+                                 chunk=ns.decode_chunk,
+                                 softcap_val=ns.attn_logit_softcap,
+                                 interpret=True)
+        np.testing.assert_array_equal(np.asarray(ref, np.float32),
+                                      np.asarray(out, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# 2. paged_prefix_attention ≡ gather_prefix_kv + flash_attention_abs
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("quant,window,softcap,chunk", [
+    (False, 0, 0.0, 1024),
+    (False, 11, 50.0, 16),      # window + softcap, multi-chunk
+    (True, 0, 30.0, 1024),
+    (True, 13, 0.0, 8),
+])
+def test_prefix_kernel_bit_parity(quant, window, softcap, chunk):
+    """Tail queries over [pool prefix pages ; tail K/V]: the in-place
+    kernel reproduces the gathered-rows reference bit for bit, including
+    the garbage-page bucket padding and a partially-live last page."""
+    cfg = types.SimpleNamespace(kv_cache_quant=quant)
+    npp, page, KV, n_rep, hd = 4, 4, 2, 8, 16
+    H, S = KV * n_rep, 8
+    key = jax.random.PRNGKey(1)
+    ks_ = jax.random.split(key, 4)
+    xdtype = jnp.bfloat16
+    q = jax.random.normal(ks_[0], (1, S, H, hd), jnp.float32).astype(xdtype)
+    kt = jax.random.normal(ks_[1], (1, S, KV, hd), jnp.float32).astype(xdtype)
+    vt = jax.random.normal(ks_[2], (1, S, KV, hd), jnp.float32).astype(xdtype)
+    kp, vp, kscale, vscale = _rand_pool(ks_[3], 10, page, KV, hd, quant,
+                                        xdtype)
+    bcache = {"k": kp[None], "v": vp[None]}
+    if quant:
+        bcache.update(k_scale=kscale[None], v_scale=vscale[None])
+    page_ids = jnp.asarray([3, 7, 0, 0], jnp.int32)   # bucketed, garbage pad
+    prefix_len = jnp.asarray(7, jnp.int32)            # partial last live page
+    offset = jnp.asarray(7, jnp.int32)
+    length = jnp.asarray(5, jnp.int32)                # true tail < bucket
+
+    prefix = A.gather_prefix_kv(cfg, bcache, page_ids)
+    pk = A._repeat_kv(prefix["k"][0].astype(xdtype), n_rep)
+    pv = A._repeat_kv(prefix["v"][0].astype(xdtype), n_rep)
+    P = npp * page
+    positions = jnp.arange(S, dtype=jnp.int32) + offset
+    ref = A.flash_attention_abs(
+        q, jnp.concatenate([pk, A._repeat_kv(kt, n_rep)], axis=1),
+        jnp.concatenate([pv, A._repeat_kv(vt, n_rep)], axis=1),
+        q_pos=positions,
+        k_pos=jnp.concatenate([jnp.arange(P, dtype=jnp.int32), positions]),
+        k_valid=jnp.concatenate([jnp.arange(P) < prefix_len,
+                                 jnp.arange(S) < length]),
+        window=window, softcap_val=softcap, chunk=chunk)
+
+    out = paged_prefix_attention(
+        q[0].transpose(1, 0, 2), kt[0], vt[0], kp, vp, page_ids, offset,
+        prefix_len, length, kscale, vscale, n_rep=n_rep, window=window,
+        softcap_val=softcap, chunk=chunk, interpret=True)
+    out = out.transpose(1, 0, 2)[None].astype(q.dtype)
+    np.testing.assert_array_equal(np.asarray(ref, np.float32),
+                                  np.asarray(out, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# 3. model-level: kernel vs REPRO_PAGED_KERNEL=0 fallback, bit-identical
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("quant", [False, True])
+def test_fallback_parity_decode_step(monkeypatch, quant):
+    """One paged decode step (the real model graph, local+global gemma2
+    blocks) produces bit-identical logits with the kernel on and off."""
+    cfg = get_smoke("gemma2-2b")
+    if quant:
+        cfg = cfg.scaled(kv_cache_quant=True)
+    params, _ = lm_init(jax.random.PRNGKey(0), cfg)
+    S, page = 9, 4
+    prompts = jnp.asarray(_prompts(cfg, [S])[0][None])
+    tok = jnp.asarray([[7]], jnp.int32)
+    _, pcache = lm_prefill(cfg, params, {"tokens": prompts})
+    pool = paged_pool_init(cfg, lanes=1, n_pages=6, page_size=page)
+    pool = commit_prefill(cfg, pool, pcache["blocks"], jnp.asarray(0),
+                          jnp.asarray([2, 4, 1], jnp.int32), page)
+    paged = {"blocks": pool,
+             "block_table": jnp.asarray([[2, 4, 1, 0]], jnp.int32),
+             "pos": jnp.asarray([S], jnp.int32)}
+
+    monkeypatch.setenv("REPRO_PAGED_KERNEL", "1")
+    on, _ = lm_decode_step_paged(cfg, params, paged, tok)
+    monkeypatch.setenv("REPRO_PAGED_KERNEL", "0")
+    off, _ = lm_decode_step_paged(cfg, params, paged, tok)
+    np.testing.assert_array_equal(np.asarray(on, np.float32),
+                                  np.asarray(off, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# 4. serve-level gate: token streams unchanged with the kernel enabled
+# ---------------------------------------------------------------------------
+SERVE_CONFIGS = [
+    ("gemma2-2b", False, False),
+    ("gemma2-2b", True, False),          # packed XNOR weight serving
+    ("gemma2-2b", False, True),          # int8 kv-quant cache
+    ("falcon-mamba-7b", False, False),   # pure SSM (lane-indexed state)
+    ("jamba-1.5-large-398b", False, False),   # hybrid mamba+attn+MoE
+]
+
+
+@pytest.mark.parametrize("arch,packed,quant", SERVE_CONFIGS)
+def test_serve_tokens_unchanged_by_kernel(monkeypatch, arch, packed, quant):
+    """THE CI smoke gate: greedy ``generate_batch`` streams are identical
+    with REPRO_PAGED_KERNEL=1 and =0 — and both match the sequential
+    ``generate`` oracle — across the serve config matrix."""
+    cfg = get_smoke(arch)
+    if quant:
+        cfg = cfg.scaled(kv_cache_quant=True)
+    params, _ = lm_init(jax.random.PRNGKey(0), cfg)
+    prompts = _prompts(cfg, [5, 8, 6])
+    ntoks = [4, 3, 5]
+
+    monkeypatch.setenv("REPRO_PAGED_KERNEL", "1")
+    eng_on = ServeEngine(cfg, params, max_len=32, packed=packed)
+    on = eng_on.generate_batch(prompts, ntoks, lanes=2, page_size=4,
+                               segment=2)
+    refs = [np.asarray(eng_on.generate(jnp.asarray(p[None]), n)[0])
+            for p, n in zip(prompts, ntoks)]
+    monkeypatch.setenv("REPRO_PAGED_KERNEL", "0")
+    eng_off = ServeEngine(cfg, params, max_len=32, packed=packed)
+    off = eng_off.generate_batch(prompts, ntoks, lanes=2, page_size=4,
+                                 segment=2)
+    for a, b, r in zip(on, off, refs):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(a), r)
+
+
+@pytest.mark.parametrize("quant", [False, True])
+def test_prefix_partial_hit_parity_with_kernel(monkeypatch, quant):
+    """Prefix-cache sessions with the kernel on: the exact hit and the
+    partial-hit tail (paged_prefix_attention through the real engine)
+    yield the same streams as the REPRO_PAGED_KERNEL=0 fallback — and, on
+    the non-quant config, as the cold oracle."""
+    cfg = get_smoke("gemma2-2b")
+    if quant:
+        cfg = cfg.scaled(kv_cache_quant=True)
+    params, _ = lm_init(jax.random.PRNGKey(0), cfg)
+    base = _prompts(cfg, [12])[0]
+    ext = np.concatenate([base,
+                          _prompts(cfg, [5])[0]]).astype(np.int32)
+
+    def serve(flag):
+        monkeypatch.setenv("REPRO_PAGED_KERNEL", flag)
+        eng = ServeEngine(cfg, params, max_len=32, prefix_cache=True)
+        with eng.session(lanes=2, page_size=4, segment=2) as sess:
+            cold = np.asarray(sess.submit(
+                base, SamplingParams(max_tokens=5)).result())
+            hit = np.asarray(sess.submit(
+                base, SamplingParams(max_tokens=5)).result())
+            partial = np.asarray(sess.submit(
+                ext, SamplingParams(max_tokens=4)).result())
+        oracle = np.asarray(eng.generate(jnp.asarray(ext[None]), 4)[0])
+        return cold, hit, partial, oracle
+
+    on = serve("1")
+    off = serve("0")
+    for a, b in zip(on, off):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(on[0], on[1])      # exact hit == cold
+    if not quant:                                    # kv-quant: serve-over-
+        np.testing.assert_array_equal(on[2], on[3])  # cache, not cold-equal
