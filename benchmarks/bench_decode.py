@@ -32,6 +32,14 @@ for: requests sharing a long system prompt with short unique tails
 cold, partial-hit (tail-only prefill) and exact-hit (zero prefill) TTFT;
 the smoke gate asserts cache-hit TTFT strictly beats cold TTFT.
 
+A seventh path, ``overload``, bursts a 2× oversubscribed arrival pattern
+into a session with a bounded submit queue (``max_pending``): the second
+half of the burst must shed at submit in O(admission) HOST time (no
+compute spent on doomed work — the smoke gate requires rejection faster
+than one time-to-first-token), and the admitted half's tokens must be
+bit-identical to the same requests served without any overload (load
+shedding must never perturb surviving streams).
+
 Emits ``name,us_per_call,derived`` rows like every other bench module, with
 tokens/sec and the scan-vs-eager speedup in the derived column so
 BENCH_*.json tracks a serving-throughput trajectory.
@@ -246,6 +254,62 @@ def run():
     rows.append((f"decode/prefix_hit_rate_r{PFX_REQS + 1}",
                  f"{hit_rate*100:.0f}", "pct_of_lookups"))
 
+    # overload: burst 2x the bounded queue's capacity into a session before
+    # any step runs. The first half queues; every later submit must shed
+    # AT SUBMIT via ShedError — pure host bookkeeping, no compute spent on
+    # doomed work — and the admitted half's tokens must be bit-identical
+    # to the same requests served with no overload at all.
+    from repro.serve import ShedError
+
+    n_admit = len(BATCH_POOL)
+    over_prompts = pool_prompts + [
+        np.asarray(jax.random.randint(jax.random.PRNGKey(90 + i), (P,), 0,
+                                      cfg.vocab_size), np.int32)
+        for i, (P, _) in enumerate(BATCH_POOL)]
+    over_gens = pool_gens * 2
+
+    def overload_round():
+        shed_us = []
+        with engine.session(lanes=BATCH_LANES, page_size=8, segment=4,
+                            max_pending=n_admit) as sess:
+            handles = []
+            for p, g in zip(over_prompts, over_gens):
+                t0 = time.time()
+                try:
+                    handles.append(sess.submit(p,
+                                               SamplingParams(max_tokens=g)))
+                except ShedError:
+                    shed_us.append((time.time() - t0) * 1e6)
+            while not sess.idle:
+                sess.step()
+            toks = [h.result() for h in handles]
+        return toks, shed_us
+
+    def baseline_round():
+        with engine.session(lanes=BATCH_LANES, page_size=8,
+                            segment=4) as sess:
+            hs = [sess.submit(p, SamplingParams(max_tokens=g))
+                  for p, g in zip(over_prompts[:n_admit],
+                                  over_gens[:n_admit])]
+            while not sess.idle:
+                sess.step()
+            return [h.result() for h in hs]
+
+    overload_round()                    # warm (same compile set as stream)
+    over_toks, shed_times = overload_round()
+    base_toks = baseline_round()
+    n_shed = len(shed_times)
+    shed_worst = max(shed_times)
+    streams_match = len(over_toks) == n_admit and all(
+        list(a) == list(b) for a, b in zip(over_toks, base_toks))
+    rows.append((f"decode/overload_shed_r{2 * n_admit}_q{n_admit}",
+                 f"{shed_worst:.0f}",
+                 f"{n_shed}shed_worst_rejection_us"))
+    rows.append((f"decode/overload_admitted_r{2 * n_admit}_q{n_admit}",
+                 f"{0 if streams_match else 1}",
+                 "streams_match_unloaded" if streams_match
+                 else "STREAM_MISMATCH"))
+
     if SMOKE and max(speedups) < SMOKE_GATE:
         raise SystemExit(
             f"decode throughput gate FAILED: fused scan best speedup "
@@ -261,6 +325,17 @@ def run():
             f"(partial {hit_t*1e6:.0f}us / exact {exact_t*1e6:.0f}us) did "
             f"not beat cold TTFT {cold_t*1e6:.0f}us — shared prompts are "
             f"not collapsing to tail-only admission")
+    if SMOKE and (n_shed != n_admit or shed_worst >= ttft * 1e6):
+        raise SystemExit(
+            f"overload gate FAILED: {n_shed}/{n_admit} burst requests shed, "
+            f"worst rejection {shed_worst:.0f}us vs TTFT {ttft*1e6:.0f}us — "
+            f"load shedding must reject doomed work in O(admission) host "
+            f"time, before any compute is spent on it")
+    if SMOKE and not streams_match:
+        raise SystemExit(
+            "overload gate FAILED: admitted streams' tokens diverged from "
+            "the un-oversubscribed run — shedding must never perturb "
+            "surviving requests")
     return rows
 
 

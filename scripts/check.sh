@@ -37,4 +37,25 @@ echo "== paged-kernel parity gate (interpret mode) =="
 python -m pytest -q tests/test_paged_kernel.py \
     -k "bit_parity or fallback_parity or serve_tokens_unchanged"
 
+echo "== fault-injection + overload-control gate =="
+# Deterministic injected faults (allocator, CoW fork, kernel dispatch,
+# prefix index) with post-step invariant audits, plus the host-side
+# admission-control policy suite.
+python -m pytest -q -m faultinject tests/test_serve_faults.py
+python -m pytest -q tests/test_overload.py
+
+echo "== decode bench smoke gate (throughput + streaming + overload) =="
+# Bench-only env hygiene — deliberately NOT exported to the pytest runs
+# above (tests must see the single real CPU device; see tests/conftest.py):
+# pin XLA's host-platform device count so the bench never silently shards
+# across emulated devices, and route allocations through tcmalloc when the
+# container ships it — glibc arena churn skews the min-of-N µs rows.
+BENCH_ENV=("XLA_FLAGS=--xla_force_host_platform_device_count=1${XLA_FLAGS:+ $XLA_FLAGS}")
+TCMALLOC="$(ls /usr/lib/x86_64-linux-gnu/libtcmalloc*.so* \
+    /usr/lib/libtcmalloc*.so* 2>/dev/null | head -n1 || true)"
+if [[ -n "${TCMALLOC}" ]]; then
+    BENCH_ENV+=("LD_PRELOAD=${TCMALLOC}${LD_PRELOAD:+:$LD_PRELOAD}")
+fi
+env "${BENCH_ENV[@]}" REPRO_BENCH_SMOKE=1 python benchmarks/bench_decode.py
+
 echo "check.sh: all green"

@@ -20,6 +20,14 @@ their unique tail — hit-rate/CoW/eviction stats printed at drain):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --smoke \
         --stream --prefix-cache --requests 8 --lanes 4 --gen 16
+
+Overload hardening (bounded admission + deadlines + post-step invariant
+audits; sheds print with their typed reason, audit stats at drain; arm
+``REPRO_FAULTS=site@idx,...`` in the env for chaos-mode fault injection):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --smoke \
+        --stream --requests 8 --lanes 4 --gen 16 \
+        --max-pending 4 --deadline-ms 5000 --audit
 """
 from __future__ import annotations
 
@@ -59,6 +67,18 @@ def main():
                     help="(--stream) radix-indexed prompt-page sharing: "
                          "requests share a system prompt; cache hits "
                          "prefill only their unique tail")
+    ap.add_argument("--audit", action="store_true",
+                    help="(--stream) run the allocator/prefix-index "
+                         "invariant audit after every step and print the "
+                         "robustness stats at drain")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="(--stream) bounded submit queue: overflow sheds "
+                         "with a typed ShedError instead of queueing "
+                         "without bound")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="(--stream) per-request deadline budget in wall "
+                         "ms: unmeetable at admission sheds, passing it "
+                         "mid-flight expires the request")
     args = ap.parse_args()
 
     import jax
@@ -107,14 +127,24 @@ def main():
                 for _ in range(args.requests)]
 
     if args.stream:
-        from repro.serve import SamplingParams
+        from repro.serve import SamplingParams, ShedError
 
         with engine.session(lanes=args.lanes, page_size=args.page_size,
                             segment=args.segment,
-                            prefix_cache=args.prefix_cache) as sess:
+                            prefix_cache=args.prefix_cache,
+                            max_pending=args.max_pending,
+                            audit=args.audit) as sess:
+            def _submit(p, g):
+                try:
+                    return sess.submit(p, SamplingParams(
+                        max_tokens=g, deadline_ms=args.deadline_ms))
+                except ShedError as e:
+                    print(f"[serve] shed rid={e.rid} ({e.reason}): {e}")
+                    return None
+
             # submit half up front, inject the rest mid-flight — the
             # scheduler is re-entrant, admission happens between segments
-            handles = [sess.submit(p, SamplingParams(max_tokens=g))
+            handles = [_submit(p, g)
                        for p, g in zip(prompts[: args.requests // 2],
                                        gens[: args.requests // 2])]
             printed = [0] * args.requests
@@ -123,13 +153,12 @@ def main():
             injected = args.requests // 2
             while not sess.idle or injected < args.requests:
                 if injected < args.requests:    # one mid-flight submit/step
-                    handles.append(sess.submit(
-                        prompts[injected],
-                        SamplingParams(max_tokens=gens[injected])))
+                    handles.append(_submit(prompts[injected],
+                                           gens[injected]))
                     injected += 1
                 sess.step()
                 for i, h in enumerate(handles):
-                    if h.tokens_ready > printed[i]:
+                    if h is not None and h.tokens_ready > printed[i]:
                         if ttft is None:
                             ttft = time.time() - t0
                         new = h.tokens_so_far()[printed[i]:]
@@ -138,7 +167,20 @@ def main():
                               f"{h.status.name.lower()})")
                         printed[i] = h.tokens_ready
             dt = time.time() - t0
-            total = sum(h.tokens_ready for h in handles)
+            total = sum(h.tokens_ready for h in handles if h is not None)
+            for i, h in enumerate(handles):
+                if h is not None and h.error is not None:
+                    print(f"[serve] req{i} left abnormally: "
+                          f"{h.status.name} ({h.error})")
+            if args.audit:
+                a = sess.audit()
+                st = sess.sched.stats
+                print(f"[serve] audit clean at drain: "
+                      f"{a['alloc']['n_owned']} pages owned / "
+                      f"{a['alloc']['n_free']} free; "
+                      f"admitted={st['admitted']} shed={st['shed']} "
+                      f"expired={st['expired']} failed={st['failed']} "
+                      f"preemptions={st['preemptions']}")
             if args.prefix_cache:
                 st = sess.prefix.stats
                 print(f"[serve] prefix cache: {st['exact_hits']} exact + "

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import math
 import os
+from contextlib import contextmanager
 from typing import Optional, Tuple
 
 import jax
@@ -19,6 +20,9 @@ from jax.sharding import PartitionSpec as P
 
 from .modules import (FSDP_AXIS, MODEL_AXIS, ModelConfig, proj_apply,
                       proj_init, rope, softcap)
+
+
+_PAGED_OVERRIDE: Optional[bool] = None
 
 
 def paged_kernel_enabled() -> bool:
@@ -30,8 +34,29 @@ def paged_kernel_enabled() -> bool:
     ``REPRO_PAGED_KERNEL`` mid-process recompiles instead of serving stale
     graphs. ``REPRO_PAGED_KERNEL=0`` keeps the gather path as the reference
     fallback (bitwise-identical outputs — tests/test_paged_kernel.py).
+
+    A live ``paged_kernel_override`` context takes precedence over the
+    environment — the serve session's kernel-fault containment path traces
+    the gather graph under ``override(False)`` without mutating global env
+    state other sessions/threads read.
     """
+    if _PAGED_OVERRIDE is not None:
+        return _PAGED_OVERRIDE
     return os.environ.get("REPRO_PAGED_KERNEL", "1") != "0"
+
+
+@contextmanager
+def paged_kernel_override(enabled: Optional[bool]):
+    """Scoped override of ``paged_kernel_enabled`` (None = defer to env).
+    Used with a compile key pinning the same value, so the graph traced
+    inside the context is cached under — and only under — that choice."""
+    global _PAGED_OVERRIDE
+    prev = _PAGED_OVERRIDE
+    _PAGED_OVERRIDE = enabled
+    try:
+        yield
+    finally:
+        _PAGED_OVERRIDE = prev
 
 
 def attention_init(key, cfg: ModelConfig, axis_size: int = 16):

@@ -1,7 +1,9 @@
 from .engine import ServeEngine, pack_weights
+from .faults import FaultInjector, InjectedFault, corrupt_prefix_index
 from .paged_cache import (CachePool, PageAllocator, commit_prefill,
                           fork_page, paged_pool_init, pages_for)
-from .prefix_cache import PrefixCache
-from .sampling import sample_tokens
-from .scheduler import (Request, RequestStatus, SamplingParams, Scheduler)
+from .prefix_cache import IndexCorruption, PrefixCache
+from .sampling import logits_all_finite, sample_tokens
+from .scheduler import (TERMINAL, Request, RequestStatus, SamplingParams,
+                        Scheduler, ShedError)
 from .session import RequestHandle, ServeSession

@@ -349,14 +349,19 @@ class ServeEngine:
                 n_pages: Optional[int] = None, segment: int = 1,
                 key: Optional[jax.Array] = None,
                 buckets: Optional[Sequence[int]] = None,
-                prefix_cache: Optional[bool] = None) -> ServeSession:
+                prefix_cache: Optional[bool] = None,
+                **robustness) -> ServeSession:
         """Open a streaming serve session: submit/stream/cancel requests at
         any time over one paged pool (see serve/session.py).
         ``prefix_cache`` overrides the engine default (radix-indexed
-        cross-request prompt-page sharing — serve/prefix_cache.py)."""
+        cross-request prompt-page sharing — serve/prefix_cache.py).
+        ``**robustness`` forwards the overload/fault knobs (``max_pending``,
+        ``tenant_page_quota``, ``tenant_lane_quota``, ``faults``,
+        ``audit``, ``clock`` — see ServeSession)."""
         return ServeSession(self, lanes=lanes, page_size=page_size,
                             n_pages=n_pages, segment=segment, key=key,
-                            buckets=buckets, prefix_cache=prefix_cache)
+                            buckets=buckets, prefix_cache=prefix_cache,
+                            **robustness)
 
     def generate_batch(self,
                        prompts: Sequence,

@@ -1,0 +1,124 @@
+"""Deterministic fault injection for the serve stack.
+
+Serving at traffic scale means serving THROUGH faults: allocator
+exhaustion mid-admission, a kernel dispatch blowing up mid-segment, a
+corrupted prefix-index node. B⊕LD makes silent degradation uniquely
+dangerous — ``sign()`` activations amplify any numeric corruption into
+confidently wrong tokens — so the containment contract is binary: every
+fault resolves to a TERMINAL status (``FAILED``/``SHED``/``EXPIRED``) on
+the victim request, every page is released (``session.audit()`` clean
+after drain), and every co-resident request's greedy stream stays
+bit-identical to a fault-free run.
+
+This module is the trigger side of that contract: a ``FaultInjector``
+registry armed per SITE with the call indices at which to fire. The serve
+stack polls ``should_fire(site)`` at four choke points:
+
+  ===============  ========================================================
+  site             fires inside
+  ===============  ========================================================
+  page_alloc       ``PageAllocator.alloc`` — admission page grant
+  fork_page        exact-hit CoW fork dispatch (``ServeSession``)
+  kernel_dispatch  the fused decode-segment dispatch (``ServeSession``) —
+                   contained by FALLING BACK to the XLA gather path
+                   (``REPRO_PAGED_KERNEL=0`` graph) for that segment, which
+                   is bitwise-identical, so there is no victim at all
+  prefix_index     corrupts one radix node in place before the step; the
+                   next lookup's checksum walk detects it and QUARANTINES
+                   the index (bypass to cold admission — never wrong bytes)
+  ===============  ========================================================
+
+Injection is counted per site: ``arm(site, at=2)`` fires on the third
+``should_fire`` poll of that site, so tests pin faults to exact admission
+rounds / decode segments. Armed either in the constructor
+(``engine.session(faults=FaultInjector(...))``) or from the environment
+(``REPRO_FAULTS="page_alloc@0,kernel_dispatch@3"`` →
+``FaultInjector.from_env()``, read by every session when the variable is
+set — the launcher's chaos mode).
+
+Pure host bookkeeping; no jax imports.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional, Tuple
+
+SITES = ("page_alloc", "fork_page", "kernel_dispatch", "prefix_index")
+
+
+class InjectedFault(RuntimeError):
+    """Raised at an armed site. The serve stack catches it at the
+    containment boundary and converts it into a terminal request status;
+    it escaping to the caller is a containment bug."""
+
+    def __init__(self, site: str, detail: str = ""):
+        self.site = site
+        self.detail = detail
+        super().__init__(f"injected fault at {site}"
+                         + (f" ({detail})" if detail else ""))
+
+
+class FaultInjector:
+    """Per-site, call-indexed fault trigger registry.
+
+    >>> inj = FaultInjector({"page_alloc": [1]})   # second alloc fails
+    >>> inj.arm("kernel_dispatch", at=0, times=2)  # first two segments
+    """
+
+    def __init__(self, plan: Optional[Dict[str, List[int]]] = None):
+        self._at: Dict[str, set] = {}
+        self._count: Dict[str, int] = {}
+        self.fired: List[Tuple[str, int]] = []      # (site, call index) log
+        for site, idxs in (plan or {}).items():
+            for i in idxs:
+                self.arm(site, at=i)
+
+    def arm(self, site: str, *, at: int = 0, times: int = 1) -> "FaultInjector":
+        """Fire at poll indices ``at .. at+times-1`` of ``site``."""
+        if site not in SITES:
+            raise ValueError(f"unknown fault site {site!r} (have {SITES})")
+        self._at.setdefault(site, set()).update(range(at, at + times))
+        return self
+
+    def should_fire(self, site: str) -> bool:
+        """Count one poll of ``site``; True iff this index is armed."""
+        i = self._count.get(site, 0)
+        self._count[site] = i + 1
+        if i in self._at.get(site, ()):
+            self.fired.append((site, i))
+            return True
+        return False
+
+    @classmethod
+    def from_env(cls, env: Optional[str] = None) -> Optional["FaultInjector"]:
+        """Parse ``REPRO_FAULTS="site@idx,site@idx"`` (``@idx`` optional,
+        default 0). Returns None when unset/empty — the common case costs
+        one getenv per session, nothing per step."""
+        spec = os.environ.get("REPRO_FAULTS", "") if env is None else env
+        spec = spec.strip()
+        if not spec:
+            return None
+        inj = cls()
+        for part in spec.split(","):
+            site, _, idx = part.strip().partition("@")
+            inj.arm(site, at=int(idx) if idx else 0)
+        return inj
+
+
+def corrupt_prefix_index(prefix) -> bool:
+    """Flip tokens in the first radix node's key IN PLACE — the host-memory
+    corruption / bookkeeping-bug stand-in. The node's sealed checksum no
+    longer matches, so the next lookup that walks it (or ``audit()``)
+    detects the mismatch and quarantines the index instead of admitting a
+    request against pages holding some OTHER prompt's K/V bytes. Returns
+    False when there is nothing to corrupt (empty/quarantined index)."""
+    stack = list(prefix.root.children.values())
+    while stack:
+        node = stack.pop(0)
+        if node.key.size:
+            key = node.key.copy()
+            key[0] ^= 0x5        # content no longer matches the checksum
+            node.key = key
+            return True
+        stack.extend(node.children.values())
+    return False

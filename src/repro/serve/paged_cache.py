@@ -145,12 +145,21 @@ class PageAllocator:
     to the free list exactly when its count reaches zero — the
     "refcount-never-negative / owned+free == n_pages" invariants are
     asserted here, not distributed over callers.
+
+    ``faults`` (serve/faults.py) arms the ``page_alloc`` injection site:
+    ``alloc`` raises ``InjectedFault`` BEFORE touching the free list, so an
+    injected allocation failure is atomic — no partially-granted pages for
+    the scheduler's containment path to unwind. ``audit`` cross-checks the
+    refcounts against an externally-computed holder census (the session
+    composes one from live requests + the prefix index) and the free list
+    against the refcounts — the zero-leaked-pages oracle.
     """
 
-    def __init__(self, n_pages: int):
+    def __init__(self, n_pages: int, faults=None):
         if n_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is the garbage page)")
         self.n_pages = n_pages
+        self.faults = faults
         self.refs = [0] * n_pages
         self.refs[0] = 1                       # garbage page: never freed
         self._free = deque(range(1, n_pages))
@@ -165,7 +174,14 @@ class PageAllocator:
         return tuple(self._free)
 
     def alloc(self, n: int):
-        """Take ``n`` fresh pages at refcount 1 (FIFO order)."""
+        """Take ``n`` fresh pages at refcount 1 (FIFO order). Atomic: any
+        failure (injected or over-ask) happens before the free list moves,
+        so a failed grant leaves no partial state to roll back."""
+        if self.faults is not None and n > 0 \
+                and self.faults.should_fire("page_alloc"):
+            from .faults import InjectedFault
+
+            raise InjectedFault("page_alloc", f"alloc({n})")
         if n > len(self._free):
             raise ValueError(f"alloc({n}) with only {len(self._free)} free")
         pages = [self._free.popleft() for _ in range(n)]
@@ -188,6 +204,41 @@ class PageAllocator:
             self._free.append(page)
             return True
         return False
+
+    def audit(self, holds=None) -> dict:
+        """Invariant check; raises ``RuntimeError`` on the first violation.
+
+        Internal invariants (always checked): garbage page 0 pinned at
+        exactly 1 and never on the free list; no negative refcounts; a page
+        is on the free list exactly when its refcount is 0; no duplicate
+        free-list entries. ``holds`` (optional ``{page: expected_refs}``
+        census from the holders' own books — live requests' page lists, the
+        prefix index's owned pages and CoW-source holds) cross-checks every
+        refcount against who actually claims the page: a mismatch is a
+        leaked or double-counted page. Returns summary stats."""
+        if self.refs[0] != 1:
+            raise RuntimeError(
+                f"audit: garbage page 0 refcount {self.refs[0]} != 1")
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise RuntimeError("audit: duplicate entries on the free list")
+        if 0 in free:
+            raise RuntimeError("audit: garbage page 0 on the free list")
+        for p in range(1, self.n_pages):
+            if self.refs[p] < 0:
+                raise RuntimeError(f"audit: page {p} refcount "
+                                   f"{self.refs[p]} < 0")
+            if (self.refs[p] == 0) != (p in free):
+                raise RuntimeError(
+                    f"audit: page {p} refcount {self.refs[p]} vs free-list "
+                    f"membership {p in free} disagree")
+            if holds is not None and self.refs[p] != holds.get(p, 0):
+                raise RuntimeError(
+                    f"audit: page {p} refcount {self.refs[p]} != "
+                    f"{holds.get(p, 0)} holders claimed "
+                    f"({'leaked' if holds.get(p, 0) == 0 else 'miscounted'})")
+        return {"n_pages": self.n_pages, "n_free": len(free),
+                "n_owned": self.n_pages - 1 - len(free)}
 
 
 class CachePool:

@@ -52,16 +52,32 @@ session; this index only moves page ids and opaque device trees around.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 
+class IndexCorruption(RuntimeError):
+    """A node's content no longer matches its sealed checksum: the index
+    would map token prefixes onto pages holding some OTHER prompt's K/V
+    bytes. The scheduler catches this at lookup and QUARANTINES the index
+    (cold admission from then on) — under Boolean numerics a wrong cache
+    byte is amplified into confidently wrong tokens, so wrong-byte serving
+    is never an acceptable failure mode."""
+
+
 class _Node:
-    """One radix-tree node: a run of full pages extending the parent."""
+    """One radix-tree node: a run of full pages extending the parent.
+
+    ``seal()`` checksums the (key, pages) content at every legitimate
+    mutation (creation, split); ``ok()`` re-derives and compares, so any
+    out-of-band mutation — a bookkeeping bug, the ``prefix_index`` fault
+    injection — is detectable before the node's pages are served.
+    """
 
     __slots__ = ("parent", "children", "key", "pages", "snaps", "ref",
-                 "tick")
+                 "tick", "csum")
 
     def __init__(self, parent, key: np.ndarray, pages: List[int],
                  snaps: List[Any], tick: int, ref: int = 0):
@@ -72,6 +88,18 @@ class _Node:
         self.snaps = snaps              # per-page boundary SSM state (|None)
         self.ref = ref                  # pass-through pins (requests+records)
         self.tick = tick
+        self.seal()
+
+    def _content_csum(self) -> int:
+        return zlib.crc32(
+            np.ascontiguousarray(self.key, np.int32).tobytes(),
+            zlib.crc32(np.asarray(self.pages, np.int64).tobytes()))
+
+    def seal(self) -> None:
+        self.csum = self._content_csum()
+
+    def ok(self) -> bool:
+        return self.csum == self._content_csum()
 
 
 @dataclasses.dataclass
@@ -107,10 +135,11 @@ class PrefixCache:
         self.root = _Node(None, np.zeros((0,), np.int32), [], [], 0)
         self.records: Dict[bytes, _Record] = {}
         self._tick = 0
+        self.quarantined = False
         self.stats = {"lookups": 0, "exact_hits": 0, "partial_hits": 0,
                       "misses": 0, "hit_tokens": 0, "prompt_tokens": 0,
                       "inserted_pages": 0, "evicted_pages": 0,
-                      "cow_forks": 0}
+                      "cow_forks": 0, "quarantines": 0}
 
     # -- path helpers --------------------------------------------------------
     def _chain(self, node: _Node) -> List[_Node]:
@@ -152,6 +181,7 @@ class PrefixCache:
         node.pages = node.pages[j:]
         node.snaps = node.snaps[j:]
         node.parent = head
+        node.seal()                     # legitimate mutation: re-checksum
         return head
 
     def _walk(self, tokens: np.ndarray, max_pages: int
@@ -166,6 +196,9 @@ class PrefixCache:
                 tokens[m * P:(m + 1) * P].tobytes())
             if child is None:
                 break
+            if not child.ok():
+                raise IndexCorruption(
+                    f"node at depth {m} pages failed its checksum")
             usable = min(len(child.pages), max_pages - m)
             j = 1                       # first page matched (the child key)
             while j < usable and np.array_equal(
@@ -187,10 +220,22 @@ class PrefixCache:
         to produce the next-token logits from. Pure w.r.t. stats and LRU
         ticks — those move on ``commit_hit`` when the request actually
         admits, so a blocked queue head retrying every scheduling round
-        inflates nothing."""
+        inflates nothing.
+
+        Every node on the returned path is checksum-verified as it is
+        walked; a mismatch raises ``IndexCorruption`` — the scheduler's
+        cue to ``quarantine`` the index rather than serve wrong bytes. A
+        quarantined index answers every lookup with None (cold admission).
+        """
+        if self.quarantined:
+            return None
         tokens = np.ascontiguousarray(tokens, np.int32)
         rec = self.records.get(tokens.tobytes())
         if rec is not None:
+            for n in self._chain(rec.node):
+                if not n.ok():
+                    raise IndexCorruption(
+                        "record path node failed its checksum")
             return Hit(exact=True, hit_len=int(tokens.size), node=rec.node,
                        pages=self.path_pages(rec.node), ssm=None, record=rec)
         node, pages, m = self._walk(tokens, (tokens.size - 1)
@@ -243,6 +288,8 @@ class PrefixCache:
         pages whose ownership TRANSFERRED to the index (their refcount-1
         now means "owned by the cache"); duplicates of already-cached
         pages are left to ``release`` to free."""
+        if self.quarantined:        # bypass mode: nothing enters the index,
+            return set()            # release() frees every request page
         ex = req.cache_extras
         tokens = np.ascontiguousarray(ex["tokens"], np.int32)
         P = self.page_size
@@ -367,6 +414,131 @@ class PrefixCache:
                         freed += 1
                         self.stats["evicted_pages"] += 1
         return True
+
+    # -- integrity: verify / quarantine / audit ------------------------------
+    def _owned_page_iter(self):
+        for rec in self.records.values():
+            if rec.page is not None:
+                yield rec.page
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n is not self.root:
+                yield from n.pages
+
+    def verify(self) -> None:
+        """Full-tree integrity walk; raises ``IndexCorruption`` on the
+        first bad node (checksum mismatch, broken parent/child links, a
+        child dict key that no longer matches its node's tokens, orphaned
+        records). O(index size) host work — run by ``audit()`` and by
+        hardened sessions each step; the per-lookup path checks catch the
+        serving-wrong-bytes case even when this never runs."""
+        if self.quarantined:
+            return
+        P = self.page_size
+        seen = {id(self.root)}
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            for kb, c in n.children.items():
+                if c.parent is not n:
+                    raise IndexCorruption("child/parent link mismatch")
+                if not c.ok():
+                    raise IndexCorruption("node failed its checksum")
+                if kb != np.ascontiguousarray(c.key[:P],
+                                              np.int32).tobytes():
+                    raise IndexCorruption(
+                        "child dict key != node key bytes")
+                if len(c.key) != len(c.pages) * P:
+                    raise IndexCorruption("key length != pages * page_size")
+                seen.add(id(c))
+                stack.append(c)
+        for rec in self.records.values():
+            if id(rec.node) not in seen:
+                raise IndexCorruption("orphaned record: node not in tree")
+
+    def flush(self, alloc) -> int:
+        """Drop the whole index, releasing every owned page (record
+        boundary pages + node runs). Live requests keep their own per-page
+        refs and path pins — the root object survives (children cleared in
+        place) so their parent-chain unpins still terminate. Decrefs are
+        individually guarded: a corrupted page id must not crash the
+        containment path that exists to survive corruption (anything it
+        cannot release shows up in the allocator audit as a leak, counted
+        here). Returns the number of pages actually freed."""
+        freed = 0
+        for p in list(self._owned_page_iter()):
+            try:
+                if alloc.decref(p):
+                    freed += 1
+                    self.stats["evicted_pages"] += 1
+            except (ValueError, IndexError, TypeError):
+                pass
+        self.root.children = {}
+        self.records = {}
+        return freed
+
+    def quarantine(self, alloc) -> int:
+        """Contain detected corruption: flush the index and disable it —
+        every later lookup misses (cold admission) and nothing new is
+        inserted. Cold admission is always CORRECT (hits are a pure
+        optimization), so quarantine trades hit rate for never serving a
+        byte the index cannot vouch for."""
+        freed = self.flush(alloc)
+        self.quarantined = True
+        self.stats["quarantines"] += 1
+        return freed
+
+    def audit(self, alloc, external_pins: Optional[Dict[int, int]] = None
+              ) -> dict:
+        """Bookkeeping invariants beyond ``verify``'s content checks:
+        every indexed page is live in the allocator (never free/garbage),
+        record paths are pinned, node pin counts reconcile as
+        record pins + live-request pins (``external_pins``: {id(node):
+        count} census the session computes from active requests; without
+        it only the record-pin lower bound is checked), and the record map
+        respects its LRU bound. Raises ``RuntimeError`` on violation."""
+        self.verify()
+        rec_pins: Dict[int, int] = {}
+        for rec in self.records.values():
+            for n in self._chain(rec.node):
+                rec_pins[id(n)] = rec_pins.get(id(n), 0) + 1
+            if rec.page is not None and not (
+                    0 < rec.page < alloc.n_pages
+                    and alloc.refs[rec.page] >= 1):
+                raise RuntimeError(
+                    f"audit: record boundary page {rec.page} is not owned")
+        n_nodes = n_pages = 0
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n is self.root:
+                continue
+            n_nodes += 1
+            n_pages += len(n.pages)
+            for p in n.pages:
+                if not (0 < p < alloc.n_pages and alloc.refs[p] >= 1):
+                    raise RuntimeError(
+                        f"audit: indexed page {p} is free/garbage")
+            want = rec_pins.get(id(n), 0)
+            if external_pins is not None:
+                want += external_pins.get(id(n), 0)
+                if n.ref != want:
+                    raise RuntimeError(
+                        f"audit: node pin count {n.ref} != {want} "
+                        "(records + live requests)")
+            elif n.ref < want:
+                raise RuntimeError(
+                    f"audit: node pin count {n.ref} < {want} record pins")
+        if len(self.records) > self.max_records:
+            raise RuntimeError(
+                f"audit: {len(self.records)} records > LRU bound "
+                f"{self.max_records}")
+        return {"nodes": n_nodes, "pages": n_pages,
+                "records": len(self.records),
+                "quarantined": self.quarantined}
 
     # -- introspection -------------------------------------------------------
     @property

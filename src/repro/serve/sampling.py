@@ -26,6 +26,18 @@ import jax.numpy as jnp
 from repro.models import ModelConfig
 
 
+def logits_all_finite(logits) -> bool:
+    """Host-side guard: True iff every logit is finite. B⊕LD's ``sign()``
+    activations amplify numeric corruption into confidently wrong tokens
+    with no NaN left behind ONLY past the activation — the pre-softmax
+    logits are still float math, so a poisoned cache page or bad kernel
+    output usually surfaces here first. Hardened sessions (``audit=True``)
+    check prefill logits before sampling a first token from them; the cost
+    is one device reduction + sync per admission, which is why it is
+    audit-mode-only."""
+    return bool(jnp.isfinite(jnp.asarray(logits)).all())
+
+
 def sample_tokens(cfg: ModelConfig, logits, temperature, key, step):
     """logits: (B, Vp) last-position logits -> (B, 1) int32 tokens."""
     lg = logits[..., :cfg.vocab_size]

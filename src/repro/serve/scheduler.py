@@ -32,11 +32,36 @@ under the same FCFS page-budget rule. Per step it can
     path without the requeue), so a queued request can take the freed
     capacity in the very next admit.
 
+Overload and fault hardening (PR 6) extends the lifecycle with three more
+TERMINAL states and the policies that produce them:
+
+  * SHED — rejected by admission control: the bounded submit queue is full
+    (``max_pending``), the tenant is over its page/lane quota, the page
+    budget can never fit, or the deadline is already unmeetable. Shedding
+    raises/records a typed ``ShedError`` carrying the machine-readable
+    reason, so callers can distinguish "retry later" (queue-full) from
+    "never" (page-budget).
+  * EXPIRED — a live request ran past its ``deadline_ms`` between decode
+    segments: lane + pages free immediately (the cancel path), partial
+    tokens stay readable.
+  * FAILED — an injected or real fault (allocator failure, fork failure)
+    was CONTAINED into this request: resources unwound, co-resident
+    requests untouched (serve/faults.py documents the contract).
+
+Priority classes (``SamplingParams.priority``): admission always serves
+the highest-priority pending class first (FCFS within a class — equal-
+priority traffic degenerates to exactly the old head-of-line behavior),
+and a higher-priority request PREEMPTS lower-priority active lanes
+(``evict`` — recompute-on-resume) rather than queueing behind bulk
+traffic. Per-tenant quotas bound the WORST-CASE page/lane footprint of
+each tenant's pending+active set at submit time, so one tenant's storm
+cannot starve another's admission.
+
 Per-request sampling state lives in ``SamplingParams`` (one dataclass per
 request, threaded through the lanes by the session), not in parallel lists;
 ``Request.status`` tracks the QUEUED → PREFILLING → DECODING → DONE
-lifecycle (plus CANCELLED and PREEMPTED) that ``RequestHandle.status``
-surfaces.
+lifecycle (plus CANCELLED, PREEMPTED and the terminal SHED / EXPIRED /
+FAILED above) that ``RequestHandle.status`` surfaces.
 
 No jax here: the device-side mirror (block table, positions, current
 tokens, lane keys) lives in ``ServeSession``, which drives this object.
@@ -50,7 +75,9 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .faults import InjectedFault
 from .paged_cache import PageAllocator, pages_for
+from .prefix_cache import IndexCorruption
 
 
 class RequestStatus(enum.Enum):
@@ -60,6 +87,34 @@ class RequestStatus(enum.Enum):
     DONE = "done"                # budget exhausted or stop token hit
     CANCELLED = "cancelled"      # dropped by the caller; partial tokens kept
     PREEMPTED = "preempted"      # evicted mid-decode; requeued at the front
+    SHED = "shed"                # rejected by admission control (ShedError)
+    EXPIRED = "expired"          # deadline passed mid-flight; resources freed
+    FAILED = "failed"            # fault contained into this request
+
+
+#: statuses a request never leaves — handle loops terminate on these.
+TERMINAL = frozenset({RequestStatus.DONE, RequestStatus.CANCELLED,
+                      RequestStatus.SHED, RequestStatus.EXPIRED,
+                      RequestStatus.FAILED})
+
+
+class ShedError(ValueError):
+    """Typed admission rejection. Subclasses ``ValueError`` so existing
+    capacity-validation callers (and their ``pytest.raises(ValueError)``
+    contracts) keep working; ``reason`` is machine-readable:
+
+      ``queue-full``    bounded submit queue at ``max_pending`` and no
+                        lower-priority pending victim to displace
+      ``page-budget``   page budget can never be satisfied by this pool
+      ``tenant-quota``  tenant's worst-case pending+active footprint would
+                        exceed its page or lane quota
+      ``deadline``      deadline already unmeetable at admission
+    """
+
+    def __init__(self, reason: str, rid: int, msg: str):
+        self.reason = reason
+        self.rid = rid
+        super().__init__(msg)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,11 +126,21 @@ class SamplingParams:
     folded with the request id (independent of lane placement either way).
     ``stop_token`` finishes the request early, releasing its lane + pages
     before ``max_tokens``; the stop token itself is the last token emitted.
+
+    Overload-control knobs: ``deadline_ms`` is a RELATIVE budget (wall
+    milliseconds from submit) — the session stamps the absolute deadline
+    at submit time; unmeetable at admission → SHED, passed mid-flight →
+    EXPIRED. ``priority`` ranks admission (higher first; FCFS within a
+    class) and lets a request preempt strictly-lower-priority lanes.
+    ``tenant`` is the accounting key for per-tenant page/lane quotas.
     """
     max_tokens: int = 16
     temperature: float = 0.0
     seed: Optional[int] = None
     stop_token: Optional[int] = None
+    deadline_ms: Optional[float] = None
+    priority: int = 0
+    tenant: str = "default"
 
 
 class Request:
@@ -103,6 +168,9 @@ class Request:
         self.pages: Tuple[int, ...] = ()
         self.status = RequestStatus.QUEUED
         self.stopped = False          # stop_token hit before max_tokens
+        self.seq = -1                 # global submit order (FCFS tiebreak)
+        self.deadline: Optional[float] = None   # ABSOLUTE wall ms, or None
+        self.fail_reason: Optional[str] = None  # why SHED/EXPIRED/FAILED
         # prefix-cache state (all vacuous when the cache is disabled):
         # pages = shared_pages + private_pages in logical (block-table)
         # order; hit is the pinned lookup this admission rode; cache_extras
@@ -120,6 +188,14 @@ class Request:
     @property
     def temperature(self) -> float:
         return self.params.temperature
+
+    @property
+    def priority(self) -> int:
+        return self.params.priority
+
+    @property
+    def tenant(self) -> str:
+        return self.params.tenant
 
     @property
     def done(self) -> bool:
@@ -143,7 +219,9 @@ class Request:
 
 class Scheduler:
     def __init__(self, lanes: int, n_pages: int, page_size: int,
-                 prefix_cache=None):
+                 prefix_cache=None, *, max_pending: Optional[int] = None,
+                 tenant_page_quota: Optional[int] = None,
+                 tenant_lane_quota: Optional[int] = None, faults=None):
         if lanes < 1 or n_pages < 2:
             raise ValueError("need >=1 lane and >=2 pages (page 0 is the "
                              "reserved garbage page)")
@@ -151,10 +229,22 @@ class Scheduler:
         self.page_size = page_size
         self.n_pages = n_pages
         self.free_lanes: Deque[int] = deque(range(lanes))
-        self.alloc = PageAllocator(n_pages)
+        self.alloc = PageAllocator(n_pages, faults=faults)
         self.prefix_cache = prefix_cache
         self.pending: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}
+        # overload / fault-containment policy (None = unbounded, the
+        # pre-hardening behavior every existing caller gets by default)
+        self.max_pending = max_pending
+        self.tenant_page_quota = tenant_page_quota
+        self.tenant_lane_quota = tenant_lane_quota
+        self._seq = 0
+        # drained by the session after every scheduling phase:
+        self.freed_lanes: List[int] = []   # lanes _release'd since last drain
+        self.faulted: List[Request] = []   # FAILED at admission (contained)
+        self.shed_log: List[Request] = []  # SHED after entering the queue
+        self.stats = {"admitted": 0, "shed": 0, "expired": 0, "failed": 0,
+                      "preemptions": 0, "quota_rejections": 0}
 
     @property
     def free_pages(self):
@@ -164,8 +254,73 @@ class Scheduler:
         return self.alloc.free_pages
 
     # -- queue ---------------------------------------------------------------
+    def _tenant_load(self, tenant: str) -> Tuple[int, int]:
+        """(requests, worst-case pages) of ``tenant``'s pending+active set.
+        Quotas bound the worst case — every page a request COULD ever need
+        — because admission reserves exactly that; counting live usage
+        would let a tenant over-commit through queued requests."""
+        reqs = [r for r in self.pending if r.tenant == tenant]
+        reqs += [r for r in self.active.values() if r.tenant == tenant]
+        return len(reqs), sum(self.pages_needed(r) for r in reqs)
+
+    def _shed(self, req: Request, reason: str) -> None:
+        req.status = RequestStatus.SHED
+        req.fail_reason = reason
+        self.stats["shed"] += 1
+
     def submit(self, req: Request) -> None:
-        """Enqueue at any time — including while other requests decode."""
+        """Enqueue at any time — including while other requests decode.
+
+        Admission control happens HERE, in O(queue) host time with zero
+        compute spent: a full bounded queue (``max_pending``) sheds —
+        displacing the newest strictly-lower-priority pending request if
+        the submitter outranks one, else shedding the submitter with
+        ``ShedError('queue-full')`` — and a tenant over its worst-case
+        page/lane quota sheds with ``ShedError('tenant-quota')``.
+        """
+        n_lanes, n_pages = (0, 0)
+        if self.tenant_lane_quota is not None \
+                or self.tenant_page_quota is not None:
+            n_lanes, n_pages = self._tenant_load(req.tenant)
+        if self.tenant_lane_quota is not None \
+                and n_lanes + 1 > self.tenant_lane_quota:
+            self._shed(req, "tenant-quota")
+            self.stats["quota_rejections"] += 1
+            raise ShedError(
+                "tenant-quota", req.rid,
+                f"request {req.rid}: tenant {req.tenant!r} already has "
+                f"{n_lanes} requests in flight (lane quota "
+                f"{self.tenant_lane_quota})")
+        if self.tenant_page_quota is not None \
+                and n_pages + self.pages_needed(req) > self.tenant_page_quota:
+            self._shed(req, "tenant-quota")
+            self.stats["quota_rejections"] += 1
+            raise ShedError(
+                "tenant-quota", req.rid,
+                f"request {req.rid}: tenant {req.tenant!r} worst-case "
+                f"footprint {n_pages}+{self.pages_needed(req)} pages "
+                f"exceeds quota {self.tenant_page_quota}")
+        if self.max_pending is not None \
+                and len(self.pending) >= self.max_pending:
+            victim = None
+            for r in self.pending:      # newest of the lowest class outranked
+                if r.priority < req.priority and (
+                        victim is None
+                        or (r.priority, -r.seq) < (victim.priority,
+                                                   -victim.seq)):
+                    victim = r
+            if victim is None:
+                self._shed(req, "queue-full")
+                raise ShedError(
+                    "queue-full", req.rid,
+                    f"request {req.rid}: submit queue full "
+                    f"({len(self.pending)}/{self.max_pending}) and no "
+                    f"lower-priority pending request to displace")
+            self.pending.remove(victim)
+            self._shed(victim, "queue-full")
+            self.shed_log.append(victim)
+        req.seq = self._seq
+        self._seq += 1
         req.status = RequestStatus.QUEUED
         self.pending.append(req)
 
@@ -182,22 +337,74 @@ class Scheduler:
         """Raise unless the request's full page budget can EVER be met.
         The single source of truth for the admission bound — sessions call
         it at submit time (before any compute) and ``admit`` enforces the
-        same rule at the queue head."""
+        same rule at the queue head. Raises ``ShedError('page-budget')``
+        (a ``ValueError``) carrying the rid, the requested pages, the
+        pool bound, AND the current free count, so shed causes are
+        debuggable straight from logs."""
         need = self.pages_needed(req)
         if need > self.n_pages - 1:
-            raise ValueError(
+            self._shed(req, "page-budget")
+            raise ShedError(
+                "page-budget", req.rid,
                 f"request {req.rid} needs {need} pages "
                 f"({len(req.prompt)}+{req.n_tokens} tokens at "
                 f"page_size={self.page_size}) but the pool only has "
-                f"{self.n_pages - 1} allocatable")
+                f"{self.n_pages - 1} allocatable "
+                f"({self.alloc.n_free} free right now)")
         return need
 
     # -- admit / finish / evict / cancel -------------------------------------
+    def _next_admissible(self) -> Request:
+        """Highest-priority pending request; FIRST in queue order within
+        the class (FCFS by submit order, and preempted requests — requeued
+        at the front — resume before their peers). All-default-priority
+        traffic reduces to ``pending[0]``: exactly the old strict
+        head-of-line behavior."""
+        best = self.pending[0]
+        for r in self.pending:
+            if r.priority > best.priority:
+                best = r
+        return best
+
+    def _preempt_for(self, req: Request) -> bool:
+        """Evict ONE strictly-lower-priority active request to make room
+        for ``req`` — lowest class first, newest within it (the least
+        progress to recompute on resume, on average). Returns False when
+        nothing active is outranked; the caller stops admitting — equal
+        priority NEVER preempts, so default-priority traffic keeps the
+        run-to-completion guarantee."""
+        lane, victim = -1, None
+        for ln, r in self.active.items():
+            if r.priority < req.priority and (
+                    victim is None
+                    or (r.priority, -r.seq) < (victim.priority,
+                                               -victim.seq)):
+                lane, victim = ln, r
+        if victim is None:
+            return False
+        self.evict(lane)
+        return True
+
+    def _lookup(self, tokens):
+        """Prefix lookup with corruption CONTAINMENT: a checksum mismatch
+        anywhere on the walked path quarantines the whole index (flush +
+        bypass to cold admission) and reports a miss — admission proceeds
+        with a full prefill, which is always correct."""
+        if self.prefix_cache is None:
+            return None
+        try:
+            return self.prefix_cache.lookup(tokens)
+        except IndexCorruption:
+            self.prefix_cache.quarantine(self.alloc)
+            return None
+
     def admit(self) -> List[Request]:
-        """FCFS: admit queue-head requests while a lane and their UNSHARED
-        page budget are free. Head-of-line blocking is deliberate —
-        skipping ahead would starve large requests forever under steady
-        traffic.
+        """Admit the highest-priority pending class FCFS while a lane and
+        the UNSHARED page budget are free. Head-of-line blocking WITHIN a
+        class is deliberate — skipping ahead would starve large requests
+        forever under steady traffic; ACROSS classes a blocked high-
+        priority head preempts lower-priority lanes instead of waiting
+        behind bulk traffic.
 
         With a prefix cache, admission first looks up the longest cached
         prefix; only the uncached tail + decode pages count against the
@@ -206,14 +413,25 @@ class Scheduler:
         even that cannot cover the tail, the head request waits — live
         requests' pins are never reclaimed, so waiting resolves as lanes
         finish, never deadlocks.
+
+        Fault containment: an (injected) allocation failure unwinds the
+        hit hold, marks the victim FAILED terminally (``faulted`` drain),
+        and admission CONTINUES with the next request — page grants are
+        atomic, so there is never partial state to roll back.
         """
         admitted = []
-        while self.pending and self.free_lanes:
-            head = self.pending[0]
-            need = self.check_fits(head)
-            hit = None
-            if self.prefix_cache is not None:
-                hit = self.prefix_cache.lookup(head.effective_prompt)
+        while self.pending:
+            head = self._next_admissible()
+            if not self.free_lanes:
+                if self._preempt_for(head):
+                    continue
+                break
+            try:
+                need = self.check_fits(head)
+            except ShedError:
+                self.pending.remove(head)
+                raise
+            hit = self._lookup(head.effective_prompt)
             shared = list(hit.pages) if hit is not None else []
             private_need = need - len(shared)
 
@@ -232,46 +450,60 @@ class Scheduler:
                 self.prefix_cache.unpin(h.node)
 
             if private_need > self.alloc.n_free:
-                if self.prefix_cache is None:
-                    break
-                if hit is not None:
-                    _hold()
-                ok = self.prefix_cache.reclaim(
-                    self.alloc, private_need - self.alloc.n_free)
-                if not ok and hit is not None:
-                    # the hit itself may pin the last reclaimable pages
-                    # (e.g. its own CoW fork source, at minimum pool
-                    # size): fall back to a COLD admission — dropping the
-                    # hit makes the whole unpinned index reclaimable, so
-                    # an otherwise-idle pool can never livelock on its
-                    # own cache
-                    _drop()
-                    hit, shared, private_need = None, [], need
+                ok = False
+                if self.prefix_cache is not None:
+                    if hit is not None:
+                        _hold()
                     ok = self.prefix_cache.reclaim(
-                        self.alloc, need - self.alloc.n_free)
+                        self.alloc, private_need - self.alloc.n_free)
+                    if not ok and hit is not None:
+                        # the hit itself may pin the last reclaimable pages
+                        # (e.g. its own CoW fork source, at minimum pool
+                        # size): fall back to a COLD admission — dropping
+                        # the hit makes the whole unpinned index
+                        # reclaimable, so an otherwise-idle pool can never
+                        # livelock on its own cache
+                        _drop()
+                        hit, shared, private_need = None, [], need
+                        ok = self.prefix_cache.reclaim(
+                            self.alloc, need - self.alloc.n_free)
                 if not ok:
+                    if self._preempt_for(head):
+                        continue
                     break
             elif hit is not None:
                 _hold()
-            req = self.pending.popleft()
-            req.lane = self.free_lanes.popleft()
+            try:
+                private = self.alloc.alloc(private_need)
+            except InjectedFault as e:
+                if hit is not None:
+                    _drop()
+                self.pending.remove(head)
+                head.status = RequestStatus.FAILED
+                head.fail_reason = f"injected:{e.site}"
+                self.faulted.append(head)
+                self.stats["failed"] += 1
+                continue
+            self.pending.remove(head)
+            head.lane = self.free_lanes.popleft()
             if self.prefix_cache is not None:
                 self.prefix_cache.commit_hit(hit, head.effective_prompt.size)
             for p in shared:
                 self.alloc.incref(p)
-            private = self.alloc.alloc(private_need)
-            req.shared_pages = tuple(shared)
-            req.private_pages = tuple(private)
-            req.pages = tuple(shared + private)
-            req.hit = hit
-            req.status = RequestStatus.PREFILLING
-            self.active[req.lane] = req
-            admitted.append(req)
+            head.shared_pages = tuple(shared)
+            head.private_pages = tuple(private)
+            head.pages = tuple(shared + private)
+            head.hit = hit
+            head.status = RequestStatus.PREFILLING
+            self.active[head.lane] = head
+            admitted.append(head)
+            self.stats["admitted"] += 1
         return admitted
 
     def _release(self, lane: int, insert: bool = False) -> Request:
         req = self.active.pop(lane)
         self.free_lanes.append(lane)
+        self.freed_lanes.append(lane)   # session drains → resets the mirror
         if self.prefix_cache is not None:
             self.prefix_cache.release(req, self.alloc, insert=insert)
         else:
@@ -294,7 +526,70 @@ class Scheduler:
         req = self._release(lane)
         req.status = RequestStatus.PREEMPTED
         self.pending.appendleft(req)     # preempted work resumes first
+        self.stats["preemptions"] += 1
         return req
+
+    def fail(self, lane: int, reason: str) -> Request:
+        """Contain a fault into the lane's request: release lane + pages
+        (the cancel path) and mark it terminally FAILED with the reason.
+        Partial tokens stay readable on the handle."""
+        req = self._release(lane)
+        req.status = RequestStatus.FAILED
+        req.fail_reason = reason
+        self.stats["failed"] += 1
+        return req
+
+    # -- deadlines ------------------------------------------------------------
+    def shed_expired(self, now_ms: float, est_ms: float = 0.0
+                     ) -> List[Request]:
+        """Shed pending requests whose deadline is unmeetable: already in
+        the past, or within ``est_ms`` (the session's running estimate of
+        admission+prefill latency) of it. Run at the top of every step so
+        a doomed request never costs a prefill."""
+        out = []
+        for r in list(self.pending):
+            if r.deadline is not None and now_ms + est_ms > r.deadline:
+                self.pending.remove(r)
+                self._shed(r, "deadline")
+                self.shed_log.append(r)
+                out.append(r)
+        return out
+
+    def expire(self, now_ms: float) -> List[Tuple[int, Request]]:
+        """Expire active requests past their deadline between decode
+        segments — lane + pages free immediately, terminal ``EXPIRED``,
+        partial tokens kept. Returns (lane, request) pairs so the session
+        can reset the freed lane mirrors."""
+        out = []
+        for lane, r in list(self.active.items()):
+            if r.deadline is not None and now_ms > r.deadline:
+                self._release(lane)
+                r.status = RequestStatus.EXPIRED
+                r.fail_reason = "deadline"
+                self.stats["expired"] += 1
+                out.append((lane, r))
+        return out
+
+    # -- session drains -------------------------------------------------------
+    def drain_freed_lanes(self) -> List[int]:
+        """Lanes released since the last drain (finish/evict/expire/fail/
+        cancel) — the session resets their device mirrors BEFORE arming
+        newly admitted requests, so a reset can never clobber a live
+        lane."""
+        out, self.freed_lanes = self.freed_lanes, []
+        return out
+
+    def drain_faulted(self) -> List[Request]:
+        """Requests FAILED terminally at admission since the last drain."""
+        out, self.faulted = self.faulted, []
+        return out
+
+    def drain_shed(self) -> List[Request]:
+        """Requests shed AFTER entering the queue (displaced by priority,
+        deadline-unmeetable) since the last drain — their submitters got
+        no ShedError, so the session surfaces the status via handles."""
+        out, self.shed_log = self.shed_log, []
+        return out
 
     def cancel(self, req: Request) -> bool:
         """Drop ``req`` wherever it is. Active requests release their lane

@@ -35,9 +35,26 @@ Sampling state is per-request (``SamplingParams``): temperature, optional
 seed (else the session key folded with the request id), token budget, stop
 token. A request's sampled stream is a function of its own key and step
 only — independent of lane placement, co-tenants, and submission timing.
+
+Overload + fault hardening (PR 6): the session is the CONTAINMENT
+boundary. Deadlines are swept at the top of every ``step()`` (unmeetable
+pending → SHED before any compute; past-deadline active → EXPIRED, lane +
+pages freed like cancel). Injected faults (serve/faults.py) are polled
+host-side BEFORE the pool is taken for a donating dispatch, so a fault
+never costs the pool: admission faults fail only the victim request;
+an injected kernel-dispatch fault serves the segment through the
+bitwise-identical XLA gather graph (no victim at all); detected
+prefix-index corruption quarantines the index (cold admission). A REAL
+dispatch failure after donation loses the pool — ``_contain_pool_loss``
+fails every active request terminally, flushes the index (its pages were
+in the lost bytes), and the next admission starts over on a fresh pool.
+``audit=True`` cross-checks every allocator refcount and index pin
+against the holders' own books after each step.
 """
 from __future__ import annotations
 
+import time
+from collections import Counter
 from typing import Iterator, Optional, Sequence
 
 import jax
@@ -45,12 +62,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import block_roles
-from repro.models.attention import paged_kernel_enabled
+from repro.models.attention import paged_kernel_enabled, paged_kernel_override
 
-from .paged_cache import paged_pool_init
+from .faults import FaultInjector, InjectedFault, corrupt_prefix_index
+from .paged_cache import paged_pool_init, pages_for
 from .prefix_cache import PrefixCache
-from .sampling import sample_tokens
-from .scheduler import Request, RequestStatus, SamplingParams, Scheduler
+from .sampling import logits_all_finite, sample_tokens
+from .scheduler import (TERMINAL, Request, RequestStatus, SamplingParams,
+                        Scheduler)
 
 
 def _default_bucket(S: int, floor: int = 8) -> int:
@@ -97,21 +116,30 @@ class RequestHandle:
         their own ``session.step()`` calls with reads."""
         return list(self._req.emitted)
 
+    @property
+    def error(self) -> Optional[str]:
+        """Why the request left the session abnormally (``SHED`` /
+        ``EXPIRED`` / ``FAILED``): the machine-readable reason string
+        (``queue-full``, ``deadline``, ``injected:page_alloc``, ...);
+        None for normal lifecycles."""
+        return self._req.fail_reason
+
     def tokens(self) -> Iterator[int]:
         """Yield this request's tokens as decode segments complete.
 
         Drains whatever is already buffered, then drives ``session.step()``
         (admitting/decoding EVERY live request, not just this one) until
-        the request finishes or is cancelled. Safe to interleave with other
-        handles' iterators — progress is shared.
+        the request reaches a terminal status — done, cancelled, or the
+        hardened-lifecycle exits (shed/expired/failed: the stream simply
+        ends after the partial tokens; ``status``/``error`` say why). Safe
+        to interleave with other handles' iterators — progress is shared.
         """
         i = 0
         while True:
             while i < len(self._req.emitted):
                 yield self._req.emitted[i]
                 i += 1
-            if self._req.status in (RequestStatus.DONE,
-                                    RequestStatus.CANCELLED):
+            if self._req.status in TERMINAL:
                 return
             if not self._session.step():
                 raise RuntimeError(
@@ -119,10 +147,10 @@ class RequestHandle:
                     f"{self._req.status.name}")
 
     def result(self) -> jax.Array:
-        """Drive the session until this request completes; returns its
-        tokens as a (n,) int32 array (partial if cancelled)."""
-        while self._req.status not in (RequestStatus.DONE,
-                                       RequestStatus.CANCELLED):
+        """Drive the session until this request reaches a terminal status;
+        returns its tokens as a (n,) int32 array (partial if cancelled /
+        shed mid-queue / expired / failed — check ``status``/``error``)."""
+        while self._req.status not in TERMINAL:
             if not self._session.step():
                 raise RuntimeError(
                     f"session idle but request {self._req.rid} is "
@@ -132,9 +160,10 @@ class RequestHandle:
     def cancel(self) -> bool:
         """Drop the request now. An active request releases its lane and
         pages immediately (reusable by the next admit); already-emitted
-        tokens stay readable. Returns False if it already finished."""
+        tokens stay readable. Returns False if it already reached a
+        terminal status."""
         req = self._req
-        if req.status in (RequestStatus.DONE, RequestStatus.CANCELLED):
+        if req.status in TERMINAL:
             return False
         lane = req.lane
         ok = self._session.sched.cancel(req)
@@ -158,7 +187,20 @@ class ServeSession:
                  n_pages: Optional[int] = None, segment: int = 1,
                  key: Optional[jax.Array] = None,
                  buckets: Optional[Sequence[int]] = None,
-                 prefix_cache: Optional[bool] = None):
+                 prefix_cache: Optional[bool] = None,
+                 max_pending: Optional[int] = None,
+                 tenant_page_quota: Optional[int] = None,
+                 tenant_lane_quota: Optional[int] = None,
+                 faults: Optional[FaultInjector] = None,
+                 audit: bool = False, clock=None):
+        """Overload/robustness knobs (all default off — the pre-hardening
+        behavior): ``max_pending`` bounds the submit queue (overflow sheds
+        with ``ShedError``), ``tenant_*_quota`` bound each tenant's
+        worst-case footprint, ``faults`` arms the injection registry (or
+        set ``REPRO_FAULTS`` in the env — chaos mode), ``audit=True`` runs
+        the allocator + prefix-index invariant audit after every step,
+        ``clock`` (→ wall milliseconds, default ``time.monotonic``) is the
+        deadline clock — injectable so tests drive time by hand."""
         if segment < 1 or page_size < 1 or lanes < 1:
             raise ValueError("segment, page_size and lanes must be >= 1")
         self.engine = engine
@@ -175,8 +217,17 @@ class ServeSession:
         self.prefix = PrefixCache(page_size) if prefix_cache else None
         self._has_ssm = any(r["mixer"] == "mamba"
                             for r in block_roles(engine.cfg))
+        self.faults = faults if faults is not None else FaultInjector.from_env()
+        self.audit_mode = audit
+        self._clock = clock if clock is not None \
+            else (lambda: time.monotonic() * 1000.0)
+        self._est_admit_ms = 0.0    # EMA of admission+prefill wall time
         self.sched = Scheduler(lanes, n_pages, page_size,
-                               prefix_cache=self.prefix)
+                               prefix_cache=self.prefix,
+                               max_pending=max_pending,
+                               tenant_page_quota=tenant_page_quota,
+                               tenant_lane_quota=tenant_lane_quota,
+                               faults=self.faults)
         self.key = _raw_key(key) if key is not None else jax.random.PRNGKey(0)
         self.buckets = tuple(sorted(int(b) for b in buckets)) \
             if buckets else None
@@ -216,12 +267,16 @@ class ServeSession:
         if p.size + params.max_tokens > self.engine.max_len:
             raise ValueError(
                 f"request {rid}: {p.size}+{params.max_tokens} tokens "
-                f"exceeds max_len={self.engine.max_len}")
+                f"exceeds max_len={self.engine.max_len} (would need "
+                f"{pages_for(p.size, params.max_tokens, self.page_size)} "
+                f"pages; {self.sched.alloc.n_free} free now)")
         req = Request(rid=rid, prompt=p, params=params)
         self.sched.check_fits(req)          # never-fitting page budget
         self._bucket_len(p.size)            # custom buckets must cover it
+        if params.deadline_ms is not None:  # relative budget → absolute ms
+            req.deadline = self._clock() + params.deadline_ms
         self._next_rid += 1
-        self.sched.submit(req)
+        self.sched.submit(req)              # may shed (queue/quota bounds)
         handle = RequestHandle(self, req)
         self._handles[rid] = handle
         return handle
@@ -238,10 +293,19 @@ class ServeSession:
             raise RuntimeError("session is closed")
         if self.sched.idle:
             return False
-        if self._admit_and_prefill():
-            return True
-        if self._decode_segment():
-            self._drain_finished()
+        self._sweep_deadlines()
+        if self.faults is not None and self.prefix is not None \
+                and self.faults.should_fire("prefix_index"):
+            # the corruption stand-in: flip bytes in a live index node;
+            # detection + quarantine happen at the next lookup (or audit)
+            corrupt_prefix_index(self.prefix)
+        if not self.sched.idle:
+            if self._admit_and_prefill():
+                pass                         # TTFT: return before decoding
+            elif self._decode_segment():
+                self._drain_finished()
+        if self.audit_mode:
+            self.audit()
         return True
 
     def run_until_idle(self) -> None:
@@ -263,6 +327,47 @@ class ServeSession:
         self.sched.evict(lane)
         self._reset_lane(lane)
         return True
+
+    def _sweep_deadlines(self) -> None:
+        """Deadline enforcement, both ends: shed pending requests whose
+        deadline cannot be met (now + estimated admission latency past it
+        — no compute wasted on doomed work), and expire active requests
+        already past theirs (lane + pages free immediately, like cancel;
+        partial tokens stay readable)."""
+        now = self._clock()
+        self.sched.shed_expired(now, self._est_admit_ms)
+        for lane, req in self.sched.expire(now):
+            self._reset_lane(lane)
+        for req in self.sched.drain_shed():
+            self._handles.pop(req.rid, None)
+
+    def audit(self) -> dict:
+        """Zero-leak oracle: rebuild the page-refcount and node-pin census
+        from the holders' OWN books (active requests' page lists + CoW
+        holds, the prefix index's owned pages and records) and cross-check
+        the allocator and index against it. Raises on any leak, double
+        count, or orphan; returns summary stats. O(pool + index) host work
+        — run after every step under ``audit=True`` and by the fault
+        suite after drain."""
+        holds: Counter = Counter()
+        pins: Counter = Counter()           # id(node) -> live-request pins
+        for req in self.sched.active.values():
+            for p in req.pages:
+                holds[p] += 1
+            if req.hit is not None:
+                for node in self.prefix._chain(req.hit.node):
+                    pins[id(node)] += 1     # pins are transitive to root
+                if req.hit.exact and req.hit.record.page is not None:
+                    holds[req.hit.record.page] += 1     # CoW-source hold
+        out = {}
+        if self.prefix is not None:
+            for p in self.prefix._owned_page_iter():
+                holds[p] += 1               # index ownership refs
+            out["prefix"] = self.prefix.audit(self.sched.alloc,
+                                              external_pins=dict(pins))
+        out["alloc"] = self.sched.alloc.audit(holds=dict(holds))
+        out["sched"] = dict(self.sched.stats)
+        return out
 
     @property
     def idle(self) -> bool:
@@ -347,6 +452,11 @@ class ServeSession:
         bit-identical to the cold run."""
         rec = req.hit.record
         fork = rec.page is not None
+        if fork and self.faults is not None \
+                and self.faults.should_fire("fork_page"):
+            # polled host-side BEFORE _take_pool(): the pool is untouched,
+            # so containment costs only this request
+            raise InjectedFault("fork_page", f"rid={req.rid}")
         if fork or self._has_ssm:
             fn = self.engine._get_fn(
                 ("hit_admit", self._pool_key, fork, self._has_ssm),
@@ -438,14 +548,36 @@ class ServeSession:
         first token immediately — streaming TTFT equals prefill latency,
         and a budget-1 (or instant stop-token) request finishes without
         ever occupying a decode segment."""
+        t0 = self._clock()
         admitted = self.sched.admit()
+        # reset lanes freed by admission-time preemption/faults BEFORE
+        # arming new lanes — a reset must never clobber a fresh admit
+        for lane in self.sched.drain_freed_lanes():
+            self._reset_lane(lane)
+        for req in self.sched.drain_faulted() + self.sched.drain_shed():
+            self._handles.pop(req.rid, None)
         for req in admitted:
             eff = req.effective_prompt
             S = int(eff.shape[0])
-            if req.hit is not None and req.hit.exact:
-                logits = self._admit_exact(req, S)
-            else:
-                logits = self._admit_prefill(req, eff, S)
+            try:
+                if req.hit is not None and req.hit.exact:
+                    logits = self._admit_exact(req, S)
+                else:
+                    logits = self._admit_prefill(req, eff, S)
+            except InjectedFault as e:
+                # fired before the pool was taken (host-side poll), so the
+                # pool is intact: fail ONLY the victim, free its resources
+                self.sched.fail(req.lane, f"injected:{e.site}")
+                for lane in self.sched.drain_freed_lanes():
+                    self._reset_lane(lane)
+                self._handles.pop(req.rid, None)
+                continue
+            if self.audit_mode and not logits_all_finite(logits[:, -1]):
+                self.sched.fail(req.lane, "non-finite prefill logits")
+                for lane in self.sched.drain_freed_lanes():
+                    self._reset_lane(lane)
+                self._handles.pop(req.rid, None)
+                continue
             lane_key = self._lane_key(req)
             e = len(req.emitted)
             first = sample_tokens(
@@ -470,12 +602,65 @@ class ServeSession:
                 self.sched.finish(lane)
                 self._reset_lane(lane)
                 self._handles.pop(req.rid, None)
+        if admitted:
+            dt = self._clock() - t0      # feeds the deadline-shed estimate
+            self._est_admit_ms = dt if self._est_admit_ms == 0.0 \
+                else 0.5 * (self._est_admit_ms + dt)
         return admitted
+
+    def _dispatch_segment(self, sampled: bool, kernel_on: bool) -> None:
+        """Trace/fetch the segment graph for the given kernel choice and
+        run it, updating the lane mirrors. The kernel flag is pinned in
+        BOTH the compile key and the trace-time override, so the fallback
+        graph is cached under — and only under — its own key."""
+        key = ("segment", self._pool_key, self.segment, sampled, kernel_on)
+        sfn = self.engine._get_fn(
+            key,
+            lambda: self.engine._build_batch_segment(self.segment, sampled))
+        try:
+            toks, cur_d, self._pool = sfn(
+                self.engine.params, self._take_pool(), jnp.asarray(self._bt),
+                jnp.asarray(self._pos), jnp.asarray(self._cur),
+                jnp.asarray(self._steps), jnp.asarray(self._temps),
+                jnp.asarray(self._keys))
+        except Exception:
+            # a fn whose dispatch failed may be poisoned (bad trace, dead
+            # device buffers): evict it so recovery re-traces fresh
+            self.engine._fns.pop(key, None)
+            raise
+        self._last_toks = np.asarray(toks)
+        self._cur = np.array(cur_d)     # copy: host mirror stays writable
+        self._pos += self.segment
+        self._steps += self.segment
+
+    def _contain_pool_loss(self, exc: Exception) -> None:
+        """A dispatch failed AFTER the pool was donated: the buffers are
+        invalid (CachePool.take contract — ``self._pool`` is already None),
+        so every active request's cache state is gone. Containment: fail
+        them all terminally (partial tokens kept), flush the prefix index
+        — its page ids point into the lost bytes, and the replacement pool
+        is zero-initialized — and let the next admission allocate fresh.
+        Pending requests are untouched; the session keeps serving."""
+        for lane in list(self.sched.active):
+            req = self.sched.fail(
+                lane, f"pool-lost:{type(exc).__name__}: {exc}")
+            self._handles.pop(req.rid, None)
+        for lane in self.sched.drain_freed_lanes():
+            self._reset_lane(lane)
+        if self.prefix is not None:
+            self.prefix.flush(self.sched.alloc)
 
     def _decode_segment(self) -> bool:
         """One fused ``segment``-step scan over the full lane pool; lanes
         whose request finished or was cancelled compute into the garbage
-        page until the boundary. Returns False when no lane is live."""
+        page until the boundary. Returns False when no lane is live.
+
+        Fault handling, two tiers: an INJECTED ``kernel_dispatch`` fault
+        is polled host-side before the pool moves and served through the
+        XLA gather graph (``REPRO_PAGED_KERNEL=0`` path) for this segment
+        — bitwise-identical tokens, no victim; a REAL dispatch exception
+        surfaces after donation and is contained by ``_contain_pool_loss``
+        (the pool is unrecoverable by then)."""
         if not self.sched.active:
             if self.sched.pending:   # unreachable given check_fits at submit
                 raise RuntimeError("scheduler deadlock: pending requests "
@@ -486,19 +671,16 @@ class ServeSession:
         # and both variants stay cached for a mixed session
         sampled = any(r.params.temperature > 0
                       for r in self.sched.active.values())
-        sfn = self.engine._get_fn(
-            ("segment", self._pool_key, self.segment, sampled,
-             paged_kernel_enabled()),
-            lambda: self.engine._build_batch_segment(self.segment, sampled))
-        toks, cur_d, self._pool = sfn(
-            self.engine.params, self._take_pool(), jnp.asarray(self._bt),
-            jnp.asarray(self._pos), jnp.asarray(self._cur),
-            jnp.asarray(self._steps), jnp.asarray(self._temps),
-            jnp.asarray(self._keys))
-        self._last_toks = np.asarray(toks)
-        self._cur = np.array(cur_d)     # copy: host mirror stays writable
-        self._pos += self.segment
-        self._steps += self.segment
+        if self.faults is not None \
+                and self.faults.should_fire("kernel_dispatch"):
+            with paged_kernel_override(False):
+                self._dispatch_segment(sampled, False)
+            return True
+        try:
+            self._dispatch_segment(sampled, paged_kernel_enabled())
+        except Exception as e:
+            self._contain_pool_loss(e)
+            return False
         return True
 
     def _drain_finished(self):

@@ -1,0 +1,223 @@
+"""Overload-control policy tests — pure host bookkeeping, no jax compute.
+
+Covers the admission-control half of the PR-6 hardening contract at the
+``Scheduler``/``PageAllocator`` level, where every policy is observable
+without compiling anything:
+
+  * PageAllocator refcount edge cases: double-free raises, counts never
+    go negative, the garbage page 0 can neither be freed nor allocated
+    away, over-asking ``alloc`` fails atomically (no partial grant);
+  * typed shedding: ``ShedError`` carries a machine-readable reason + the
+    rid, and the page-budget message carries the numbers needed to debug
+    a rejection from logs alone (rid, requested, bound, free-now);
+  * bounded submit queue: overflow sheds, a higher-priority submitter
+    displaces the newest lower-priority pending request instead;
+  * priority classes: a blocked high-priority head preempts a lower-
+    priority lane (never an equal one — default traffic keeps
+    run-to-completion);
+  * per-tenant quotas + fairness under churn: one tenant's
+    cancel/resubmit storm cannot starve another tenant's queued request
+    once quotas are on (deterministic arrival script);
+  * deadline shedding/expiry through scheduler methods with hand-driven
+    clocks.
+"""
+import numpy as np
+import pytest
+
+from repro.serve import (PageAllocator, Request, RequestStatus,
+                         SamplingParams, Scheduler, ShedError)
+from repro.serve.scheduler import TERMINAL
+
+
+def _req(rid, S=4, n=4, **kw):
+    return Request(rid, np.arange(S, dtype=np.int32),
+                   SamplingParams(max_tokens=n, **kw))
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator refcount edge cases
+# ---------------------------------------------------------------------------
+def test_double_free_raises_and_never_goes_negative():
+    a = PageAllocator(4)
+    (p,) = a.alloc(1)
+    assert a.decref(p) is True           # refcount 1 -> 0: actually freed
+    with pytest.raises(ValueError, match="free/garbage"):
+        a.decref(p)                      # double free
+    assert a.refs[p] == 0                # never driven negative
+    a.audit()                            # invariants hold after the abuse
+
+
+def test_garbage_page_is_untouchable():
+    a = PageAllocator(4)
+    for op in (a.decref, a.incref):
+        with pytest.raises(ValueError, match="garbage"):
+            op(0)
+    # page 0 is never handed out even when everything else is allocated
+    assert 0 not in a.alloc(3)
+    assert a.n_free == 0
+    assert a.refs[0] == 1
+    a.audit()
+
+
+def test_over_ask_alloc_fails_atomically():
+    a = PageAllocator(6)
+    a.alloc(2)
+    before = a.free_pages
+    with pytest.raises(ValueError, match="free"):
+        a.alloc(4)                       # only 3 free
+    assert a.free_pages == before        # no partial grant to roll back
+    assert len(a.alloc(3)) == 3          # the same pages remain grantable
+
+
+def test_audit_catches_external_census_mismatch():
+    a = PageAllocator(4)
+    pages = a.alloc(2)
+    a.audit(holds={pages[0]: 1, pages[1]: 1})
+    with pytest.raises(RuntimeError, match="leaked"):
+        a.audit(holds={pages[0]: 1})     # nobody claims pages[1]
+
+
+# ---------------------------------------------------------------------------
+# typed shedding
+# ---------------------------------------------------------------------------
+def test_page_budget_shed_error_is_debuggable_from_logs():
+    s = Scheduler(lanes=1, n_pages=4, page_size=4)
+    big = _req(7, S=12, n=8)             # needs 5 pages, pool has 3
+    with pytest.raises(ShedError, match="pages") as ei:
+        s.check_fits(big)
+    e = ei.value
+    assert isinstance(e, ValueError)     # legacy callers keep working
+    assert e.reason == "page-budget" and e.rid == 7
+    for needle in ("request 7", "5 pages", "3 allocatable", "free right now"):
+        assert needle in str(e)
+    assert big.status is RequestStatus.SHED
+    assert big.fail_reason == "page-budget"
+
+
+def test_bounded_queue_sheds_on_overflow():
+    s = Scheduler(lanes=1, n_pages=8, page_size=4, max_pending=2)
+    s.submit(_req(0))
+    s.submit(_req(1))
+    with pytest.raises(ShedError) as ei:
+        s.submit(_req(2))
+    assert ei.value.reason == "queue-full"
+    assert len(s.pending) == 2           # queue untouched by the rejection
+
+
+def test_priority_submit_displaces_newest_lower_priority_pending():
+    s = Scheduler(lanes=1, n_pages=8, page_size=4, max_pending=2)
+    lo_old, lo_new = _req(0), _req(1)
+    s.submit(lo_old)
+    s.submit(lo_new)
+    hi = _req(2, priority=5)
+    s.submit(hi)                         # displaces, does not raise
+    assert lo_new.status is RequestStatus.SHED
+    assert lo_new.fail_reason == "queue-full"
+    assert list(s.pending) == [lo_old, hi]
+    assert s.drain_shed() == [lo_new]
+
+
+# ---------------------------------------------------------------------------
+# priority admission + preemption
+# ---------------------------------------------------------------------------
+def test_high_priority_preempts_lower_priority_lane():
+    s = Scheduler(lanes=1, n_pages=8, page_size=4)
+    lo = _req(0)
+    s.submit(lo)
+    assert s.admit() == [lo]
+    hi = _req(1, priority=1)
+    s.submit(hi)
+    admitted = s.admit()
+    assert admitted == [hi]              # took the only lane
+    assert lo.status is RequestStatus.PREEMPTED
+    assert s.pending[0] is lo            # resumes first within its class
+    assert s.stats["preemptions"] == 1
+    # the preempted request resumes once the lane frees
+    s.finish(hi.lane)
+    assert s.admit() == [lo]
+
+
+def test_equal_priority_never_preempts():
+    s = Scheduler(lanes=1, n_pages=8, page_size=4)
+    first = _req(0)
+    s.submit(first)
+    assert s.admit() == [first]
+    second = _req(1)                     # same (default) priority
+    s.submit(second)
+    assert s.admit() == []               # run-to-completion preserved
+    assert first.status is RequestStatus.PREFILLING
+    assert s.stats["preemptions"] == 0
+
+
+# ---------------------------------------------------------------------------
+# tenant quotas + fairness under churn
+# ---------------------------------------------------------------------------
+def test_tenant_quota_sheds_over_footprint():
+    s = Scheduler(lanes=4, n_pages=16, page_size=4, tenant_page_quota=4)
+    s.submit(_req(0, S=4, n=4, tenant="a"))      # 2 pages of worst case
+    s.submit(_req(1, S=4, n=4, tenant="a"))      # 4 pages: at the quota
+    with pytest.raises(ShedError) as ei:
+        s.submit(_req(2, S=4, n=4, tenant="a"))  # would be 6 > 4
+    assert ei.value.reason == "tenant-quota"
+    s.submit(_req(3, S=4, n=4, tenant="b"))      # other tenants unaffected
+    assert s.stats["quota_rejections"] == 1
+
+
+def test_churn_storm_cannot_starve_other_tenant():
+    """Deterministic arrival script: tenant A holds the only lane and
+    storms cancel/resubmit while tenant B waits. With a lane quota of 1
+    per tenant, every A resubmission beyond its live one sheds at submit,
+    and B admits at the FIRST lane release — bounded, not starved."""
+    s = Scheduler(lanes=1, n_pages=16, page_size=4, tenant_lane_quota=1)
+    a0 = _req(0, tenant="a")
+    s.submit(a0)
+    assert s.admit() == [a0]
+    b = _req(1, tenant="b")
+    s.submit(b)                                  # queued behind A's lane
+    rid = 2
+    for _ in range(8):                           # the storm
+        storm = _req(rid, tenant="a")
+        rid += 1
+        with pytest.raises(ShedError) as ei:     # A is at its lane quota
+            s.submit(storm)
+        assert ei.value.reason == "tenant-quota"
+        assert s.admit() == []                   # B still waiting, A live
+    s.cancel(a0)                                 # A's live request leaves
+    resub = _req(rid, tenant="a")
+    s.submit(resub)                              # A instantly resubmits...
+    assert s.admit() == [b]                      # ...but B was first: FCFS
+    assert b.status is RequestStatus.PREFILLING
+    assert resub.status is RequestStatus.QUEUED
+
+
+# ---------------------------------------------------------------------------
+# deadlines (hand-driven clock at the scheduler level)
+# ---------------------------------------------------------------------------
+def test_unmeetable_deadline_sheds_before_admission():
+    s = Scheduler(lanes=1, n_pages=8, page_size=4)
+    r = _req(0, deadline_ms=10.0)
+    r.deadline = 110.0                   # submitted at t=100ms
+    s.submit(r)
+    assert s.shed_expired(now_ms=100.0, est_ms=5.0) == []   # still meetable
+    shed = s.shed_expired(now_ms=108.0, est_ms=5.0)         # 113 > 110
+    assert shed == [r]
+    assert r.status is RequestStatus.SHED and r.fail_reason == "deadline"
+    assert not s.pending and s.stats["shed"] == 1
+
+
+def test_mid_flight_expiry_frees_lane_and_pages():
+    s = Scheduler(lanes=1, n_pages=8, page_size=4)
+    r = _req(0, deadline_ms=50.0)
+    r.deadline = 150.0
+    s.submit(r)
+    assert s.admit() == [r]
+    free_before = s.alloc.n_free
+    assert s.expire(now_ms=140.0) == []          # not yet
+    [(lane, expired)] = s.expire(now_ms=151.0)
+    assert expired is r and lane == 0
+    assert r.status is RequestStatus.EXPIRED
+    assert r.status in TERMINAL
+    assert s.alloc.n_free == free_before + 2     # its full page budget
+    assert list(s.free_lanes) == [0]             # lane back too
+    assert s.drain_freed_lanes() == [0]
+    s.alloc.audit()
