@@ -44,6 +44,15 @@ echo "== fault-injection + overload-control gate =="
 python -m pytest -q -m faultinject tests/test_serve_faults.py
 python -m pytest -q tests/test_overload.py
 
+echo "== mesh-serving parity gate (multi-device) =="
+# Tensor-parallel serving on a forced-multi-device CPU mesh: 1-device
+# mesh bitwise parity, N-device greedy-token identity across all model
+# families (kernel + gather fallback), overload semantics under the
+# mesh-wide scheduler. Each test subprocesses its own device count;
+# REPRO_MESH_DEVICES picks the mesh size (CI runs 2 and 8).
+REPRO_MESH_DEVICES="${REPRO_MESH_DEVICES:-2}" \
+    python -m pytest -q -m multidevice
+
 echo "== decode bench smoke gate (throughput + streaming + overload) =="
 # Bench-only env hygiene — deliberately NOT exported to the pytest runs
 # above (tests must see the single real CPU device; see tests/conftest.py):
@@ -57,5 +66,14 @@ if [[ -n "${TCMALLOC}" ]]; then
     BENCH_ENV+=("LD_PRELOAD=${TCMALLOC}${LD_PRELOAD:+:$LD_PRELOAD}")
 fi
 env "${BENCH_ENV[@]}" REPRO_BENCH_SMOKE=1 python benchmarks/bench_decode.py
+
+echo "== kernel perf baseline gate (committed trajectory) =="
+# Re-run the kernel microbench in its smoke config and diff against the
+# committed min-of-N baseline (benchmarks/baselines/): geometry coverage
+# + EXACT pool byte model + generous timing tolerance (see
+# benchmarks/check_baseline.py; REPRO_BENCH_TOLERANCE to widen).
+env "${BENCH_ENV[@]}" REPRO_BENCH_SMOKE=1 python benchmarks/bench_kernels.py \
+    > /dev/null
+python benchmarks/check_baseline.py
 
 echo "check.sh: all green"

@@ -35,12 +35,8 @@ def compress_votes(g, error, axes: Tuple[str, ...]):
     sign = jnp.where(corrected >= 0, 1, -1).astype(jnp.int8)
     # vote count across replicas (Boolean aggregation, Eq 7)
     votes = jax.lax.psum(sign.astype(jnp.int32), axes)
-    if hasattr(jax.lax, "axis_size"):
-        n = 1
-        for a in axes:
-            n *= jax.lax.axis_size(a)
-    else:  # older jax: replica count via an all-reduce of ones
-        n = jax.lax.psum(1, axes)
+    from .context import axis_size
+    n = axis_size(axes)  # version-portable replica count (see context.py)
     decoded = votes.astype(jnp.float32) / n
     scale = jnp.mean(jnp.abs(corrected))          # per-leaf magnitude
     decoded = decoded * scale

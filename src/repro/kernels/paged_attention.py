@@ -169,6 +169,14 @@ def paged_flash_decode(q, k_pool, v_pool, block_table, pos,
 
     Returns (L, KV, R, hd) fp32 — bitwise equal to the XLA block-table
     gather + ``_flash_decode_local`` reference.
+
+    HEAD-LOCAL CONTRACT (serve-TP): every shape here comes from the
+    operands, never from a config — under shard_map each device passes its
+    KV-local q slice and KV-local pool leaves, so the kernel's per-lane
+    DMA loop touches ONLY head-local pages and the O(tokens-attended)
+    pool-byte bound divides by the shard count per device. The same holds
+    for the gather fallback (it indexes the same local pool leaves), which
+    is what keeps kernel-vs-gather bit parity shard-by-shard.
     """
     L, KV, R, hd = q.shape
     n_pages, page = k_pool.shape[:2]

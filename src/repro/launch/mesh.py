@@ -27,8 +27,32 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(model_axis: int = 1):
     """Tiny mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())
-    assert n % model_axis == 0
+    if n % model_axis != 0:
+        raise ValueError(
+            f"make_local_mesh: {n} visible devices not divisible by "
+            f"model_axis={model_axis} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N on CPU)")
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def make_serve_mesh(n_shards: int = 0):
+    """1-D ("model",) mesh for tensor-parallel serving (ServeEngine mesh=).
+
+    Serving shards ONLY the head axis (weights column-wise, KV page pools
+    on the KVp dim), so the serve mesh is one axis; data-parallel replica
+    routing is a scheduler-level concern layered above, not a mesh axis
+    (ROADMAP follow-up). ``n_shards=0`` takes every visible device —
+    on CPU CI that is what ``--xla_force_host_platform_device_count``
+    forced.
+    """
+    devs = jax.devices()
+    n = n_shards or len(devs)
+    if n > len(devs):
+        raise ValueError(
+            f"make_serve_mesh: asked for {n} shards but only {len(devs)} "
+            f"devices are visible (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} on CPU)")
+    return jax.make_mesh((n,), ("model",), devices=devs[:n])
 
 
 def mesh_batch_axes(mesh) -> tuple:

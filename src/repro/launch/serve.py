@@ -79,6 +79,12 @@ def main():
                     help="(--stream) per-request deadline budget in wall "
                          "ms: unmeetable at admission sheds, passing it "
                          "mid-flight expires the request")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="tensor-parallel serve mesh over N devices "
+                         "(head-axis sharded weights + KV page pools, one "
+                         "mesh-wide scheduler; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N). "
+                         "0 = single-device, no mesh")
     args = ap.parse_args()
 
     import jax
@@ -96,8 +102,21 @@ def main():
 
     key = jax.random.PRNGKey(0)
     params, _ = lm_init(key, cfg)
+    mesh = None
+    if args.shards:
+        from repro.distributed import set_mesh
+        from repro.launch.mesh import make_serve_mesh
+
+        mesh = make_serve_mesh(args.shards)
+        set_mesh(mesh)
+        print(f"[serve] tensor-parallel mesh: {args.shards} shards "
+              f"(head-axis sharded weights + KV page pools)")
+        if not (args.stream or args.continuous):
+            raise SystemExit("--shards requires --stream or --continuous "
+                             "(the paged serve path; generate() is "
+                             "single-device)")
     engine = ServeEngine(cfg, params, max_len=args.prompt_len + args.gen,
-                         packed=args.packed)
+                         packed=args.packed, mesh=mesh)
 
     if args.stream or args.continuous:
         # one request-pool builder for both traffic-shaped modes

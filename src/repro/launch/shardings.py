@@ -80,6 +80,91 @@ def named(mesh, spec_tree):
         spec_tree, is_leaf=lambda x: isinstance(x, P))
 
 
+# ---------------------------------------------------------------------------
+# Serve-time tensor parallelism (ServeEngine mesh mode)
+# ---------------------------------------------------------------------------
+# The serve mesh is 1-D ("model",) — see launch/mesh.make_serve_mesh. Only
+# the attention head axis shards: q/k/v projections column-wise (the fused
+# packed wqkv is repacked shard-major by the engine first) and the KV page
+# pools (k/v + the per-(token,head) quant scale pools) on the KVp dim.
+# Everything else — embeddings, norms, the o-projection, FFN/MoE/mamba
+# weights, lane-indexed SSM state — stays replicated: BOLD weights are
+# 1-bit, so the replicated bytes are cheap and the per-device page-pool
+# bytes (the decode bound) still shrink by the shard count. wo is
+# DELIBERATELY replicated (applied after an all-gather of the head
+# activations, models/attention._wo_project): a row-sharded wo + psum
+# would reassociate the fan-in reduction and sign() amplifies those ulps
+# into token flips. These spec trees serve double duty as shard_map
+# in/out_specs and (via ``named``) as device_put shardings.
+
+_ATTN_COL = ("wq", "wk", "wv", "wqkv")
+
+
+def _serve_leaf_spec(leaf, model_axis_from_end: int) -> P:
+    """MODEL on the ``model_axis_from_end``-th axis from the end (1 = last);
+    PackedBool leaves spec their packed ``bits`` array."""
+    from repro.core import PackedBool
+
+    nd = leaf.bits.ndim if isinstance(leaf, PackedBool) else leaf.ndim
+    spec = [None] * nd
+    spec[nd - model_axis_from_end] = "model"
+    return P(*spec)
+
+
+def serve_param_specs(params):
+    """PartitionSpec tree (same structure as ``params``) for serve-TP.
+
+    Attention nodes are detected structurally (a dict holding ``wo``
+    alongside ``wq`` or ``wqkv`` — mamba/FFN/MoE nodes never have that key
+    set): q/k/v weights and biases shard on their OUTPUT (head) axis;
+    every other leaf — including wo, see the module note — is replicated
+    (``P()``).
+    """
+    def proj(node):
+        return {k: (_serve_leaf_spec(v, 1) if k in ("w", "b")
+                    else jax.tree.map(lambda _: P(), v))
+                for k, v in node.items()}
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return jax.tree.map(lambda _: P(), node)
+        is_attn = "wo" in node and ("wq" in node or "wqkv" in node)
+        out = {}
+        for k, v in node.items():
+            if is_attn and k in _ATTN_COL:
+                out[k] = proj(v)             # column (head) sharded
+            elif isinstance(v, dict):
+                out[k] = walk(v)
+            else:
+                out[k] = jax.tree.map(lambda _: P(), v)
+        return out
+
+    return walk(params)
+
+
+def serve_pool_specs(cfg: ModelConfig, pool):
+    """PartitionSpec tree for a ``paged_pool_init`` tree under serve-TP:
+    attention pool leaves (G, n_pages, page, KVp[, hd]) shard on the KVp
+    axis — "one PageAllocator pool per shard" realized as one host-side
+    allocator whose physical page ids are symmetric across shards while
+    the pool BYTES live head-local per device — and lane-indexed SSM state
+    stays replicated (it is O(1) per lane, never paged)."""
+    from repro.models import block_roles
+
+    roles = block_roles(cfg)
+    out = {}
+    for i, role in enumerate(roles):
+        blk = pool[f"b{i}"]
+        if role["mixer"] == "mamba":
+            out[f"b{i}"] = jax.tree.map(lambda _: P(), blk)
+        else:
+            out[f"b{i}"] = {
+                k: (P(None, None, None, "model", None) if k in ("k", "v")
+                    else P(None, None, None, "model"))
+                for k in blk}
+    return out
+
+
 def batch_shardings(cfg: ModelConfig, mesh, batch_specs):
     b_ax = cfg.batch_axes if cfg.batch_axes else None
 

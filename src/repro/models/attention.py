@@ -78,12 +78,30 @@ def attention_init(key, cfg: ModelConfig, axis_size: int = 16):
     }
 
 
-def _qkv(cfg: ModelConfig, p, x, positions, axis_size: int = 16):
-    """Project to (B,S,Hp,hd) q and (B,S,KVp,hd) k/v with RoPE applied."""
-    B, S, _ = x.shape
-    hd = cfg.head_dim_
+def _tp_heads(cfg: ModelConfig, axis_size: int = 16):
+    """(hp_local, kvp_local): per-device head counts under serve-time TP.
+
+    ``serve_tp == 1`` (everything except mesh serving) returns the global
+    padded counts unchanged. Under TP the engine shards q/k/v weight
+    columns and the KV page pools on the head axis, so every projection
+    and cache shape inside the shard_map body is head-local. GQA grouping
+    survives because heads are group-major: kvp % tp == 0 is validated at
+    engine construction, and hp_l // kvp_l == the global n_rep.
+    """
     hp = cfg.heads_padded(axis_size)
     kvp = cfg.kv_heads_padded(axis_size)
+    return hp // cfg.serve_tp, kvp // cfg.serve_tp
+
+
+def _qkv(cfg: ModelConfig, p, x, positions, axis_size: int = 16):
+    """Project to (B,S,Hp,hd) q and (B,S,KVp,hd) k/v with RoPE applied.
+
+    Under serve-TP the weights are column-sharded (shard-major for the
+    fused wqkv), so the shapes here are the LOCAL head counts.
+    """
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    hp, kvp = _tp_heads(cfg, axis_size)
     if "wqkv" in p:
         # Packed serving layout (pack_weights): q/k/v fused into a single
         # GEMV so the decode token makes ONE pass over the activations and
@@ -103,12 +121,43 @@ def _qkv(cfg: ModelConfig, p, x, positions, axis_size: int = 16):
 
 
 def _head_mask(cfg: ModelConfig, out, axis_size: int = 16):
-    """Zero the padded q-head outputs (Boolean wo rows are ±1, not 0)."""
+    """Zero the padded q-head outputs (Boolean wo rows are ±1, not 0).
+
+    Under serve-TP ``out`` carries this shard's local head slice, so the
+    real-head test compares GLOBAL head indices (shard offset via
+    ``axis_index``) against ``n_heads``.
+    """
     hp = cfg.heads_padded(axis_size)
     if hp == cfg.n_heads:
         return out
-    mask = (jnp.arange(hp) < cfg.n_heads).astype(out.dtype)
+    hp_l = hp // cfg.serve_tp
+    idx = jnp.arange(hp_l)
+    if cfg.serve_tp > 1:
+        idx = idx + jax.lax.axis_index(MODEL_AXIS) * hp_l
+    mask = (idx < cfg.n_heads).astype(out.dtype)
     return out * mask[None, None, :, None]
+
+
+def _wo_project(cfg: ModelConfig, p_wo, out):
+    """o-projection, TP-aware: the head-axis reduce of the decode segment.
+
+    ``out`` is (B, S, hp_local*hd). Under serve-TP the heads are
+    all-gathered (shard-major == global head order) and the REPLICATED wo
+    is applied to the full activation — NOT a partial-wo psum. Summing
+    per-shard wo partials would reassociate the fan-in reduction, and
+    B⊕LD's sign() activations amplify those ulps into token flips (the
+    psum variant measurably diverges on 8-device CPU meshes); gathering
+    the tiny (B,1,hp*hd) per-step activation instead keeps the projection
+    arithmetic IDENTICAL to the unsharded graph, so greedy streams stay
+    token-identical across shard counts. The gathered bytes are O(B·hp·hd)
+    per step — noise next to the per-device O(tokens-attended) pool reads
+    that sharding exists to cut — and the replicated wo is 1-bit packed,
+    so the weight-byte cost of replication is 32× discounted.
+    serve_tp == 1 takes the exact pre-TP code path."""
+    if cfg.serve_tp == 1:
+        return proj_apply(cfg, p_wo, out)
+    full = jax.lax.all_gather(out, MODEL_AXIS, axis=2, tiled=True)
+    return proj_apply(cfg, p_wo, full)
 
 
 def _repeat_kv(x, n_rep: int):
@@ -367,7 +416,9 @@ def attention_cache_init(cfg: ModelConfig, batch: int, max_len: int,
     per-(token, head) scale leaves sharing the (batch, seq, kv) layout.
     """
     hd = cfg.head_dim_
-    kvp = cfg.kv_heads_padded(axis_size)
+    # LOCAL kv head count under serve-TP (shard_map prefill bodies allocate
+    # their scratch cache at the shard's slice); global when serve_tp == 1.
+    kvp = _tp_heads(cfg, axis_size)[1]
     seq_axes = cfg.cache_seq_axes if (shard_seq or cfg.cache_seq_axes) else None
     # seq-sharded decode layout keeps kv heads unsharded; otherwise kv heads
     # shard over model when wide enough.
@@ -539,14 +590,17 @@ def attention_decode_paged(cfg: ModelConfig, p, x, cache, block_table, pos,
     is the reserved garbage page: idle/overrun lanes point at it, so their
     writes never touch pages owned by live requests.
 
-    (The TP ``axis_size`` parameter this signature used to take was dead
-    since the shard_map rework — paged decode always runs the replicated
-    single-host layout; head padding uses the default axis.)
+    Under serve-TP (``cfg.serve_tp > 1``, engine mesh mode) this body runs
+    inside ``shard_map`` on a 1-D ("model",) mesh: the cache pool leaves
+    are the shard's KVp-local slices, q/k/v projections produce local
+    heads, and both the Pallas kernel and the gather fallback read only
+    head-local pages — the O(tokens-attended) pool-byte bound holds PER
+    DEVICE. The o-projection all-gathers the head activations first
+    (``_wo_project`` — a gather, not a psum, for bit-stability).
     """
     B = x.shape[0]
     hd = cfg.head_dim_
-    hp = cfg.heads_padded()
-    kvp = cfg.kv_heads_padded()
+    hp, kvp = _tp_heads(cfg)
     page = cache["k"].shape[1]
     C = block_table.shape[1]
     q, k_new, v_new = _qkv(cfg, p, x, pos[:, None])
@@ -608,7 +662,7 @@ def attention_decode_paged(cfg: ModelConfig, p, x, cache, block_table, pos,
     out = out.reshape(B, 1, hp, hd).astype(x.dtype)
     out = _head_mask(cfg, out)
     out = out.reshape(B, 1, hp * hd)
-    return proj_apply(cfg, p["wo"], out), new_cache
+    return _wo_project(cfg, p["wo"], out), new_cache
 
 
 def _decode_shardmap(cfg: ModelConfig, qg, k_new, v_new, cache, pos,

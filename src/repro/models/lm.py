@@ -350,8 +350,9 @@ def _apply_block_prefill(cfg: ModelConfig, bp, role, x, positions,
         local = role["mixer"] == "attn_local"
         B, S, _ = x.shape
         q, k, v = A._qkv(cfg, bp["attn"], h, positions)
-        hp = cfg.heads_padded()
-        kvp = cfg.kv_heads_padded()
+        # LOCAL head counts under serve-TP (global when serve_tp == 1);
+        # hp // kvp is the global GQA group size either way.
+        hp, kvp = A._tp_heads(cfg)
         kk = A._repeat_kv(k, hp // kvp)
         vv = A._repeat_kv(v, hp // kvp)
         window = cfg.sliding_window if local else 0
@@ -381,8 +382,8 @@ def _apply_block_prefill(cfg: ModelConfig, bp, role, x, positions,
                 window=window, softcap_val=cfg.attn_logit_softcap,
                 chunk=cfg.attn_chunk)
         out = A._head_mask(cfg, out)
-        mix = A.proj_apply(cfg, bp["attn"]["wo"],
-                           out.reshape(B, S, hp * cfg.head_dim_))
+        mix = A._wo_project(cfg, bp["attn"]["wo"],
+                            out.reshape(B, S, hp * cfg.head_dim_))
         new_c = A.kv_cache_entry(cfg, k, v)
     x = x + mix
     if role["ffn"] is not None:

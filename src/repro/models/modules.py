@@ -115,6 +115,15 @@ class ModelConfig:
     use_sharding_constraints: bool = False
     moe_groups: int = 1            # routing groups (= batch shards) for MoE capacity
     kv_cache_quant: bool = False   # int8 KV cache (BOLD-quantized dataflow)
+    serve_tp: int = 1              # serve-time tensor parallelism over the
+    # head axis: the paged decode/prefill graphs run under shard_map on a
+    # 1-D ("model",) mesh with hp/kvp divided by serve_tp per device, a
+    # shard-offset head mask, and an all-gather of the head activations
+    # before the REPLICATED o-projection (attention._wo_project — a
+    # gather, not a row-shard psum, so the fan-in reduction order matches
+    # the unsharded graph exactly; sign() amplifies reassociation ulps
+    # into token flips). serve_tp == 1 is bit-identical to the unsharded
+    # graph — the TP branches are skipped entirely at trace time.
     decode_chunk: int = 2048       # flash-decode inner chunk over local seq
     ssm_chunk: int = 128           # selective-scan chunk (train/prefill)
     reduce_bf16: bool = False      # bf16 cross-shard matmul partials (§Perf)

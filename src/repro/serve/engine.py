@@ -65,7 +65,7 @@ def _fusable(*projs) -> bool:
                for p in projs)
 
 
-def pack_weights(params):
+def pack_weights(params, tp: int = 1):
     """Bit-pack every Boolean int8 projection leaf for serving.
 
     q/k/v (and FFN gate/up) projections sharing an input dim fuse into one
@@ -73,15 +73,30 @@ def pack_weights(params):
     block over activations and packed weight words. Everything FP (embed,
     head, norms, router, biases) and MoE expert tensors pass through
     untouched.
+
+    ``tp > 1`` (engine mesh mode) lays the fused wqkv columns out
+    SHARD-MAJOR ``[q_0|k_0|v_0 | q_1|k_1|v_1 | ...]`` so a plain last-axis
+    PartitionSpec hands shard s exactly its local ``[q_s|k_s|v_s]`` fused
+    block (the plain ``[q|k|v]`` concat layout cannot be column-sharded
+    without a permutation). wo packs normally — it stays replicated under
+    the mesh (launch/shardings.py explains why).
     """
+    def shard_major(*ws):
+        if tp == 1:
+            return jnp.concatenate(ws, axis=-1)
+        slices = [[w[..., s * (w.shape[-1] // tp):(s + 1)
+                     * (w.shape[-1] // tp)] for w in ws]
+                  for s in range(tp)]
+        return jnp.concatenate([w for sl in slices for w in sl], axis=-1)
+
     def walk(node):
         if not isinstance(node, dict):
             return node
         node = dict(node)
         if {"wq", "wk", "wv"} <= node.keys() \
                 and _fusable(node["wq"], node["wk"], node["wv"]):
-            w = jnp.concatenate([node.pop("wq")["w"], node.pop("wk")["w"],
-                                 node.pop("wv")["w"]], axis=-1)
+            w = shard_major(node.pop("wq")["w"], node.pop("wk")["w"],
+                            node.pop("wv")["w"])
             node["wqkv"] = {"w": pack_boolean_weight(w)}
         if {"wg", "wu"} <= node.keys() \
                 and _fusable(node["wg"], node["wu"]):
@@ -109,8 +124,41 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, params, max_len: int,
                  packed: bool = False, prefix_cache: bool = False,
-                 cache_pool_limit: int = 8):
+                 cache_pool_limit: int = 8, mesh=None):
+        """``mesh``: a 1-D ("model",) mesh (launch/mesh.make_serve_mesh)
+        enables tensor-parallel serving — q/k/v weights column-sharded on
+        the head axis (packed wqkv repacked shard-major), the KV page
+        pools split on the KVp dim, and the paged prefill / decode-segment
+        graphs traced under shard_map with an all-gather of the head
+        activations before the replicated o-projection (the head-axis
+        reduce — see attention._wo_project for why it is a gather, not a
+        psum). The scheduler/session API is unchanged for callers; on a
+        1-device mesh token streams are BITWISE identical to the unsharded
+        engine, and multi-device greedy streams are token-identical to the
+        single-device path (per-head arithmetic is untouched by sharding;
+        tests/test_mesh_serve.py pins both)."""
+        self.mesh = mesh
+        self.tp = 1
+        if mesh is not None:
+            if tuple(mesh.axis_names) != ("model",):
+                raise ValueError(
+                    f"ServeEngine mesh must be 1-D ('model',) — got axes "
+                    f"{tuple(mesh.axis_names)}; build it with "
+                    "launch.mesh.make_serve_mesh (data-parallel replica "
+                    "routing is a scheduler concern, not a mesh axis)")
+            self.tp = int(mesh.shape["model"])
+            self._validate_tp(cfg)
+            if prefix_cache:
+                raise NotImplementedError(
+                    "prefix_cache under a serve mesh is not implemented "
+                    "(the radix index would need shard-symmetric CoW "
+                    "forks; ROADMAP follow-up)")
         self.cfg = cfg
+        # the config the sharded graphs trace with: serve_tp switches the
+        # model body to local head counts + the all-gather head reduce
+        # before wo. tp == 1 leaves cfg untouched, so the traced graph is
+        # the unsharded one.
+        self._serve_cfg = cfg.scaled(serve_tp=self.tp) if self.tp > 1 else cfg
         self.max_len = max_len
         self.packed = packed
         # default for sessions (overridable per session): radix-indexed
@@ -119,7 +167,7 @@ class ServeEngine:
         if packed:
             from repro.core import PackedBool
 
-            self.params = pack_weights(params)
+            self.params = pack_weights(params, tp=self.tp)
             n_packed = sum(isinstance(l, PackedBool) for l in jax.tree.leaves(
                 self.params, is_leaf=lambda x: isinstance(x, PackedBool)))
             if n_packed == 0:
@@ -129,6 +177,18 @@ class ServeEngine:
                     "would silently serve full-precision weights")
         else:
             self.params = params
+        if mesh is not None:
+            from repro.launch.shardings import (named, serve_param_specs,
+                                                serve_pool_specs)
+            from .paged_cache import paged_pool_init
+
+            self._param_specs = serve_param_specs(self.params)
+            self.params = jax.device_put(self.params,
+                                         named(mesh, self._param_specs))
+            # pool SPEC tree depends only on the block roles + quant layout,
+            # not geometry — build it once from a throwaway template
+            self._pool_specs = serve_pool_specs(
+                cfg, paged_pool_init(cfg, 1, 2, 1))
         # preallocated cache trees, donated per call: contiguous oracle
         # caches keyed by batch size, paged pools keyed by pool geometry —
         # one bounded pool abstraction instead of an unbounded per-shape dict
@@ -138,6 +198,54 @@ class ServeEngine:
         self._prefill = jax.jit(
             lambda p, b, c: lm_prefill(cfg, p, b, cache=c))
         self._decode = jax.jit(lambda p, c, t: lm_decode_step(cfg, p, c, t))
+
+    def _validate_tp(self, cfg: ModelConfig) -> None:
+        """Shardability: every attention role must split its KV heads (and
+        hence, group-major GQA, its q heads) evenly over the mesh."""
+        tp = self.tp
+        has_attn = any(r["mixer"] != "mamba" for r in block_roles(cfg))
+        if not has_attn:
+            return  # pure-SSM: state is lane-indexed and replicated
+        hp, kvp = cfg.heads_padded(), cfg.kv_heads_padded()
+        if kvp % tp or hp % tp:
+            raise ValueError(
+                f"serve mesh of {tp} shards cannot split heads evenly: "
+                f"padded q heads {hp}, padded kv heads {kvp} (scale "
+                f"n_kv_heads so tp divides it)")
+
+    def init_pool(self, lanes: int, n_pages: int, page_size: int):
+        """Allocate one paged pool for a session — mesh mode device_puts it
+        with the attention leaves sharded on the KVp axis (each device then
+        holds its head-local page bytes; page IDs stay symmetric across
+        shards, so ONE host allocator places every shard's pages)."""
+        from .paged_cache import paged_pool_init
+
+        pool = paged_pool_init(self.cfg, lanes, n_pages, page_size)
+        if self.mesh is not None:
+            from repro.launch.shardings import named
+
+            pool = jax.device_put(pool, named(self.mesh, self._pool_specs))
+        return pool
+
+    def _shard_serve_fn(self, fn, n_plain: int, n_outs: int):
+        """jit ``fn(params, pool, *plain)``, traced under shard_map when the
+        engine has a mesh. ``n_plain``: replicated operand count after
+        (params, pool); outputs are replicated except the LAST, the pool.
+        The pool is donated either way — under the mesh its sharded buffers
+        alias in place per device."""
+        if self.mesh is None:
+            return jax.jit(fn, donate_argnums=(1,))
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed import shard_map
+
+        sm = shard_map(fn, mesh=self.mesh,
+                       in_specs=(self._param_specs, self._pool_specs)
+                       + tuple([P()] * n_plain),
+                       out_specs=tuple([P()] * (n_outs - 1))
+                       + (self._pool_specs,),
+                       check_vma=False)
+        return jax.jit(sm, donate_argnums=(1,))
 
     def _get_fn(self, key, build):
         """Shape-keyed compiled-fn cache, LRU-evicted: a hit refreshes the
@@ -197,6 +305,11 @@ class ServeEngine:
         """
         B, S = prompts.shape
         assert S + n_tokens <= self.max_len
+        if self.tp > 1:
+            raise NotImplementedError(
+                "generate() uses the contiguous-cache path, which is not "
+                "mesh-sharded — use session()/generate_batch() on a serve "
+                "mesh (tp=1 meshes are fine)")
         sampled = temperature > 0.0 and key is not None
         fn = self._get_fn((B, S, n_tokens, sampled),
                           lambda: self._build_fn(n_tokens, sampled))
@@ -220,8 +333,12 @@ class ServeEngine:
         masked scatter of the prompt's cache rows / SSM state into the
         lane's pages (tail page ids point at the garbage page). The pool is
         donated — admission writes in place. One compile serves every
-        prompt length in the bucket."""
-        cfg = self.cfg
+        prompt length in the bucket.
+
+        Mesh mode: traced under shard_map (``_shard_serve_fn``) — the body
+        sees head-local params and pool slices, and the commit scatter
+        writes each shard's own KVp slice of the request's pages."""
+        cfg = self._serve_cfg
 
         def fn(params, pool, prompt, length, page_ids, lane):
             logits, pcache = lm_prefill(cfg, params,
@@ -231,7 +348,7 @@ class ServeEngine:
                                   page_ids, page_size, length=length)
             return logits, pool
 
-        return jax.jit(fn, donate_argnums=(1,))
+        return self._shard_serve_fn(fn, n_plain=4, n_outs=2)
 
     def _build_batch_segment(self, segment: int, sampled: bool):
         """jitted fused scan of ``segment`` decode steps over the full lane
@@ -244,8 +361,14 @@ class ServeEngine:
         samples...] stream so greedy outputs stay token-identical.
         Sampling state rides per lane: each lane folds its own per-request
         step into its own per-request key (SamplingParams threaded through
-        the lanes by the session)."""
-        cfg = self.cfg
+        the lanes by the session).
+
+        Mesh mode: the whole segment scan runs under shard_map — every
+        device decodes ITS head slice of every lane against its local page
+        pool (O(tokens-attended)/tp pool bytes per device per step), the
+        o-projection psums, and sampling runs replicated on identical
+        logits, so every shard carries the same token stream."""
+        cfg = self._serve_cfg
 
         def fn(params, pool, block_table, pos, tok, steps, temps, keys):
             def step(carry, _):
@@ -262,7 +385,7 @@ class ServeEngine:
                 step, (tok, pool, pos, steps), None, length=segment)
             return toks, tok, pool
 
-        return jax.jit(fn, donate_argnums=(1,))
+        return self._shard_serve_fn(fn, n_plain=6, n_outs=3)
 
     def _role_ids(self, mixer_is_mamba: bool):
         return [i for i, r in enumerate(block_roles(self.cfg))
@@ -358,6 +481,11 @@ class ServeEngine:
         ``**robustness`` forwards the overload/fault knobs (``max_pending``,
         ``tenant_page_quota``, ``tenant_lane_quota``, ``faults``,
         ``audit``, ``clock`` — see ServeSession)."""
+        use_pfx = self.prefix_cache if prefix_cache is None else prefix_cache
+        if use_pfx and self.mesh is not None:
+            raise NotImplementedError(
+                "prefix_cache under a serve mesh is not implemented "
+                "(ROADMAP follow-up)")
         return ServeSession(self, lanes=lanes, page_size=page_size,
                             n_pages=n_pages, segment=segment, key=key,
                             buckets=buckets, prefix_cache=prefix_cache,
@@ -421,6 +549,10 @@ class ServeEngine:
         the tokens/sec trajectory (benchmarks)."""
         B, S = prompts.shape
         assert S + n_tokens <= self.max_len
+        if self.tp > 1:
+            raise NotImplementedError(
+                "generate_eager() uses the contiguous-cache path, which is "
+                "not mesh-sharded — use session()/generate_batch()")
         cache, _ = cache_init(self.cfg, B, self.max_len)
         logits, cache = self._prefill(self.params,
                                       self._inputs(self.params, prompts),

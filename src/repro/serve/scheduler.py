@@ -65,6 +65,15 @@ FAILED above) that ``RequestHandle.status`` surfaces.
 
 No jax here: the device-side mirror (block table, positions, current
 tokens, lane keys) lives in ``ServeSession``, which drives this object.
+
+Under a serve mesh (ServeEngine ``mesh=``) this same host core is the
+MESH-WIDE scheduler: tensor-parallel serving shards heads, not lanes, so
+one lane spans every device (each holding its head-local page slice) and
+physical page ids are symmetric across shards — one ``PageAllocator``
+placement IS every shard's placement (``ServeSession.placement``). All
+admission/quota/priority/deadline semantics above are therefore
+placement-invariant by construction; tests/test_mesh_serve.py pins them
+on multi-device meshes.
 """
 from __future__ import annotations
 

@@ -65,7 +65,7 @@ from repro.models import block_roles
 from repro.models.attention import paged_kernel_enabled, paged_kernel_override
 
 from .faults import FaultInjector, InjectedFault, corrupt_prefix_index
-from .paged_cache import paged_pool_init, pages_for
+from .paged_cache import pages_for
 from .prefix_cache import PrefixCache
 from .sampling import logits_all_finite, sample_tokens
 from .scheduler import (TERMINAL, Request, RequestStatus, SamplingParams,
@@ -416,8 +416,23 @@ class ServeSession:
         if self._pool is None:
             self._pool = self.engine._caches.take(self._pool_key)
             if self._pool is None:
-                self._pool = paged_pool_init(self.cfg, self.lanes,
-                                             self.n_pages, self.page_size)
+                # engine hook: mesh engines device_put the fresh pool with
+                # its attention leaves sharded on the KVp axis
+                self._pool = self.engine.init_pool(self.lanes, self.n_pages,
+                                                   self.page_size)
+
+    def placement(self):
+        """Lane→shard placement under the mesh-wide scheduler.
+
+        Tensor-parallel serving places every lane on ONE shard group
+        spanning the whole ("model",) mesh: each device holds that lane's
+        head-local page slice, so the host scheduler core makes every
+        admission/quota/priority/deadline decision once, mesh-wide —
+        PR 6 semantics are placement-invariant (pinned by the multidevice
+        suite). Returns {lane: shard_group}; all lanes map to group 0
+        until data-parallel replica routing adds more groups (ROADMAP).
+        """
+        return {lane: 0 for lane in range(self.lanes)}
 
     def _take_pool(self):
         """Detach the pool before a donating dispatch: donation invalidates
