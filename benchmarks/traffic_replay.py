@@ -1,0 +1,477 @@
+"""Deterministic traffic-replay load harness for the serving gateway.
+
+Open-loop load generation: a seeded RNG expands a workload spec into a
+fixed ARRIVAL SCHEDULE — bursty on/off arrival phases (requests inside a
+burst land back-to-back or a few ms apart; bursts separated by idle
+gaps), mixed prompt lengths, a tenant/priority mix, and a configurable
+fraction of requests sharing one long system prompt (the traffic shape
+the prefix cache exists for). Open-loop means arrivals NEVER wait for
+completions — overload is applied, not negotiated, so admission control
+actually gets exercised (a closed loop self-throttles and never sheds).
+
+The same schedule can drive two transports:
+
+  * ``inproc`` — ``Gateway.submit()`` directly (no sockets): per-request
+    waiter threads poll the handle for first-token / terminal times;
+  * ``http``   — a live gateway over real HTTP/1.1: each request POSTs
+    /v1/generate and consumes the SSE stream incrementally, stamping
+    every token event client-side. ``--url`` points at an external
+    server; otherwise the harness self-hosts one on an ephemeral port.
+
+Identical seeds → identical schedules, so the two transports (and CI
+reruns) serve the same requests. Greedy streams are scheduling-invariant
+(the session parity suite pins live traffic == sequential ``generate``),
+which gives the harness a per-request ORACLE: every request that runs to
+completion must stream exactly ``engine.generate(prompt, gen)`` — over
+SSE and in-process alike. That is the identity gate CI runs.
+
+Reports p50/p99 TTFT, per-token inter-token latency, outcome and
+shed-reason counts, and writes ``BENCH_serve.json`` at the repo root
+(next to ``BENCH_kernels.json``) for the CI artifact trail. With
+``REPRO_BENCH_SMOKE=1`` the report turns into hard gates: token identity
+on every completed stream, the oversubscribed burst must actually shed,
+survivors must finish, and p99 TTFT must land inside a (generous,
+env-overridable ``REPRO_REPLAY_TTFT_MS``) envelope.
+
+Usage:
+    python benchmarks/traffic_replay.py                  # in-process
+    python benchmarks/traffic_replay.py --mode http      # self-hosted HTTP
+    python benchmarks/traffic_replay.py --mode both      # both + compare
+    python benchmarks/traffic_replay.py --url http://h:p # external server
+"""
+from __future__ import annotations
+
+import argparse
+import http.client
+import json
+import os
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+#: smoke p99-TTFT envelope (ms). Generous: CI containers are shared and
+#: the gate exists to catch order-of-magnitude regressions (a lost
+#: emission-at-admission path, an accidental sync per token), not jitter.
+TTFT_ENVELOPE_MS = float(os.environ.get("REPRO_REPLAY_TTFT_MS", "2000"))
+
+
+# ---------------------------------------------------------------------------
+# workload spec → deterministic schedule
+# ---------------------------------------------------------------------------
+class Spec:
+    """Workload shape. Defaults describe the smoke mix CI replays; the
+    full mix just scales counts/lengths up."""
+
+    def __init__(self, seed=0):
+        self.seed = seed
+        self.bursts = 3                  # on/off arrival phases
+        self.burst_n = 8                 # requests per burst
+        self.intra_gap_ms = 1.0          # mean in-burst inter-arrival
+        self.off_gap_ms = 150.0          # idle gap between bursts
+        self.tail_lens = (2, 6)          # unique-suffix lengths
+        self.sys_len = 6                 # shared system prompt length
+        self.shared_frac = 0.5           # fraction riding the system prompt
+        self.gens = (4, 8)               # token budgets
+        self.tenants = ("acme", "bulk")  # tenant mix (uniform)
+        self.hi_pri_frac = 0.25          # priority-1 fraction
+        self.deadline_frac = 0.25        # fraction carrying a deadline
+        self.deadline_ms = 30_000.0      # generous: should NOT expire
+        # gateway shape: deliberately oversubscribed vs burst_n so the
+        # burst's tail sheds queue-full at admission (the envelope gate)
+        self.lanes = 2
+        self.page_size = 4
+        self.max_pending = 2
+        self.segment = 2
+
+
+def build_schedule(spec, vocab):
+    """→ list of request dicts with absolute ``at`` seconds offsets.
+    Everything — arrival times included — comes from the seeded RNG, so a
+    seed IS a replayable trace."""
+    rng = np.random.default_rng(spec.seed)
+    sys_prompt = rng.integers(0, vocab, (spec.sys_len,)).astype(np.int32)
+    sched, t = [], 0.0
+    for b in range(spec.bursts):
+        if b:
+            t += spec.off_gap_ms / 1e3
+        for _ in range(spec.burst_n):
+            t += float(rng.exponential(spec.intra_gap_ms / 1e3))
+            tail = rng.integers(
+                0, vocab,
+                (int(rng.choice(spec.tail_lens)),)).astype(np.int32)
+            shared = bool(rng.random() < spec.shared_frac)
+            prompt = np.concatenate([sys_prompt, tail]) if shared else tail
+            r = {"at": t, "prompt": prompt.tolist(),
+                 "max_tokens": int(rng.choice(spec.gens)),
+                 "tenant": str(rng.choice(spec.tenants)),
+                 "priority": int(rng.random() < spec.hi_pri_frac),
+                 "shared": shared}
+            if rng.random() < spec.deadline_frac:
+                r["deadline_ms"] = spec.deadline_ms
+            sched.append(r)
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# transports: one record per request, identical shape either way
+# ---------------------------------------------------------------------------
+def _record(idx, outcome, tokens, ttft, token_times, reason=None,
+            preempted=0):
+    itl = [b - a for a, b in zip(token_times, token_times[1:])]
+    return {"idx": idx, "outcome": outcome, "tokens": tokens,
+            "ttft_s": ttft, "itl_s": itl, "reason": reason,
+            "preempted": preempted}
+
+
+def _params_of(r):
+    from repro.serve import SamplingParams
+    kw = {k: r[k] for k in ("max_tokens", "tenant", "priority")}
+    if "deadline_ms" in r:
+        kw["deadline_ms"] = r["deadline_ms"]
+    return SamplingParams(**kw)
+
+
+def replay_inproc(gateway, schedule):
+    """Open-loop replay straight into ``Gateway.submit`` — no sockets, so
+    this is the latency floor the HTTP numbers are read against."""
+    from repro.serve import TERMINAL, ShedError
+
+    records = [None] * len(schedule)
+    threads = []
+    t0 = time.monotonic()
+
+    def waiter(idx, handle, t_submit):
+        seen, ttft, times = 0, None, []
+        while True:
+            st = handle.status             # status BEFORE tokens (same
+            n = handle.tokens_ready        # ordering the SSE writer uses)
+            if n > seen:
+                now = time.monotonic()
+                if ttft is None:
+                    ttft = now - t_submit
+                times.extend([now] * (n - seen))
+                seen = n
+            if st in TERMINAL:
+                records[idx] = _record(
+                    idx, st.value, handle.tokens_so_far(), ttft, times,
+                    reason=handle.error, preempted=handle.preemptions)
+                return
+            time.sleep(0.0005)
+
+    for idx, r in enumerate(schedule):
+        lag = t0 + r["at"] - time.monotonic()
+        if lag > 0:
+            time.sleep(lag)
+        t_submit = time.monotonic()
+        try:
+            h = gateway.submit(np.asarray(r["prompt"], np.int32),
+                               _params_of(r))
+        except ShedError as e:
+            records[idx] = _record(idx, "shed", [], None, [],
+                                   reason=e.reason)
+            continue
+        th = threading.Thread(target=waiter, args=(idx, h, t_submit),
+                              daemon=True)
+        th.start()
+        threads.append(th)
+    for th in threads:
+        th.join(timeout=120)
+    return records, time.monotonic() - t0
+
+
+def _sse_worker(host, port, idx, r, records):
+    """POST one request and consume its SSE stream incrementally,
+    stamping each token event as it crosses the socket."""
+    t_submit = time.monotonic()
+    conn = http.client.HTTPConnection(host, port, timeout=120)
+    try:
+        body = {k: r[k] for k in ("prompt", "max_tokens", "tenant",
+                                  "priority")}
+        if "deadline_ms" in r:
+            body["deadline_ms"] = r["deadline_ms"]
+        conn.request("POST", "/v1/generate", json.dumps(body),
+                     {"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        if resp.status != 200:
+            err = json.loads(resp.read().decode())
+            records[idx] = _record(idx, f"http-{resp.status}", [], None, [],
+                                   reason=err.get("error"))
+            return
+        toks, times, ttft, event = [], [], None, None
+        for raw in resp.fp:                # incremental SSE parse
+            line = raw.decode().rstrip("\n")
+            if line.startswith("event: "):
+                event = line[7:]
+            elif line.startswith("data: "):
+                if event == "token":
+                    now = time.monotonic()
+                    if ttft is None:
+                        ttft = now - t_submit
+                    toks.append(int(line[6:]))
+                    times.append(now)
+                else:                      # terminal: end | error
+                    payload = json.loads(line[6:])
+                    records[idx] = _record(
+                        idx, payload["status"], toks, ttft, times,
+                        reason=payload.get("reason"),
+                        preempted=payload.get("preempted", 0))
+                    return
+        records[idx] = _record(idx, "truncated", toks, ttft, times)
+    except OSError as e:
+        records[idx] = _record(idx, "conn-error", [], None, [],
+                               reason=str(e))
+    finally:
+        conn.close()
+
+
+def replay_http(host, port, schedule):
+    records = [None] * len(schedule)
+    threads = []
+    t0 = time.monotonic()
+    for idx, r in enumerate(schedule):
+        lag = t0 + r["at"] - time.monotonic()
+        if lag > 0:
+            time.sleep(lag)
+        th = threading.Thread(target=_sse_worker,
+                              args=(host, port, idx, r, records),
+                              daemon=True)
+        th.start()
+        threads.append(th)
+    for th in threads:
+        th.join(timeout=120)
+    return records, time.monotonic() - t0
+
+
+# ---------------------------------------------------------------------------
+# reduction + gates
+# ---------------------------------------------------------------------------
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if xs else None
+
+
+def summarize(mode, records, wall_s):
+    outcomes, reasons = {}, {}
+    ttfts, itls, tokens = [], [], 0
+    for rec in records:
+        if rec is None:
+            rec = {"outcome": "lost", "ttft_s": None, "itl_s": [],
+                   "tokens": [], "reason": None}
+        outcomes[rec["outcome"]] = outcomes.get(rec["outcome"], 0) + 1
+        if rec["reason"]:
+            reasons[rec["reason"]] = reasons.get(rec["reason"], 0) + 1
+        if rec["ttft_s"] is not None:
+            ttfts.append(rec["ttft_s"])
+        itls.extend(rec["itl_s"])
+        tokens += len(rec["tokens"])
+    shed = sum(n for o, n in outcomes.items()
+               if o in ("shed", "http-429", "http-503"))
+    return {
+        "mode": mode, "requests": len(records), "wall_s": wall_s,
+        "outcomes": outcomes, "reasons": reasons,
+        "done": outcomes.get("done", 0), "shed": shed,
+        "expired": outcomes.get("expired", 0),
+        "tokens_streamed": tokens,
+        "ttft_ms": {"p50": _pct(ttfts, 50), "p99": _pct(ttfts, 99),
+                    "max": max(ttfts) if ttfts else None},
+        "itl_ms": {"p50": _pct(itls, 50), "p99": _pct(itls, 99)},
+    }
+
+
+def _scale_ms(d):
+    return {k: (v * 1e3 if v is not None else None) for k, v in d.items()}
+
+
+def check_identity(engine, schedule, records):
+    """Every completed, never-preempted stream must equal the sequential
+    oracle for its (prompt, budget) — transport-independence of greedy
+    serving. Preempted streams are excluded by contract: eviction resumes
+    by recompute, which is oracle-consistent for the effective prompt but
+    not bit-equal to the uninterrupted stream (bf16 reduction-order ulps
+    amplified by sign()). Oracles are memoized per unique prompt so the
+    shared-system-prompt fraction keeps this affordable.
+
+    → (mismatches, n_checked, n_skipped_preempted)
+    """
+    import jax.numpy as jnp
+    cache = {}
+    mismatches, checked, skipped = [], 0, 0
+    for rec in records:
+        if rec is None or rec["outcome"] != "done":
+            continue
+        if rec.get("preempted", 0):
+            skipped += 1
+            continue
+        checked += 1
+        r = schedule[rec["idx"]]
+        key = (tuple(r["prompt"]), r["max_tokens"])
+        if key not in cache:
+            cache[key] = np.asarray(engine.generate(
+                jnp.asarray(np.asarray(r["prompt"], np.int32)[None]),
+                r["max_tokens"])[0]).tolist()
+        if rec["tokens"] != cache[key]:
+            mismatches.append((rec["idx"], rec["tokens"], cache[key]))
+    return mismatches, checked, skipped
+
+
+def _gateway(engine, spec):
+    from repro.gateway import Gateway
+    return Gateway(engine, lanes=spec.lanes, page_size=spec.page_size,
+                   max_pending=spec.max_pending, segment=spec.segment,
+                   prefix_cache=True)
+
+
+def _warm(engine, spec, schedule):
+    """Compile every graph the measured replay will hit OUTSIDE the
+    measured window — the harness gates serving latency, not XLA compile
+    time. One request per distinct prompt length is NOT enough: the
+    prefix-hit admission paths (pfx_prefill keyed by bucket AND
+    pages-per-bucket, hit_admit) only compile when a hit actually
+    admits, so we replay the real schedule once. The warm gateway lifts
+    the pending cap so nothing sheds and every bucket/hit combination
+    gets compiled; lane count and page size stay identical so graph
+    shapes match the measured run."""
+    from repro.gateway import Gateway
+    gw = Gateway(engine, lanes=spec.lanes, page_size=spec.page_size,
+                 max_pending=len(schedule), segment=spec.segment,
+                 prefix_cache=True)
+    try:
+        flat = [dict(r, at=0.0) for r in schedule]
+        replay_inproc(gw, flat)
+    finally:
+        gw.close()
+
+
+def run(args):
+    import jax
+
+    from repro.configs import get_smoke
+    from repro.models import lm_init
+    from repro.serve import ServeEngine
+
+    spec = Spec(seed=args.seed)
+    if not SMOKE:
+        spec.bursts, spec.burst_n = 4, 12
+        spec.tail_lens, spec.gens = (2, 6, 10), (8, 16)
+        spec.sys_len = 10
+    cfg = get_smoke("gemma2-2b").scaled(n_layers=2)
+    params, _ = lm_init(jax.random.PRNGKey(0), cfg)
+    max_len = spec.sys_len + max(spec.tail_lens) + max(spec.gens)
+    engine = ServeEngine(cfg, params, max_len=max(32, max_len))
+    schedule = build_schedule(spec, cfg.vocab_size)
+    _warm(engine, spec, schedule)
+
+    summaries, all_records = [], {}
+    if args.url:
+        host, port = args.url.split("//")[-1].split(":")
+        records, wall = replay_http(host, int(port), schedule)
+        summaries.append(summarize("http-external", records, wall))
+        all_records["http"] = records
+    else:
+        modes = {"both": ("inproc", "http"), "inproc": ("inproc",),
+                 "http": ("http",)}[args.mode]
+        for mode in modes:
+            gw = _gateway(engine, spec)
+            try:
+                if mode == "inproc":
+                    records, wall = replay_inproc(gw, schedule)
+                else:
+                    from repro.gateway import GatewayHTTP
+                    srv = GatewayHTTP(gw)
+                    host, port = srv.start_background()
+                    try:
+                        records, wall = replay_http(host, port, schedule)
+                    finally:
+                        srv.stop()
+                summaries.append(summarize(mode, records, wall))
+                all_records[mode] = records
+            finally:
+                gw.close()
+
+    mismatches, n_checked, n_skipped = [], 0, 0
+    for mode, records in all_records.items():
+        mm, chk, skip = check_identity(engine, schedule, records)
+        mismatches += mm
+        n_checked += chk
+        n_skipped += skip
+
+    out = {"spec": {k: v for k, v in vars(spec).items()},
+           "smoke": SMOKE, "runs": summaries,
+           "identity_checked": n_checked,
+           "identity_skipped_preempted": n_skipped,
+           "identity_mismatches": len(mismatches)}
+    for s in summaries:
+        s["ttft_ms"] = _scale_ms(s["ttft_ms"])
+        s["itl_ms"] = _scale_ms(s["itl_ms"])
+    path = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+    path.write_text(json.dumps(out, indent=1))
+
+    rows = []
+    for s in summaries:
+        m = s["mode"]
+        rows.append((f"serve/{m}_ttft_p50", f"{s['ttft_ms']['p50']:.1f}ms",
+                     f"p99={s['ttft_ms']['p99']:.1f}ms"))
+        itl50 = s["itl_ms"]["p50"]
+        rows.append((f"serve/{m}_itl_p50",
+                     f"{itl50:.2f}ms" if itl50 is not None else "n/a",
+                     f"{s['tokens_streamed']}tok/{s['wall_s']:.2f}s"))
+        rows.append((f"serve/{m}_outcomes", f"{s['done']}done",
+                     f"{s['shed']}shed_{s['expired']}expired_of_"
+                     f"{s['requests']}"))
+    rows.append(("serve/identity", f"{len(mismatches)}",
+                 f"mismatches_of_{n_checked}checked_"
+                 f"{n_skipped}preempted_skipped"))
+    rows.append(("serve/bench_json", "0", str(path.name)))
+
+    # -- smoke gates ---------------------------------------------------------
+    if SMOKE:
+        if mismatches:
+            i, got, want = mismatches[0]
+            raise SystemExit(
+                f"identity gate FAILED: {len(mismatches)} completed "
+                f"streams diverged from the sequential oracle (first: "
+                f"request {i} got {got} want {want}) — the transport must "
+                f"be byte-transparent for greedy traffic")
+        if n_checked < 1:
+            raise SystemExit(
+                "identity gate FAILED: no never-preempted completed "
+                "stream to check — the gate would be vacuous")
+        for s in summaries:
+            if s["shed"] < 1:
+                raise SystemExit(
+                    f"shed-envelope gate FAILED ({s['mode']}): the "
+                    f"oversubscribed burst (burst={spec.burst_n} vs lanes="
+                    f"{spec.lanes}+queue={spec.max_pending}) shed nothing "
+                    f"— admission control is not engaging under overload")
+            if s["done"] < 1:
+                raise SystemExit(
+                    f"survivor gate FAILED ({s['mode']}): no request "
+                    f"completed — overload must degrade, not collapse")
+            if s["done"] + s["shed"] + s["expired"] \
+                    + s["outcomes"].get("failed", 0) != s["requests"]:
+                raise SystemExit(
+                    f"accounting gate FAILED ({s['mode']}): outcomes "
+                    f"{s['outcomes']} do not partition {s['requests']} "
+                    f"requests — some stream was lost or truncated")
+            if s["ttft_ms"]["p99"] > TTFT_ENVELOPE_MS:
+                raise SystemExit(
+                    f"TTFT-envelope gate FAILED ({s['mode']}): p99 "
+                    f"{s['ttft_ms']['p99']:.1f}ms > {TTFT_ENVELOPE_MS}ms "
+                    f"(REPRO_REPLAY_TTFT_MS to widen on slow runners)")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--mode", choices=("inproc", "http", "both"),
+                    default="both" if SMOKE else "inproc")
+    ap.add_argument("--url", default=None,
+                    help="drive an external gateway (http://host:port) "
+                         "instead of self-hosting")
+    ap.add_argument("--seed", type=int, default=0)
+    for r in run(ap.parse_args()):
+        print(",".join(str(x) for x in r))
+    if SMOKE:
+        print("serve/smoke_gate,0,passed")

@@ -67,6 +67,16 @@ if [[ -n "${TCMALLOC}" ]]; then
 fi
 env "${BENCH_ENV[@]}" REPRO_BENCH_SMOKE=1 python benchmarks/bench_decode.py
 
+echo "== gateway + traffic-replay gate (HTTP/SSE serving) =="
+# Live asyncio HTTP server over a ServeSession: SSE token identity vs the
+# sequential oracle, typed-shed → HTTP status mapping, /metrics
+# exposition, graceful drain (tests), then the seeded open-loop replay —
+# in-process AND over HTTP — with identity / shed / accounting / p99-TTFT
+# smoke gates (REPRO_REPLAY_TTFT_MS to widen on slow runners). Writes
+# BENCH_serve.json next to BENCH_kernels.json.
+python -m pytest -q tests/test_gateway.py
+env "${BENCH_ENV[@]}" REPRO_BENCH_SMOKE=1 python benchmarks/traffic_replay.py
+
 echo "== kernel perf baseline gate (committed trajectory) =="
 # Re-run the kernel microbench in its smoke config and diff against the
 # committed min-of-N baseline (benchmarks/baselines/): geometry coverage

@@ -1,0 +1,514 @@
+"""HTTP/SSE serving gateway over the hardened admission core.
+
+A stdlib-asyncio network front door for ``ServeSession`` — no runtime
+dependencies beyond jax/numpy, because the gateway is deliberately
+TRANSPORT-THIN: every scheduling, quota, deadline, and containment
+decision already lives in serve/ (PR 6), so this layer only maps bytes to
+the session API and back. That thinness is load-bearing for correctness:
+a greedy request's SSE token stream is pinned byte-identical to the
+in-process ``RequestHandle.tokens()`` stream (tests/test_gateway.py),
+which could not hold if the gateway did any token-level work of its own.
+
+Endpoints
+---------
+``POST /v1/generate``
+    JSON body ``{"prompt": [token ids], "max_tokens": n,
+    "temperature": t, "seed": s, "stop_token": k, "deadline_ms": ms,
+    "priority": p, "tenant": "name", "stream": true}`` →
+    ``session.submit()``. The response is a Server-Sent-Events stream
+    mapping 1:1 onto the request's token stream: one ``token`` event per
+    emitted token (``data:`` is the bare token id), then exactly one
+    terminal event — ``end`` (done/cancelled) or ``error`` (expired /
+    failed / shed-after-queueing, ``data`` carrying the machine-readable
+    reason string from ``Request.fail_reason``). ``"stream": false``
+    waits and returns one JSON body instead (same terminal fields).
+
+    Typed admission rejections never start a stream: the ``ShedError``
+    reason maps through the ONE serve-wide table (serve/reasons.py) to a
+    stable status — ``queue-full``/``tenant-quota``/``deadline`` → 429
+    with ``Retry-After``, ``page-budget`` → 503 — with the reason echoed
+    in a JSON body. Malformed bodies and never-fitting capacity
+    violations (``ValueError`` from submit validation) are 400s.
+
+``GET /metrics``
+    Prometheus text (version 0.0.4): gateway HTTP/stream counters, TTFT
+    and inter-token histograms observed by the step driver, plus the
+    live serve-level counters scraped from ``ServeSession.stats()`` —
+    scheduler lifecycle, queue/lane occupancy, pool-page occupancy,
+    prefix-cache hit rates. See gateway/metrics.py for the series.
+
+``GET /healthz``
+    200 ``{"status": "ok"}`` while serving; 503 ``{"status":
+    "draining"}`` once drain begins (load balancers eject the instance).
+
+Graceful drain: SIGTERM (or ``Gateway.begin_drain()``) stops admitting —
+new ``/v1/generate`` requests get 503 ``draining`` — while in-flight
+lanes run to completion and their SSE streams finish normally; the
+process exits only when the session is idle and every stream has closed.
+
+Concurrency model
+-----------------
+jax dispatches block, so the session cannot live on the event loop: a
+dedicated STEP THREAD drives ``session.step()`` under the gateway lock
+(submits from the event-loop thread interleave between segments — a
+segment on the smoke configs is milliseconds), records TTFT/inter-token
+observations (the step driver is the only place first-token times are
+visible), and wakes the event loop via ``call_soon_threadsafe`` after
+every step so SSE writers flush new tokens with segment latency, not
+poll latency. Handle READS (``tokens_so_far``, ``status``) are
+deliberately lock-free: both are GIL-atomic snapshots, and the session
+orders ``emitted.extend`` before the terminal status write, so a writer
+that observes a terminal status has already seen every token.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import signal
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.serve import reasons
+from repro.serve.scheduler import (TERMINAL, RequestStatus, SamplingParams,
+                                   ShedError)
+
+from .metrics import GatewayMetrics
+
+#: request-body fields accepted by POST /v1/generate beyond "prompt".
+_PARAM_FIELDS = ("max_tokens", "temperature", "seed", "stop_token",
+                 "deadline_ms", "priority", "tenant")
+_MAX_BODY = 10 * 1024 * 1024
+
+
+class _Track:
+    """Per-request latency accounting owned by the step thread."""
+
+    __slots__ = ("handle", "submit_t", "seen", "last_t")
+
+    def __init__(self, handle, submit_t: float):
+        self.handle = handle
+        self.submit_t = submit_t
+        self.seen = 0
+        self.last_t = submit_t
+
+
+def parse_generate_body(body: dict) -> Tuple[np.ndarray, SamplingParams]:
+    """Validate a /v1/generate JSON body into (prompt, SamplingParams).
+    Raises ``ValueError`` with a client-facing message on any bad field —
+    the gateway maps that to a 400, never a stack trace."""
+    if not isinstance(body, dict):
+        raise ValueError("body must be a JSON object")
+    prompt = body.get("prompt")
+    if not isinstance(prompt, list) or not prompt \
+            or not all(isinstance(t, int) and t >= 0 for t in prompt):
+        raise ValueError("'prompt' must be a non-empty list of token ids")
+    unknown = set(body) - set(_PARAM_FIELDS) - {"prompt", "stream"}
+    if unknown:
+        raise ValueError(f"unknown fields: {sorted(unknown)}")
+    kw = {}
+    for f in _PARAM_FIELDS:
+        if body.get(f) is not None:
+            kw[f] = body[f]
+    try:
+        params = SamplingParams(**{
+            k: (str(v) if k == "tenant" else
+                float(v) if k in ("temperature", "deadline_ms") else int(v))
+            for k, v in kw.items()})
+    except (TypeError, ValueError) as e:
+        raise ValueError(f"bad sampling params: {e}") from None
+    return np.asarray(prompt, np.int32), params
+
+
+class Gateway:
+    """Transport-agnostic gateway core: one session, one step thread, one
+    metrics registry. The HTTP layer (``GatewayHTTP``) and the in-process
+    replay driver (benchmarks/traffic_replay.py) both sit on this."""
+
+    def __init__(self, engine, *, metrics: Optional[GatewayMetrics] = None,
+                 **session_kwargs):
+        self.session = engine.session(**session_kwargs)
+        self.metrics = metrics if metrics is not None else GatewayMetrics()
+        self.lock = threading.RLock()
+        self.draining = False
+        self._tracked: Dict[int, _Track] = {}
+        self._listeners = []
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._stepper = threading.Thread(target=self._step_loop,
+                                         name="gateway-step", daemon=True)
+        self._stepper.start()
+
+    # -- request lifecycle (called from the serving front-end) ---------------
+    def submit(self, prompt: np.ndarray, params: SamplingParams):
+        """Submit under the gateway lock; raises ``ShedError`` (typed,
+        mapped to 429/503 by the front-end) or ``ValueError`` (400).
+        Draining gateways refuse before touching the session."""
+        if self.draining:
+            raise RuntimeError("draining")
+        with self.lock:
+            try:
+                handle = self.session.submit(prompt, params)
+            except ShedError as e:
+                self.metrics.observe_shed(e.reason)
+                raise
+            self._tracked[handle.rid] = _Track(handle, time.monotonic())
+        self._wake.set()
+        return handle
+
+    def cancel(self, handle) -> bool:
+        with self.lock:
+            ok = handle.cancel()
+        self._wake.set()
+        return ok
+
+    def add_listener(self, cb) -> None:
+        """``cb()`` runs on the STEP thread after every scheduling round
+        (and once per idle wait) — front-ends bridge it onto their own
+        loop (``call_soon_threadsafe``) to wake SSE writers."""
+        self._listeners.append(cb)
+
+    def begin_drain(self) -> None:
+        """Stop admitting; in-flight lanes finish normally. Idempotent."""
+        self.draining = True
+        self._wake.set()
+
+    @property
+    def drained(self) -> bool:
+        return self.draining and self.session.idle and not self._tracked
+
+    def close(self) -> None:
+        """Stop the step thread and release the session's pool. In-flight
+        requests are cancelled (``session.close`` contract)."""
+        self._stop.set()
+        self._wake.set()
+        self._stepper.join(timeout=10.0)
+        with self.lock:
+            self.session.close()
+
+    # -- step driver ---------------------------------------------------------
+    def _step_loop(self) -> None:
+        while not self._stop.is_set():
+            with self.lock:
+                idle = self.session.idle
+                if not idle:
+                    self.session.step()
+                self._harvest()
+            for cb in self._listeners:
+                cb()
+            if idle:
+                self._wake.wait(0.05)
+                self._wake.clear()
+
+    def _harvest(self) -> None:
+        """Fold this round's progress into the latency histograms: first
+        visible token → TTFT (emission-at-admission makes this prefill
+        latency + queueing delay); later rounds → one inter-token
+        observation per new token, the round gap split evenly across the
+        round's batch (tokens inside one fused segment arrive together —
+        per-token gaps within a segment are not observable, by design)."""
+        now = time.monotonic()
+        done = []
+        for rid, t in self._tracked.items():
+            n = t.handle.tokens_ready
+            if n > t.seen:
+                if t.seen == 0:
+                    self.metrics.observe_first_token(now - t.submit_t)
+                    if n > 1:
+                        self.metrics.observe_inter_token(0.0, n - 1)
+                else:
+                    self.metrics.observe_inter_token(
+                        (now - t.last_t) / (n - t.seen), n - t.seen)
+                t.seen, t.last_t = n, now
+            if t.handle.status in TERMINAL:
+                self.metrics.observe_stream_end(t.handle.status.value)
+                done.append(rid)
+        for rid in done:
+            del self._tracked[rid]
+
+
+# --------------------------------------------------------------------------
+# the asyncio HTTP/SSE front-end
+# --------------------------------------------------------------------------
+_REASONS_4XX = {"bad-request"}
+
+
+def _http_head(code: int, ctype: str, extra: Tuple[Tuple[str, str], ...] = (),
+               clen: Optional[int] = None) -> bytes:
+    phrase = {200: "OK", 400: "Bad Request", 404: "Not Found",
+              405: "Method Not Allowed", 413: "Payload Too Large",
+              429: "Too Many Requests", 500: "Internal Server Error",
+              503: "Service Unavailable"}.get(code, "OK")
+    lines = [f"HTTP/1.1 {code} {phrase}", f"Content-Type: {ctype}",
+             "Connection: close"]
+    if clen is not None:
+        lines.append(f"Content-Length: {clen}")
+    lines += [f"{k}: {v}" for k, v in extra]
+    return ("\r\n".join(lines) + "\r\n\r\n").encode()
+
+
+def _json_response(code: int, obj: dict,
+                   extra: Tuple[Tuple[str, str], ...] = ()) -> bytes:
+    body = (json.dumps(obj) + "\n").encode()
+    return _http_head(code, "application/json", extra, len(body)) + body
+
+
+def _sse_event(event: str, data) -> bytes:
+    return f"event: {event}\ndata: {data}\n\n".encode()
+
+
+class GatewayHTTP:
+    """Bind a ``Gateway`` to a TCP port. ``serve_forever()`` blocks with
+    SIGTERM/SIGINT wired to graceful drain (the launcher path);
+    ``start_background()`` runs the loop on a daemon thread and returns
+    the bound (host, port) (tests, the traffic-replay harness)."""
+
+    def __init__(self, gateway: Gateway, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.gateway = gateway
+        self.host = host
+        self.port = port
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._tick: Optional[asyncio.Event] = None
+        self._stopped: Optional[asyncio.Event] = None
+        self._server = None
+        self._thread: Optional[threading.Thread] = None
+        self._ready = threading.Event()
+
+    # -- lifecycles ----------------------------------------------------------
+    async def _start(self) -> None:
+        self._loop = asyncio.get_running_loop()
+        self._tick = asyncio.Event()
+        self._stopped = asyncio.Event()
+        self.gateway.add_listener(self._fire_tick)
+        self._server = await asyncio.start_server(
+            self._handle_conn, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        self._ready.set()
+
+    def _fire_tick(self) -> None:
+        loop = self._loop
+        if loop is not None and not loop.is_closed():
+            try:
+                loop.call_soon_threadsafe(self._tick.set)
+            except RuntimeError:        # loop shut down mid-call
+                pass
+
+    async def _next_tick(self, timeout: float = 0.05) -> None:
+        try:
+            await asyncio.wait_for(self._tick.wait(), timeout)
+        except asyncio.TimeoutError:
+            pass
+        self._tick.clear()
+
+    async def _run(self, install_signals: bool) -> None:
+        await self._start()
+        if install_signals:
+            loop = asyncio.get_running_loop()
+            for sig in (signal.SIGTERM, signal.SIGINT):
+                try:
+                    loop.add_signal_handler(sig, self.request_drain)
+                except NotImplementedError:     # non-unix
+                    pass
+        await self._stopped.wait()
+        self._server.close()
+        await self._server.wait_closed()
+
+    def request_drain(self) -> None:
+        """Begin graceful drain and schedule shutdown once drained."""
+        self.gateway.begin_drain()
+        if self._loop is not None:
+            asyncio.run_coroutine_threadsafe(self._drain_watch(), self._loop)
+
+    async def _drain_watch(self) -> None:
+        while not self.gateway.drained:
+            await self._next_tick(0.1)
+        self._stopped.set()
+
+    def serve_forever(self) -> None:
+        asyncio.run(self._run(install_signals=True))
+
+    def start_background(self) -> Tuple[str, int]:
+        self._thread = threading.Thread(
+            target=lambda: asyncio.run(self._run(install_signals=False)),
+            name="gateway-http", daemon=True)
+        self._thread.start()
+        if not self._ready.wait(timeout=30.0):
+            raise RuntimeError("gateway HTTP server failed to start")
+        return self.host, self.port
+
+    def stop(self) -> None:
+        """Hard stop (tests): no drain — close the listener and the loop."""
+        if self._loop is not None and not self._loop.is_closed():
+            try:
+                self._loop.call_soon_threadsafe(self._stopped.set)
+            except RuntimeError:
+                pass
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+
+    # -- request handling ----------------------------------------------------
+    async def _handle_conn(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        try:
+            await self._handle_one(reader, writer)
+        except (ConnectionResetError, BrokenPipeError, asyncio.TimeoutError):
+            pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionResetError, BrokenPipeError, OSError):
+                pass
+
+    async def _handle_one(self, reader, writer) -> None:
+        req_line = await asyncio.wait_for(reader.readline(), 30.0)
+        if not req_line:
+            return
+        try:
+            method, path, _ = req_line.decode("latin1").split(" ", 2)
+        except ValueError:
+            writer.write(_json_response(400, {"error": "bad-request"}))
+            return
+        headers = {}
+        while True:
+            line = await asyncio.wait_for(reader.readline(), 30.0)
+            if line in (b"\r\n", b"\n", b""):
+                break
+            if b":" in line:
+                k, v = line.split(b":", 1)
+                headers[k.decode("latin1").strip().lower()] = \
+                    v.decode("latin1").strip()
+        path = path.split("?", 1)[0]
+        code = await self._route(method, path, headers, reader, writer)
+        self.gateway.metrics.observe_http(path, code)
+
+    async def _route(self, method, path, headers, reader, writer) -> int:
+        if path == "/healthz" and method == "GET":
+            if self.gateway.draining:
+                writer.write(_json_response(503, {"status": "draining"}))
+                return 503
+            writer.write(_json_response(200, {"status": "ok"}))
+            return 200
+        if path == "/metrics" and method == "GET":
+            text = self.gateway.metrics.render(self.gateway.session.stats())
+            body = text.encode()
+            writer.write(_http_head(
+                200, "text/plain; version=0.0.4; charset=utf-8",
+                clen=len(body)) + body)
+            return 200
+        if path == "/v1/generate":
+            if method != "POST":
+                writer.write(_json_response(405, {"error": "use POST"}))
+                return 405
+            return await self._generate(headers, reader, writer)
+        writer.write(_json_response(404, {"error": f"no route {path}"}))
+        return 404
+
+    async def _generate(self, headers, reader, writer) -> int:
+        try:
+            clen = int(headers.get("content-length", "0"))
+        except ValueError:
+            clen = -1
+        if clen <= 0 or clen > _MAX_BODY:
+            writer.write(_json_response(
+                413 if clen > _MAX_BODY else 400,
+                {"error": "body required (Content-Length)"}))
+            return 413 if clen > _MAX_BODY else 400
+        raw = await asyncio.wait_for(reader.readexactly(clen), 60.0)
+        try:
+            body = json.loads(raw)
+            prompt, params = parse_generate_body(body)
+        except (json.JSONDecodeError, ValueError) as e:
+            writer.write(_json_response(400, {"error": "bad-request",
+                                              "detail": str(e)}))
+            return 400
+        # -- admission: typed rejections map through serve/reasons.py -------
+        try:
+            handle = self.gateway.submit(prompt, params)
+        except ShedError as e:
+            code, retry = reasons.http_for_reason(e.reason)
+            extra = (("Retry-After", str(retry)),) if retry is not None else ()
+            writer.write(_json_response(
+                code, {"error": e.reason, "rid": e.rid, "detail": str(e)},
+                extra))
+            return code
+        except RuntimeError:            # draining
+            writer.write(_json_response(
+                503, {"error": "draining"}, (("Retry-After", "1"),)))
+            return 503
+        except ValueError as e:         # capacity/validation: client error
+            writer.write(_json_response(400, {"error": "bad-request",
+                                              "detail": str(e)}))
+            return 400
+        if body.get("stream") is False:
+            return await self._respond_json(handle, writer)
+        return await self._respond_sse(handle, writer)
+
+    @staticmethod
+    def _terminal_payload(handle, sent: int) -> Tuple[str, dict]:
+        """``preempted`` rides along so stream-identity consumers (the
+        traffic-replay oracle gate) can tell bit-faithful streams from
+        recompute-resumed ones without server-side state."""
+        st = handle.status
+        base = {"status": st.value, "tokens": sent,
+                "preempted": handle.preemptions}
+        if st in (RequestStatus.DONE, RequestStatus.CANCELLED):
+            return "end", base
+        return "error", dict(base, reason=handle.error)
+
+    async def _respond_sse(self, handle, writer) -> int:
+        """One SSE event per token, 1:1 with ``RequestHandle.tokens()``,
+        then exactly one terminal event. Client disconnect cancels the
+        request — its lane and pages free immediately."""
+        writer.write(_http_head(200, "text/event-stream",
+                                (("Cache-Control", "no-cache"),
+                                 ("X-Request-Id", str(handle.rid)))))
+        sent = 0
+        try:
+            while True:
+                st = handle.status          # status BEFORE tokens: a
+                toks = handle.tokens_so_far()   # terminal status implies
+                for t in toks[sent:]:           # the token list is final
+                    writer.write(_sse_event("token", int(t)))
+                    sent += 1
+                if st in TERMINAL:
+                    ev, payload = self._terminal_payload(handle, sent)
+                    writer.write(_sse_event(ev, json.dumps(payload)))
+                    await writer.drain()
+                    return 200
+                await writer.drain()
+                await self._next_tick()
+        except (ConnectionResetError, BrokenPipeError, OSError):
+            self.gateway.cancel(handle)
+            raise
+
+    async def _respond_json(self, handle, writer) -> int:
+        """Non-streaming mode: wait for the terminal status, answer once."""
+        try:
+            while handle.status not in TERMINAL:
+                await self._next_tick()
+        except (ConnectionResetError, BrokenPipeError, OSError):
+            self.gateway.cancel(handle)
+            raise
+        toks = [int(t) for t in handle.tokens_so_far()]
+        ev, payload = self._terminal_payload(handle, len(toks))
+        payload["tokens"] = toks
+        payload["event"] = ev
+        writer.write(_json_response(200, payload))
+        return 200
+
+
+def run_gateway(engine, host: str = "127.0.0.1", port: int = 8080,
+                **session_kwargs) -> None:
+    """Launcher entry: boot a gateway over ``engine`` and serve until
+    SIGTERM/SIGINT, then drain gracefully (stop admitting, finish
+    in-flight lanes, close every stream) before exiting."""
+    gw = Gateway(engine, **session_kwargs)
+    http = GatewayHTTP(gw, host=host, port=port)
+    try:
+        http.serve_forever()
+    finally:
+        gw.close()

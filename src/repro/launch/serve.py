@@ -28,6 +28,17 @@ audits; sheds print with their typed reason, audit stats at drain; arm
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --smoke \
         --stream --requests 8 --lanes 4 --gen 16 \
         --max-pending 4 --deadline-ms 5000 --audit
+
+Serving over HTTP (the gateway: POST /v1/generate streams tokens as SSE,
+GET /metrics is Prometheus text, /healthz flips to 503 at drain; SIGTERM
+drains gracefully — in-flight streams finish, new work gets 503):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --smoke \
+        --http 8080 --lanes 4 --max-pending 16 --prefix-cache
+
+    curl -N localhost:8080/v1/generate \
+        -d '{"prompt": [3, 1, 4, 1, 5], "max_tokens": 8}'
+    curl localhost:8080/metrics
 """
 from __future__ import annotations
 
@@ -79,6 +90,15 @@ def main():
                     help="(--stream) per-request deadline budget in wall "
                          "ms: unmeetable at admission sheds, passing it "
                          "mid-flight expires the request")
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve over HTTP on this port: POST /v1/generate "
+                         "(JSON body; tokens stream back as SSE), GET "
+                         "/metrics (Prometheus text), GET /healthz. "
+                         "Honors --lanes/--page-size/--segment/"
+                         "--prefix-cache/--max-pending/--audit; SIGTERM "
+                         "drains gracefully")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="(--http) bind address")
     ap.add_argument("--shards", type=int, default=0,
                     help="tensor-parallel serve mesh over N devices "
                          "(head-axis sharded weights + KV page pools, one "
@@ -117,6 +137,23 @@ def main():
                              "single-device)")
     engine = ServeEngine(cfg, params, max_len=args.prompt_len + args.gen,
                          packed=args.packed, mesh=mesh)
+
+    if args.http is not None:
+        from repro.gateway import run_gateway
+
+        print(f"[serve] gateway listening on http://{args.host}:{args.http} "
+              f"({args.lanes} lanes, page_size={args.page_size}, "
+              f"segment={args.segment}"
+              + (", prefix-cache" if args.prefix_cache else "")
+              + (f", max_pending={args.max_pending}"
+                 if args.max_pending is not None else "")
+              + ") — SIGTERM/Ctrl-C drains gracefully")
+        run_gateway(engine, host=args.host, port=args.http,
+                    lanes=args.lanes, page_size=args.page_size,
+                    segment=args.segment, prefix_cache=args.prefix_cache,
+                    max_pending=args.max_pending, audit=args.audit)
+        print("[serve] gateway drained; exiting")
+        return
 
     if args.stream or args.continuous:
         # one request-pool builder for both traffic-shaped modes

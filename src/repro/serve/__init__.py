@@ -1,3 +1,4 @@
+from . import reasons
 from .engine import ServeEngine, pack_weights
 from .faults import FaultInjector, InjectedFault, corrupt_prefix_index
 from .paged_cache import (CachePool, PageAllocator, commit_prefill,

@@ -1,0 +1,85 @@
+"""The ONE table of machine-readable failure-reason strings.
+
+Every layer that rejects, expires, or fails a request speaks the same
+vocabulary: ``ShedError.reason``, ``Request.fail_reason``, the scheduler
+stats, the gateway's HTTP status mapping, and the SSE terminal ``error``
+event all draw from the constants here, so a reason string literally
+cannot drift between layers (tests/test_overload.py pins the table and
+tests/test_gateway.py pins the HTTP mapping against it).
+
+Two shapes of reason appear in the wild:
+
+  * bare reasons — ``queue-full``, ``tenant-quota``, ``page-budget``,
+    ``deadline``: produced by admission control and the deadline sweeps;
+  * prefixed reasons — ``injected:<site>``, ``pool-lost:<exc>``,
+    ``bad-logits``: produced by fault containment, where the suffix
+    carries the forensic detail. ``base_reason`` strips the detail so
+    policy (HTTP codes, metric labels) keys on the stable prefix only.
+
+HTTP mapping policy (the gateway's contract, ISSUE 8):
+
+  * ``queue-full`` / ``tenant-quota`` → 429 Too Many Requests with a
+    ``Retry-After`` header — the condition is transient: capacity frees
+    as lanes finish, quota frees as the tenant's requests drain;
+  * ``page-budget`` → 503 Service Unavailable, NO Retry-After — this
+    pool can never fit the request; retrying verbatim is futile;
+  * ``deadline`` (unmeetable at admission) → 429 with Retry-After —
+    retry with a relaxed deadline or at lower load;
+  * anything mid-flight (EXPIRED / FAILED after tokens may have
+    streamed) is NOT an HTTP status: the stream already started, so the
+    gateway emits a terminal SSE ``error`` event carrying the reason
+    string from ``Request.fail_reason`` instead.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+# -- bare reasons (admission control + deadline sweeps) ----------------------
+QUEUE_FULL = "queue-full"        # bounded submit queue at max_pending
+TENANT_QUOTA = "tenant-quota"    # tenant over its worst-case page/lane quota
+PAGE_BUDGET = "page-budget"      # page budget can never fit this pool
+DEADLINE = "deadline"            # unmeetable at admission OR passed mid-flight
+
+# -- prefixed reasons (fault containment; detail after the colon) ------------
+INJECTED = "injected"            # injected:<site> — deterministic fault drill
+POOL_LOST = "pool-lost"          # pool-lost:<exc> — dispatch died post-donation
+BAD_LOGITS = "bad-logits"        # non-finite prefill logits under audit
+
+#: every reason the serving stack can emit, bare or as a prefix.
+ALL_REASONS = frozenset({QUEUE_FULL, TENANT_QUOTA, PAGE_BUDGET, DEADLINE,
+                         INJECTED, POOL_LOST, BAD_LOGITS})
+
+#: reasons ``ShedError`` may carry (admission-time rejections only).
+SHED_REASONS = frozenset({QUEUE_FULL, TENANT_QUOTA, PAGE_BUDGET, DEADLINE})
+
+
+def base_reason(reason: Optional[str]) -> Optional[str]:
+    """Strip the forensic detail: ``injected:page_alloc`` → ``injected``.
+    Bare reasons pass through; None stays None (normal lifecycle)."""
+    if reason is None:
+        return None
+    return reason.split(":", 1)[0]
+
+
+def format_reason(base: str, detail: str) -> str:
+    """Compose a prefixed reason — the inverse of ``base_reason``."""
+    return f"{base}:{detail}"
+
+
+# -- HTTP mapping (the gateway's admission-rejection contract) ---------------
+#: reason → (status code, Retry-After seconds or None). Only SHED_REASONS
+#: appear here: anything later than admission is an SSE error event, not a
+#: status code (the headers are long gone by then).
+HTTP_STATUS: dict = {
+    QUEUE_FULL: (429, 1),
+    TENANT_QUOTA: (429, 1),
+    PAGE_BUDGET: (503, None),
+    DEADLINE: (429, 1),
+}
+
+
+def http_for_reason(reason: str) -> Tuple[int, Optional[int]]:
+    """(status, retry_after_seconds) for an admission-time rejection.
+    Unknown reasons map to a plain 503 — fail safe, never crash the
+    gateway over a new reason string the table hasn't learned yet."""
+    return HTTP_STATUS.get(base_reason(reason), (503, None))

@@ -84,6 +84,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from . import reasons
 from .faults import InjectedFault
 from .paged_cache import PageAllocator, pages_for
 from .prefix_cache import IndexCorruption
@@ -110,7 +111,10 @@ TERMINAL = frozenset({RequestStatus.DONE, RequestStatus.CANCELLED,
 class ShedError(ValueError):
     """Typed admission rejection. Subclasses ``ValueError`` so existing
     capacity-validation callers (and their ``pytest.raises(ValueError)``
-    contracts) keep working; ``reason`` is machine-readable:
+    contracts) keep working; ``reason`` is machine-readable and drawn from
+    the ONE serve-wide table (serve/reasons.py — the same strings
+    ``Request.fail_reason`` records and the HTTP gateway maps to status
+    codes, so reasons cannot drift between layers):
 
       ``queue-full``    bounded submit queue at ``max_pending`` and no
                         lower-priority pending victim to displace
@@ -121,6 +125,7 @@ class ShedError(ValueError):
     """
 
     def __init__(self, reason: str, rid: int, msg: str):
+        assert reason in reasons.SHED_REASONS, reason
         self.reason = reason
         self.rid = rid
         super().__init__(msg)
@@ -180,6 +185,13 @@ class Request:
         self.seq = -1                 # global submit order (FCFS tiebreak)
         self.deadline: Optional[float] = None   # ABSOLUTE wall ms, or None
         self.fail_reason: Optional[str] = None  # why SHED/EXPIRED/FAILED
+        # times this request was evicted and resumed by recompute. The
+        # recompute contract makes a resumed stream oracle-consistent for
+        # its EFFECTIVE prompt, not bit-equal to the uninterrupted stream
+        # — consumers doing stream-identity checks (traffic replay's
+        # oracle gate) need to know, so the gateway surfaces this in the
+        # terminal SSE event.
+        self.preemptions = 0
         # prefix-cache state (all vacuous when the cache is disabled):
         # pages = shared_pages + private_pages in logical (block-table)
         # order; hit is the pinned lookup this admission rode; cache_extras
@@ -230,7 +242,8 @@ class Scheduler:
     def __init__(self, lanes: int, n_pages: int, page_size: int,
                  prefix_cache=None, *, max_pending: Optional[int] = None,
                  tenant_page_quota: Optional[int] = None,
-                 tenant_lane_quota: Optional[int] = None, faults=None):
+                 tenant_lane_quota: Optional[int] = None, faults=None,
+                 hit_first: bool = True):
         if lanes < 1 or n_pages < 2:
             raise ValueError("need >=1 lane and >=2 pages (page 0 is the "
                              "reserved garbage page)")
@@ -247,6 +260,14 @@ class Scheduler:
         self.max_pending = max_pending
         self.tenant_page_quota = tenant_page_quota
         self.tenant_lane_quota = tenant_lane_quota
+        # prefix-aware admission ordering (vacuous without a prefix cache):
+        # among EQUAL-priority pending requests, admit radix-index hits
+        # (exact before partial) ahead of cold misses — hits prefill less
+        # (or nothing), so serving them first lowers everyone's queueing
+        # delay without changing any stream's tokens (admission order is
+        # not an input to any request's own computation; pinned in
+        # tests/test_overload.py).
+        self.hit_first = hit_first
         self._seq = 0
         # drained by the session after every scheduling phase:
         self.freed_lanes: List[int] = []   # lanes _release'd since last drain
@@ -293,19 +314,19 @@ class Scheduler:
             n_lanes, n_pages = self._tenant_load(req.tenant)
         if self.tenant_lane_quota is not None \
                 and n_lanes + 1 > self.tenant_lane_quota:
-            self._shed(req, "tenant-quota")
+            self._shed(req, reasons.TENANT_QUOTA)
             self.stats["quota_rejections"] += 1
             raise ShedError(
-                "tenant-quota", req.rid,
+                reasons.TENANT_QUOTA, req.rid,
                 f"request {req.rid}: tenant {req.tenant!r} already has "
                 f"{n_lanes} requests in flight (lane quota "
                 f"{self.tenant_lane_quota})")
         if self.tenant_page_quota is not None \
                 and n_pages + self.pages_needed(req) > self.tenant_page_quota:
-            self._shed(req, "tenant-quota")
+            self._shed(req, reasons.TENANT_QUOTA)
             self.stats["quota_rejections"] += 1
             raise ShedError(
-                "tenant-quota", req.rid,
+                reasons.TENANT_QUOTA, req.rid,
                 f"request {req.rid}: tenant {req.tenant!r} worst-case "
                 f"footprint {n_pages}+{self.pages_needed(req)} pages "
                 f"exceeds quota {self.tenant_page_quota}")
@@ -319,14 +340,14 @@ class Scheduler:
                                                    -victim.seq)):
                     victim = r
             if victim is None:
-                self._shed(req, "queue-full")
+                self._shed(req, reasons.QUEUE_FULL)
                 raise ShedError(
-                    "queue-full", req.rid,
+                    reasons.QUEUE_FULL, req.rid,
                     f"request {req.rid}: submit queue full "
                     f"({len(self.pending)}/{self.max_pending}) and no "
                     f"lower-priority pending request to displace")
             self.pending.remove(victim)
-            self._shed(victim, "queue-full")
+            self._shed(victim, reasons.QUEUE_FULL)
             self.shed_log.append(victim)
         req.seq = self._seq
         self._seq += 1
@@ -352,9 +373,9 @@ class Scheduler:
         debuggable straight from logs."""
         need = self.pages_needed(req)
         if need > self.n_pages - 1:
-            self._shed(req, "page-budget")
+            self._shed(req, reasons.PAGE_BUDGET)
             raise ShedError(
-                "page-budget", req.rid,
+                reasons.PAGE_BUDGET, req.rid,
                 f"request {req.rid} needs {need} pages "
                 f"({len(req.prompt)}+{req.n_tokens} tokens at "
                 f"page_size={self.page_size}) but the pool only has "
@@ -363,17 +384,42 @@ class Scheduler:
         return need
 
     # -- admit / finish / evict / cancel -------------------------------------
+    def _hit_rank(self, req: Request) -> int:
+        """Prefix-index affinity class for admission ordering: 0 = exact
+        hit (zero prefill), 1 = partial hit (tail-only prefill), 2 = cold
+        miss (full prefill). Pure — ``lookup`` touches no stats or LRU
+        state (``commit_hit`` does, at actual admission), so ranking the
+        queue is free of side effects."""
+        hit = self._lookup(req.effective_prompt)
+        if hit is None:
+            return 2
+        return 0 if hit.exact else 1
+
     def _next_admissible(self) -> Request:
-        """Highest-priority pending request; FIRST in queue order within
-        the class (FCFS by submit order, and preempted requests — requeued
-        at the front — resume before their peers). All-default-priority
-        traffic reduces to ``pending[0]``: exactly the old strict
-        head-of-line behavior."""
+        """Highest-priority pending request; within the class, prefix-
+        index HITS first (exact, then partial, then cold — ``hit_first``,
+        on by default and vacuous without a prefix cache), FCFS in queue
+        order as the tiebreak (preempted requests — requeued at the front
+        — resume before their peers). Hit-first trades strict within-class
+        FCFS for lower aggregate TTFT: a hit's admission costs a fraction
+        of a cold prefill, so serving it first delays the cold head by
+        little while saving the hit a whole queue wait; a cold request is
+        still never starved by ARRIVAL order alone — only by a standing
+        supply of hits, which priority classes (the fairness mechanism)
+        override. All-default-priority cold traffic reduces to
+        ``pending[0]``: exactly the old strict head-of-line behavior."""
         best = self.pending[0]
         for r in self.pending:
             if r.priority > best.priority:
                 best = r
-        return best
+        if self.prefix_cache is None or not self.hit_first:
+            return best
+        cls = [r for r in self.pending if r.priority == best.priority]
+        if len(cls) == 1:
+            return best
+        ranked = min(range(len(cls)),
+                     key=lambda i: (self._hit_rank(cls[i]), i))
+        return cls[ranked]
 
     def _preempt_for(self, req: Request) -> bool:
         """Evict ONE strictly-lower-priority active request to make room
@@ -489,7 +535,7 @@ class Scheduler:
                     _drop()
                 self.pending.remove(head)
                 head.status = RequestStatus.FAILED
-                head.fail_reason = f"injected:{e.site}"
+                head.fail_reason = reasons.format_reason(reasons.INJECTED, e.site)
                 self.faulted.append(head)
                 self.stats["failed"] += 1
                 continue
@@ -534,6 +580,7 @@ class Scheduler:
     def evict(self, lane: int) -> Request:
         req = self._release(lane)
         req.status = RequestStatus.PREEMPTED
+        req.preemptions += 1
         self.pending.appendleft(req)     # preempted work resumes first
         self.stats["preemptions"] += 1
         return req
@@ -559,7 +606,7 @@ class Scheduler:
         for r in list(self.pending):
             if r.deadline is not None and now_ms + est_ms > r.deadline:
                 self.pending.remove(r)
-                self._shed(r, "deadline")
+                self._shed(r, reasons.DEADLINE)
                 self.shed_log.append(r)
                 out.append(r)
         return out
@@ -574,7 +621,7 @@ class Scheduler:
             if r.deadline is not None and now_ms > r.deadline:
                 self._release(lane)
                 r.status = RequestStatus.EXPIRED
-                r.fail_reason = "deadline"
+                r.fail_reason = reasons.DEADLINE
                 self.stats["expired"] += 1
                 out.append((lane, r))
         return out

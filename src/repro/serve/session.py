@@ -65,6 +65,7 @@ from repro.models import block_roles
 from repro.models.attention import paged_kernel_enabled, paged_kernel_override
 
 from .faults import FaultInjector, InjectedFault, corrupt_prefix_index
+from . import reasons
 from .paged_cache import pages_for
 from .prefix_cache import PrefixCache
 from .sampling import logits_all_finite, sample_tokens
@@ -123,6 +124,15 @@ class RequestHandle:
         (``queue-full``, ``deadline``, ``injected:page_alloc``, ...);
         None for normal lifecycles."""
         return self._req.fail_reason
+
+    @property
+    def preemptions(self) -> int:
+        """Times this request was evicted and resumed by recompute —
+        nonzero means its stream is oracle-consistent for the EFFECTIVE
+        prompt at each resume, not bit-equal to an uninterrupted run
+        (the documented recompute contract). Stream-identity consumers
+        (traffic replay) skip such requests."""
+        return self._req.preemptions
 
     def tokens(self) -> Iterator[int]:
         """Yield this request's tokens as decode segments complete.
@@ -192,7 +202,8 @@ class ServeSession:
                  tenant_page_quota: Optional[int] = None,
                  tenant_lane_quota: Optional[int] = None,
                  faults: Optional[FaultInjector] = None,
-                 audit: bool = False, clock=None):
+                 audit: bool = False, clock=None,
+                 hit_first: bool = True):
         """Overload/robustness knobs (all default off — the pre-hardening
         behavior): ``max_pending`` bounds the submit queue (overflow sheds
         with ``ShedError``), ``tenant_*_quota`` bound each tenant's
@@ -227,7 +238,7 @@ class ServeSession:
                                max_pending=max_pending,
                                tenant_page_quota=tenant_page_quota,
                                tenant_lane_quota=tenant_lane_quota,
-                               faults=self.faults)
+                               faults=self.faults, hit_first=hit_first)
         self.key = _raw_key(key) if key is not None else jax.random.PRNGKey(0)
         self.buckets = tuple(sorted(int(b) for b in buckets)) \
             if buckets else None
@@ -368,6 +379,24 @@ class ServeSession:
         out["alloc"] = self.sched.alloc.audit(holds=dict(holds))
         out["sched"] = dict(self.sched.stats)
         return out
+
+    def stats(self) -> dict:
+        """One flat host-side snapshot of every serving counter — the
+        surface the HTTP gateway's ``/metrics`` endpoint renders into
+        Prometheus text (gateway/metrics.py): scheduler lifecycle
+        counters, queue/lane occupancy, pool-page occupancy, and (when
+        enabled) the prefix-cache counters. Pure reads, no device sync."""
+        alloc = self.sched.alloc
+        return {
+            "sched": dict(self.sched.stats),
+            "pending": len(self.sched.pending),
+            "active": len(self.sched.active),
+            "lanes": self.lanes,
+            "pool": {"n_pages": alloc.n_pages, "n_free": alloc.n_free,
+                     "n_owned": alloc.n_pages - 1 - alloc.n_free},
+            "prefix": dict(self.prefix.stats)
+            if self.prefix is not None else None,
+        }
 
     @property
     def idle(self) -> bool:
@@ -582,13 +611,15 @@ class ServeSession:
             except InjectedFault as e:
                 # fired before the pool was taken (host-side poll), so the
                 # pool is intact: fail ONLY the victim, free its resources
-                self.sched.fail(req.lane, f"injected:{e.site}")
+                self.sched.fail(req.lane, reasons.format_reason(
+                    reasons.INJECTED, e.site))
                 for lane in self.sched.drain_freed_lanes():
                     self._reset_lane(lane)
                 self._handles.pop(req.rid, None)
                 continue
             if self.audit_mode and not logits_all_finite(logits[:, -1]):
-                self.sched.fail(req.lane, "non-finite prefill logits")
+                self.sched.fail(req.lane, reasons.format_reason(
+                    reasons.BAD_LOGITS, "non-finite prefill logits"))
                 for lane in self.sched.drain_freed_lanes():
                     self._reset_lane(lane)
                 self._handles.pop(req.rid, None)
@@ -658,7 +689,8 @@ class ServeSession:
         Pending requests are untouched; the session keeps serving."""
         for lane in list(self.sched.active):
             req = self.sched.fail(
-                lane, f"pool-lost:{type(exc).__name__}: {exc}")
+                lane, reasons.format_reason(
+                    reasons.POOL_LOST, f"{type(exc).__name__}: {exc}"))
             self._handles.pop(req.rid, None)
         for lane in self.sched.drain_freed_lanes():
             self._reset_lane(lane)

@@ -18,14 +18,25 @@ without compiling anything:
   * per-tenant quotas + fairness under churn: one tenant's
     cancel/resubmit storm cannot starve another tenant's queued request
     once quotas are on (deterministic arrival script);
+  * quota ACCOUNTING across the abnormal exits (cancel / expire /
+    preempt): a request's worst-case footprint returns to its tenant's
+    budget exactly once — never zero times (leak → starvation), never
+    twice (double-free → over-admission);
   * deadline shedding/expiry through scheduler methods with hand-driven
-    clocks.
+    clocks;
+  * the serve-wide reason table (serve/reasons.py): pinned wire strings,
+    the bare/prefixed split, and the HTTP status mapping the gateway
+    serves — one table, so reasons cannot drift between layers;
+  * prefix-aware hit-first admission ordering: among equal-priority
+    pending requests, index hits (exact before partial) admit ahead of
+    cold misses; priority classes still dominate, and ``hit_first=False``
+    restores strict within-class FCFS.
 """
 import numpy as np
 import pytest
 
-from repro.serve import (PageAllocator, Request, RequestStatus,
-                         SamplingParams, Scheduler, ShedError)
+from repro.serve import (PageAllocator, PrefixCache, Request, RequestStatus,
+                         SamplingParams, Scheduler, ShedError, reasons)
 from repro.serve.scheduler import TERMINAL
 
 
@@ -191,6 +202,66 @@ def test_churn_storm_cannot_starve_other_tenant():
 
 
 # ---------------------------------------------------------------------------
+# quota accounting across cancel / expire / preempt: freed exactly once
+# ---------------------------------------------------------------------------
+def test_cancel_returns_lane_quota_exactly_once():
+    s = Scheduler(lanes=2, n_pages=16, page_size=4, tenant_lane_quota=1)
+    a0 = _req(0, tenant="a")
+    s.submit(a0)
+    assert s.admit() == [a0]
+    with pytest.raises(ShedError):               # at the lane quota
+        s.submit(_req(1, tenant="a"))
+    assert s.cancel(a0) is True
+    s.submit(_req(2, tenant="a"))                # freed once → admissible
+    assert s.cancel(a0) is False                 # double cancel is a no-op...
+    with pytest.raises(ShedError):               # ...and frees nothing twice
+        s.submit(_req(3, tenant="a"))
+    assert s._tenant_load("a") == (1, 2)
+    s.alloc.audit()
+
+
+def test_expiry_returns_page_quota_and_pages_exactly_once():
+    s = Scheduler(lanes=2, n_pages=16, page_size=4, tenant_page_quota=2)
+    r = _req(0, tenant="a", deadline_ms=10.0)    # 2 pages: the whole quota
+    r.deadline = 100.0
+    s.submit(r)
+    assert s.admit() == [r]
+    with pytest.raises(ShedError) as ei:
+        s.submit(_req(1, tenant="a"))            # 2+2 > 2
+    assert ei.value.reason == "tenant-quota"
+    free_before = s.alloc.n_free
+    [(_, expired)] = s.expire(now_ms=200.0)
+    assert expired is r
+    assert s.alloc.n_free == free_before + 2     # allocator refund: once
+    assert s.expire(now_ms=300.0) == []          # no double expiry
+    assert s.alloc.n_free == free_before + 2
+    s.submit(_req(2, tenant="a"))                # quota refund: once
+    assert s._tenant_load("a") == (1, 2)
+    s.alloc.audit()
+
+
+def test_preempted_request_keeps_its_quota_reservation():
+    """Eviction moves a request lane→queue; its worst-case footprint must
+    move WITH it — still counted (a preempted request will re-admit and
+    re-reserve), but counted ONCE, not once per residence."""
+    s = Scheduler(lanes=1, n_pages=32, page_size=4, tenant_page_quota=4)
+    a0 = _req(0, tenant="a")                     # 2 pages worst case
+    s.submit(a0)
+    assert s.admit() == [a0]
+    hi = _req(1, tenant="b", priority=1)
+    s.submit(hi)
+    assert s.admit() == [hi]                     # preempts a0 → queue front
+    assert a0.status is RequestStatus.PREEMPTED
+    assert s._tenant_load("a") == (1, 2)         # counted once, from pending
+    s.submit(_req(2, tenant="a"))                # 2+2: exactly at the quota
+    with pytest.raises(ShedError):
+        s.submit(_req(3, tenant="a"))            # 6 > 4: still enforced
+    # the shed attempt must not have clipped the preempted reservation
+    assert s._tenant_load("a") == (2, 4)
+    s.alloc.audit()
+
+
+# ---------------------------------------------------------------------------
 # deadlines (hand-driven clock at the scheduler level)
 # ---------------------------------------------------------------------------
 def test_unmeetable_deadline_sheds_before_admission():
@@ -221,3 +292,129 @@ def test_mid_flight_expiry_frees_lane_and_pages():
     assert list(s.free_lanes) == [0]             # lane back too
     assert s.drain_freed_lanes() == [0]
     s.alloc.audit()
+
+
+# ---------------------------------------------------------------------------
+# the serve-wide reason table (serve/reasons.py)
+# ---------------------------------------------------------------------------
+def test_reason_table_wire_strings_are_pinned():
+    """These strings are wire format: logs, SSE error events, and HTTP
+    clients key on them. Changing a value is a breaking API change —
+    this test is the tripwire."""
+    assert reasons.QUEUE_FULL == "queue-full"
+    assert reasons.TENANT_QUOTA == "tenant-quota"
+    assert reasons.PAGE_BUDGET == "page-budget"
+    assert reasons.DEADLINE == "deadline"
+    assert reasons.INJECTED == "injected"
+    assert reasons.POOL_LOST == "pool-lost"
+    assert reasons.BAD_LOGITS == "bad-logits"
+    assert reasons.SHED_REASONS == {"queue-full", "tenant-quota",
+                                    "page-budget", "deadline"}
+    assert reasons.SHED_REASONS <= reasons.ALL_REASONS
+    # prefixed composition round-trips, preserving colons in the detail
+    composed = reasons.format_reason(reasons.POOL_LOST, "RuntimeError: x:y")
+    assert composed == "pool-lost:RuntimeError: x:y"
+    assert reasons.base_reason(composed) == "pool-lost"
+    assert reasons.base_reason("injected:page_alloc") == "injected"
+    assert reasons.base_reason("deadline") == "deadline"
+    assert reasons.base_reason(None) is None
+
+
+def test_reason_table_http_mapping():
+    """The gateway's rejection contract: transient sheds are 429 with a
+    Retry-After hint, never-fitting requests are 503 without one, and an
+    unknown reason fails safe (503) instead of crashing the gateway."""
+    assert reasons.http_for_reason("queue-full") == (429, 1)
+    assert reasons.http_for_reason("tenant-quota") == (429, 1)
+    assert reasons.http_for_reason("deadline") == (429, 1)
+    assert reasons.http_for_reason("page-budget") == (503, None)
+    assert reasons.http_for_reason("some-future-reason") == (503, None)
+    assert set(reasons.HTTP_STATUS) == reasons.SHED_REASONS
+
+
+def test_shed_error_only_speaks_table_reasons():
+    """A typo'd reason cannot mint a new wire string: ShedError rejects
+    anything outside SHED_REASONS, and every scheduler-produced reason is
+    drawn from the table (pinned by the policy tests above)."""
+    with pytest.raises(AssertionError):
+        ShedError("qeue-full", 0, "typo")
+    e = ShedError(reasons.QUEUE_FULL, 3, "ok")
+    assert e.reason == "queue-full" and e.rid == 3
+
+
+# ---------------------------------------------------------------------------
+# prefix-aware hit-first admission ordering (host-only, seeded index)
+# ---------------------------------------------------------------------------
+def _seeded_sched(**kw):
+    """Scheduler + radix index pre-seeded with the pages of one finished
+    request (prompt = arange(8)) — the host-level stand-in for a warm
+    serving cache (device payloads are opaque objects, as in
+    tests/test_prefix_cache.py)."""
+    cache = PrefixCache(4)
+    s = Scheduler(lanes=1, n_pages=32, page_size=4, prefix_cache=cache, **kw)
+    seed = _req(0, S=8, n=2)
+    s.submit(seed)
+    assert s.admit() == [seed]
+    seed.cache_extras = {"tokens": np.asarray(seed.effective_prompt,
+                                              np.int32),
+                         "offset": 0, "logits": object(), "end_ssm": {},
+                         "snaps": {}}
+    s.finish(seed.lane)
+    return s, cache
+
+
+def test_hit_first_admits_index_hits_before_cold_misses():
+    """Queue order [cold, hit] at equal priority, one lane: hit-first
+    admits the (cheap, zero-prefill) exact hit ahead of the cold head."""
+    s, _ = _seeded_sched()
+    cold = _req(1, S=6, n=2)                     # no cached prefix
+    hit = Request(2, np.arange(8, dtype=np.int32),
+                  SamplingParams(max_tokens=2))  # exact record hit
+    s.submit(cold)
+    s.submit(hit)
+    assert s.admit() == [hit]                    # jumped the cold head
+    assert cold.status is RequestStatus.QUEUED
+    s.finish(hit.lane)
+    assert s.admit() == [cold]                   # then strict FCFS resumes
+
+
+def test_hit_first_off_restores_strict_fcfs():
+    s, _ = _seeded_sched(hit_first=False)
+    cold = _req(1, S=6, n=2)
+    hit = Request(2, np.arange(8, dtype=np.int32),
+                  SamplingParams(max_tokens=2))
+    s.submit(cold)
+    s.submit(hit)
+    assert s.admit() == [cold]                   # arrival order, hit waits
+
+
+def test_priority_dominates_hit_affinity():
+    """Hit-first only reorders WITHIN a priority class: a higher-priority
+    cold request still beats a lower-priority exact hit."""
+    s, _ = _seeded_sched()
+    hit = Request(1, np.arange(8, dtype=np.int32),
+                  SamplingParams(max_tokens=2))
+    hi_cold = _req(2, S=6, n=2, priority=1)
+    s.submit(hit)
+    s.submit(hi_cold)
+    assert s.admit() == [hi_cold]
+
+
+def test_hit_rank_lookup_is_side_effect_free():
+    """Ranking the queue must not inflate stats or LRU state: lookups
+    count only when a request actually ADMITS (commit_hit), no matter how
+    many scheduling rounds ranked it while blocked."""
+    s, cache = _seeded_sched()
+    blocker = _req(1, S=6, n=2)
+    s.submit(blocker)
+    assert s.admit() == [blocker]                # takes the only lane
+    hit = Request(2, np.arange(8, dtype=np.int32),
+                  SamplingParams(max_tokens=2))
+    s.submit(hit)
+    lookups_before = cache.stats["lookups"]
+    for _ in range(5):                           # 5 blocked rounds, 5 ranks
+        assert s.admit() == []
+    assert cache.stats["lookups"] == lookups_before
+    s.finish(blocker.lane)
+    assert s.admit() == [hit]
+    assert cache.stats["lookups"] == lookups_before + 1
