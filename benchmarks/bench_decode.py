@@ -32,7 +32,14 @@ for: requests sharing a long system prompt with short unique tails
 cold, partial-hit (tail-only prefill) and exact-hit (zero prefill) TTFT;
 the smoke gate asserts cache-hit TTFT strictly beats cold TTFT.
 
-A seventh path, ``overload``, bursts a 2× oversubscribed arrival pattern
+A seventh path, ``swaptier``, serves a LONG TAIL of distinct long
+prefixes through a device pool too small to hold them all, with a host-
+RAM page budget behind it (``host_page_budget`` sessions): cold pages
+demote to pinned host buffers at LRU reclaim, revisits fault them back
+in. It reports cold-prefill vs host-resident-hit TTFT plus the demote/
+promote traffic; the smoke gate asserts the hit strictly beats cold.
+
+An eighth path, ``overload``, bursts a 2× oversubscribed arrival pattern
 into a session with a bounded submit queue (``max_pending``): the second
 half of the burst must shed at submit in O(admission) HOST time (no
 compute spent on doomed work — the smoke gate requires rejection faster
@@ -53,8 +60,10 @@ are enforced on every push, not just locally.
 """
 from __future__ import annotations
 
+import json
 import os
 import time
+from pathlib import Path
 
 import jax
 
@@ -72,12 +81,17 @@ BATCH_POOL = [(16, 24), (32, 16), (8, 32), (24, 24), (12, 16), (28, 8)]
 BATCH_LANES = 4
 # prefix caching: shared system prompt + unique tails (tokens)
 PFX_SYS, PFX_TAIL, PFX_GEN, PFX_REQS = 48, 8, 16, 6
+# swap tier: long-tail of LT_PFX DISTINCT prefixes, LT_SYS tokens each —
+# long enough that re-prefilling one clearly costs more than faulting its
+# pages back from host RAM
+LT_PFX, LT_SYS, LT_TAIL, LT_GEN = 4, 96, 8, 16
 if SMOKE:
     POINTS = [(1, 8, 32)]
     PACKED_POINTS = [(1, 8, 8)]
     BATCH_POOL = [(8, 8), (12, 6), (6, 10), (10, 8)]
     BATCH_LANES = 2
     PFX_SYS, PFX_TAIL, PFX_GEN, PFX_REQS = 24, 4, 8, 4
+    LT_PFX, LT_SYS, LT_TAIL, LT_GEN = 3, 64, 4, 8
 
 
 def _bench(fn, *args, reps: int = 3) -> float:
@@ -254,6 +268,87 @@ def run():
     rows.append((f"decode/prefix_hit_rate_r{PFX_REQS + 1}",
                  f"{hit_rate*100:.0f}", "pct_of_lookups"))
 
+    # swap tier: a LONG TAIL of distinct long prefixes over a device pool
+    # too small to hold them all. Cold pages demote to pinned host RAM at
+    # LRU reclaim instead of being freed, so a revisited prefix faults its
+    # pages back in (bit-identical) rather than re-prefilling. TTFT on a
+    # host-resident hit prices one pipelined DMA promote; TTFT cold prices
+    # the full prefill the host tier avoids. The parked index SURVIVES
+    # session close (same engine + geometry re-adopts it), so each round
+    # draws FRESH prompts — revisiting an earlier round's prompts would
+    # silently measure a hit as "cold".
+    lt_pages = -(-(LT_SYS + LT_TAIL + LT_GEN) // 8)      # pages/request
+    lt_max = LT_SYS + LT_TAIL + LT_GEN
+    lt_engine = ServeEngine(cfg, params, max_len=lt_max)
+
+    def lt_prompts_of(round_i):
+        return [np.concatenate([
+            np.asarray(jax.random.randint(
+                jax.random.PRNGKey(1000 * round_i + 70 + i), (LT_SYS,), 0,
+                cfg.vocab_size), np.int32),
+            np.asarray(jax.random.randint(
+                jax.random.PRNGKey(1000 * round_i + 80 + i), (LT_TAIL,), 0,
+                cfg.vocab_size), np.int32)])
+            for i in range(LT_PFX)]
+
+    def longtail_round(round_i):
+        # device pool: one active request + <2 prefixes of index headroom;
+        # host tier: the whole tail. Visiting LT_PFX distinct prefixes
+        # MUST demote, revisiting them MUST promote.
+        prompts = lt_prompts_of(round_i)
+        with lt_engine.session(lanes=1, page_size=8,
+                               n_pages=1 + lt_pages + lt_pages // 2,
+                               segment=4, prefix_cache=True,
+                               host_page_budget=8 * lt_pages) as sess:
+            def lt_ttft(p):
+                h = sess.submit(p, SamplingParams(max_tokens=LT_GEN))
+                t0 = time.time()
+                while h.tokens_ready == 0:
+                    sess.step()
+                ttft = time.time() - t0
+                h.result()
+                return ttft
+
+            cold = min(lt_ttft(p) for p in prompts)
+            hit = min(lt_ttft(p) for p in prompts)
+            st = dict(sess.prefix.stats)
+            st["host_resident"] = sess.prefix.host_resident_pages
+        return cold, hit, st
+
+    longtail_round(0)                   # warm the swap-path compile set
+    lt_rounds = [longtail_round(i) for i in range(1, 4)]
+    lt_cold = min(r[0] for r in lt_rounds)
+    lt_hit = min(r[1] for r in lt_rounds)
+    lt_st = lt_rounds[-1][2]            # deterministic traffic: same flow
+    rows.append((f"decode/swaptier_cold_ttft_p{LT_PFX}_s{LT_SYS}",
+                 f"{lt_cold*1e6:.0f}", "full_prefill_longtail"))
+    rows.append((f"decode/swaptier_hit_ttft_p{LT_PFX}_s{LT_SYS}",
+                 f"{lt_hit*1e6:.0f}",
+                 f"host_resident_vs_cold={lt_cold/lt_hit:.2f}x"))
+    rows.append((f"decode/swaptier_traffic_p{LT_PFX}_s{LT_SYS}",
+                 f"{lt_st['demoted_pages']}",
+                 f"demoted_{lt_st['promoted_pages']}promoted_"
+                 f"{lt_st['host_resident']}resident"))
+
+    # persist the long-tail point into BENCH_serve.json alongside the
+    # replay harness's latency summary (merge: each writer owns its keys,
+    # so the run order in check.sh / CI does not matter)
+    bench_path = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+    try:
+        blob = json.loads(bench_path.read_text())
+    except (FileNotFoundError, json.JSONDecodeError):
+        blob = {}
+    blob["swaptier"] = {
+        "smoke": SMOKE, "prefixes": LT_PFX, "sys_len": LT_SYS,
+        "tail_len": LT_TAIL, "gen": LT_GEN,
+        "cold_ttft_us": round(lt_cold * 1e6),
+        "hit_ttft_us": round(lt_hit * 1e6),
+        "hit_speedup_x": round(lt_cold / lt_hit, 2),
+        "demoted_pages": lt_st["demoted_pages"],
+        "promoted_pages": lt_st["promoted_pages"],
+        "host_resident_pages": lt_st["host_resident"]}
+    bench_path.write_text(json.dumps(blob, indent=1))
+
     # overload: burst 2x the bounded queue's capacity into a session before
     # any step runs. The first half queues; every later submit must shed
     # AT SUBMIT via ShedError — pure host bookkeeping, no compute spent on
@@ -325,6 +420,15 @@ def run():
             f"(partial {hit_t*1e6:.0f}us / exact {exact_t*1e6:.0f}us) did "
             f"not beat cold TTFT {cold_t*1e6:.0f}us — shared prompts are "
             f"not collapsing to tail-only admission")
+    if SMOKE and (lt_hit >= lt_cold or lt_st["demoted_pages"] == 0
+                  or lt_st["promoted_pages"] == 0):
+        raise SystemExit(
+            f"swap-tier gate FAILED: host-resident hit TTFT "
+            f"{lt_hit*1e6:.0f}us vs cold prefill {lt_cold*1e6:.0f}us "
+            f"({lt_st['demoted_pages']} demoted / "
+            f"{lt_st['promoted_pages']} promoted) — the long tail must "
+            f"demote under pool pressure and serve revisits from host RAM "
+            f"faster than re-prefilling them")
     if SMOKE and (n_shed != n_admit or shed_worst >= ttft * 1e6):
         raise SystemExit(
             f"overload gate FAILED: {n_shed}/{n_admit} burst requests shed, "

@@ -38,6 +38,10 @@ Usage:
     python benchmarks/traffic_replay.py --mode http      # self-hosted HTTP
     python benchmarks/traffic_replay.py --mode both      # both + compare
     python benchmarks/traffic_replay.py --url http://h:p # external server
+    python benchmarks/traffic_replay.py --trace f.jsonl  # replay a trace
+
+``--trace FILE`` replays a captured JSONL schedule verbatim instead of
+expanding the seeded spec — see ``load_trace`` for the record schema.
 """
 from __future__ import annotations
 
@@ -119,19 +123,59 @@ def build_schedule(spec, vocab):
 # transports: one record per request, identical shape either way
 # ---------------------------------------------------------------------------
 def _record(idx, outcome, tokens, ttft, token_times, reason=None,
-            preempted=0):
+            preempted=0, preempted_recompute=0):
     itl = [b - a for a, b in zip(token_times, token_times[1:])]
     return {"idx": idx, "outcome": outcome, "tokens": tokens,
             "ttft_s": ttft, "itl_s": itl, "reason": reason,
-            "preempted": preempted}
+            "preempted": preempted,
+            "preempted_recompute": preempted_recompute}
 
 
 def _params_of(r):
     from repro.serve import SamplingParams
-    kw = {k: r[k] for k in ("max_tokens", "tenant", "priority")}
+    kw = {"max_tokens": r["max_tokens"],
+          "tenant": r.get("tenant", "default"),
+          "priority": r.get("priority", 0)}
     if "deadline_ms" in r:
         kw["deadline_ms"] = r["deadline_ms"]
     return SamplingParams(**kw)
+
+
+def load_trace(path):
+    """JSONL trace loader (``--trace FILE``): one request object per
+    line, replayed verbatim instead of expanding a seeded ``Spec``.
+
+    Record schema (same dict shape ``build_schedule`` emits, so a
+    captured schedule round-trips)::
+
+        {"at": 0.012,            # REQUIRED arrival offset, seconds
+         "prompt": [3, 1, 4],    # REQUIRED token ids (ints)
+         "max_tokens": 8,        # REQUIRED decode budget
+         "tenant": "acme",       # optional, default "default"
+         "priority": 1,          # optional, default 0
+         "deadline_ms": 5000.0}  # optional, no deadline if absent
+
+    Blank lines and ``#`` comment lines are skipped. Records are sorted
+    by ``at`` (open-loop replay needs a monotonic schedule)."""
+    sched = []
+    with open(path) as f:
+        for n, line in enumerate(f, 1):
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            r = json.loads(line)
+            for field, typ in (("at", (int, float)), ("prompt", list),
+                               ("max_tokens", int)):
+                if not isinstance(r.get(field), typ):
+                    raise SystemExit(
+                        f"{path}:{n}: trace record needs {field!r} "
+                        f"({typ if isinstance(typ, type) else typ[0]}), "
+                        f"got {r.get(field)!r}")
+            sched.append(r)
+    if not sched:
+        raise SystemExit(f"{path}: empty trace")
+    sched.sort(key=lambda r: r["at"])
+    return sched
 
 
 def replay_inproc(gateway, schedule):
@@ -157,7 +201,8 @@ def replay_inproc(gateway, schedule):
             if st in TERMINAL:
                 records[idx] = _record(
                     idx, st.value, handle.tokens_so_far(), ttft, times,
-                    reason=handle.error, preempted=handle.preemptions)
+                    reason=handle.error, preempted=handle.preemptions,
+                    preempted_recompute=handle.preempt_recompute)
                 return
             time.sleep(0.0005)
 
@@ -188,8 +233,9 @@ def _sse_worker(host, port, idx, r, records):
     t_submit = time.monotonic()
     conn = http.client.HTTPConnection(host, port, timeout=120)
     try:
-        body = {k: r[k] for k in ("prompt", "max_tokens", "tenant",
-                                  "priority")}
+        body = {"prompt": r["prompt"], "max_tokens": r["max_tokens"],
+                "tenant": r.get("tenant", "default"),
+                "priority": r.get("priority", 0)}
         if "deadline_ms" in r:
             body["deadline_ms"] = r["deadline_ms"]
         conn.request("POST", "/v1/generate", json.dumps(body),
@@ -217,7 +263,9 @@ def _sse_worker(host, port, idx, r, records):
                     records[idx] = _record(
                         idx, payload["status"], toks, ttft, times,
                         reason=payload.get("reason"),
-                        preempted=payload.get("preempted", 0))
+                        preempted=payload.get("preempted", 0),
+                        preempted_recompute=payload.get(
+                            "preempted_recompute", 0))
                     return
         records[idx] = _record(idx, "truncated", toks, ttft, times)
     except OSError as e:
@@ -285,15 +333,18 @@ def _scale_ms(d):
 
 
 def check_identity(engine, schedule, records):
-    """Every completed, never-preempted stream must equal the sequential
-    oracle for its (prompt, budget) — transport-independence of greedy
-    serving. Preempted streams are excluded by contract: eviction resumes
-    by recompute, which is oracle-consistent for the effective prompt but
-    not bit-equal to the uninterrupted stream (bf16 reduction-order ulps
-    amplified by sign()). Oracles are memoized per unique prompt so the
-    shared-system-prompt fraction keeps this affordable.
+    """Every completed stream not resumed by RECOMPUTE must equal the
+    sequential oracle for its (prompt, budget) — transport-independence
+    of greedy serving. Only recompute-resumed streams are excluded by
+    contract: re-prefilling is oracle-consistent for the effective
+    prompt but not bit-equal to the uninterrupted stream (bf16
+    reduction-order ulps amplified by sign()). SWAP-resumed streams stay
+    in the checked set — the host tier restores the exact cache bytes,
+    so preemption with a swap tier is invisible to the oracle. Oracles
+    are memoized per unique prompt so the shared-system-prompt fraction
+    keeps this affordable.
 
-    → (mismatches, n_checked, n_skipped_preempted)
+    → (mismatches, n_checked, n_skipped_recompute)
     """
     import jax.numpy as jnp
     cache = {}
@@ -301,7 +352,7 @@ def check_identity(engine, schedule, records):
     for rec in records:
         if rec is None or rec["outcome"] != "done":
             continue
-        if rec.get("preempted", 0):
+        if rec.get("preempted_recompute", 0):
             skipped += 1
             continue
         checked += 1
@@ -358,9 +409,18 @@ def run(args):
         spec.sys_len = 10
     cfg = get_smoke("gemma2-2b").scaled(n_layers=2)
     params, _ = lm_init(jax.random.PRNGKey(0), cfg)
-    max_len = spec.sys_len + max(spec.tail_lens) + max(spec.gens)
+    if args.trace:
+        schedule = load_trace(args.trace)
+        bad = [t for r in schedule for t in r["prompt"]
+               if not 0 <= int(t) < cfg.vocab_size]
+        if bad:
+            raise SystemExit(f"{args.trace}: prompt token {bad[0]} outside "
+                             f"vocab [0, {cfg.vocab_size})")
+        max_len = max(len(r["prompt"]) + r["max_tokens"] for r in schedule)
+    else:
+        schedule = build_schedule(spec, cfg.vocab_size)
+        max_len = spec.sys_len + max(spec.tail_lens) + max(spec.gens)
     engine = ServeEngine(cfg, params, max_len=max(32, max_len))
-    schedule = build_schedule(spec, cfg.vocab_size)
     _warm(engine, spec, schedule)
 
     summaries, all_records = [], {}
@@ -398,15 +458,21 @@ def run(args):
         n_skipped += skip
 
     out = {"spec": {k: v for k, v in vars(spec).items()},
-           "smoke": SMOKE, "runs": summaries,
+           "trace": args.trace, "smoke": SMOKE, "runs": summaries,
            "identity_checked": n_checked,
-           "identity_skipped_preempted": n_skipped,
+           "identity_skipped_recompute": n_skipped,
            "identity_mismatches": len(mismatches)}
     for s in summaries:
         s["ttft_ms"] = _scale_ms(s["ttft_ms"])
         s["itl_ms"] = _scale_ms(s["itl_ms"])
     path = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
-    path.write_text(json.dumps(out, indent=1))
+    try:  # merge: bench_decode owns the "swaptier" key in the same file
+        blob = json.loads(path.read_text())
+    except (FileNotFoundError, json.JSONDecodeError):
+        blob = {}
+    blob.pop("identity_skipped_preempted", None)   # pre-swap key name
+    blob.update(out)
+    path.write_text(json.dumps(blob, indent=1))
 
     rows = []
     for s in summaries:
@@ -422,7 +488,7 @@ def run(args):
                      f"{s['requests']}"))
     rows.append(("serve/identity", f"{len(mismatches)}",
                  f"mismatches_of_{n_checked}checked_"
-                 f"{n_skipped}preempted_skipped"))
+                 f"{n_skipped}recompute_skipped"))
     rows.append(("serve/bench_json", "0", str(path.name)))
 
     # -- smoke gates ---------------------------------------------------------
@@ -471,6 +537,10 @@ if __name__ == "__main__":
                     help="drive an external gateway (http://host:port) "
                          "instead of self-hosting")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="replay a JSONL trace (one request per line: "
+                         "at/prompt/max_tokens + optional tenant/priority/"
+                         "deadline_ms) instead of the seeded spec")
     for r in run(ap.parse_args()):
         print(",".join(str(x) for x in r))
     if SMOKE:

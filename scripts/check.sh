@@ -44,6 +44,13 @@ echo "== fault-injection + overload-control gate =="
 python -m pytest -q -m faultinject tests/test_serve_faults.py
 python -m pytest -q tests/test_overload.py
 
+echo "== tiered-KV swap gate (host page tier) =="
+# HBM<->host page-swap subsystem: byte-identity round-trips across the
+# model-family matrix, preempt->swap->resume BIT-exactness (vs the
+# recompute fallback's documented drift), host-resident prefix hits,
+# two-tier admission, fault containment, randomized churn audits.
+python -m pytest -q -m swap
+
 echo "== mesh-serving parity gate (multi-device) =="
 # Tensor-parallel serving on a forced-multi-device CPU mesh: 1-device
 # mesh bitwise parity, N-device greedy-token identity across all model

@@ -127,42 +127,77 @@ def _labelled_counter(name: str, help_: str, series: Dict[tuple, int],
 
 class GatewayMetrics:
     """All gateway-owned series + the render that folds the live session
-    counters in. One instance per gateway; thread-safe."""
+    counters in. One instance per gateway; thread-safe.
 
-    def __init__(self):
+    Per-tenant labelling is CARDINALITY-BOUNDED: the first ``max_tenants``
+    distinct tenant names get their own label value; every later tenant
+    aggregates under ``tenant="other"`` — an adversarial (or buggy)
+    client minting fresh tenant names per request cannot grow the
+    exposition without bound. The unlabelled aggregate series are
+    unchanged; tenants add ``gateway_ttft_by_tenant_seconds`` and
+    ``gateway_shed_by_tenant_total``."""
+
+    def __init__(self, max_tenants: int = 8):
         self._lock = threading.Lock()
+        self.max_tenants = int(max_tenants)
+        self._tenants: set = set()                  # names with own label
         self.http_requests: Counter = Counter()     # (path, code) -> n
         self.shed: Counter = Counter()              # (reason,) -> n
+        self.shed_tenant: Counter = Counter()       # (reason, tenant) -> n
         self.streams: Counter = Counter()           # (outcome,) -> n
         self.tokens_streamed = 0
         self.ttft = Histogram(TTFT_BUCKETS)
+        self.ttft_tenant: Dict[str, Histogram] = {}
         self.inter_token = Histogram(ITL_BUCKETS)
+
+    def _tenant_label(self, tenant: Optional[str]) -> str:
+        """Label value for ``tenant`` under the cardinality bound.
+        Callers hold ``self._lock``."""
+        t = tenant if tenant else "default"
+        if t in self._tenants:
+            return t
+        if len(self._tenants) < self.max_tenants:
+            self._tenants.add(t)
+            return t
+        return "other"
 
     # -- recording hooks (step thread + event-loop thread) -------------------
     def observe_http(self, path: str, code: int) -> None:
         with self._lock:
             self.http_requests[(path, str(code))] += 1
 
-    def observe_shed(self, reason: str) -> None:
+    def observe_shed(self, reason: str,
+                     tenant: Optional[str] = None) -> None:
         with self._lock:
             self.shed[(reason,)] += 1
+            self.shed_tenant[(reason, self._tenant_label(tenant))] += 1
 
     def observe_stream_end(self, outcome: str) -> None:
         with self._lock:
             self.streams[(outcome,)] += 1
 
-    def observe_ttft(self, seconds: float) -> None:
+    def observe_ttft(self, seconds: float,
+                     tenant: Optional[str] = None) -> None:
         with self._lock:
-            self.ttft.observe(seconds)
+            self._observe_ttft(seconds, tenant)
+
+    def _observe_ttft(self, seconds: float, tenant: Optional[str]) -> None:
+        self.ttft.observe(seconds)
+        t = self._tenant_label(tenant)
+        h = self.ttft_tenant.get(t)
+        if h is None:
+            h = self.ttft_tenant[t] = Histogram(TTFT_BUCKETS)
+        h.observe(seconds)
 
     def observe_inter_token(self, seconds: float, n: int = 1) -> None:
         with self._lock:
             self.inter_token.observe(seconds, n)
             self.tokens_streamed += n
 
-    def observe_first_token(self, ttft_s: float) -> None:
+    def observe_first_token(self, ttft_s: float,
+                            tenant: Optional[str] = None) -> None:
         with self._lock:
-            self.ttft.observe(ttft_s)
+            self._observe_ttft(ttft_s, tenant)
             self.tokens_streamed += 1
 
     # -- exposition ----------------------------------------------------------
@@ -192,6 +227,19 @@ class GatewayMetrics:
             out += self.inter_token.render(
                 "gateway_inter_token_seconds",
                 "Per-token gap between decode-segment arrivals")
+            if self.shed_tenant:
+                out += _labelled_counter(
+                    "gateway_shed_by_tenant_total",
+                    "Admission rejections by reason and (bounded) tenant",
+                    dict(self.shed_tenant), ("reason", "tenant"))
+            if self.ttft_tenant:
+                name = "gateway_ttft_by_tenant_seconds"
+                out += [f"# HELP {name} Submit-to-first-token latency "
+                        "by (bounded) tenant",
+                        f"# TYPE {name} histogram"]
+                for t in sorted(self.ttft_tenant):
+                    out += self.ttft_tenant[t].render(
+                        name, "", {"tenant": t})[2:]
         if session_stats is not None:
             out += self._render_session(session_stats)
         return "\n".join(out) + "\n"
@@ -206,8 +254,12 @@ class GatewayMetrics:
                 ("expired", "Requests expired past their deadline"),
                 ("failed", "Requests terminally failed by fault containment"),
                 ("preemptions", "Lane preemptions by higher priority"),
+                ("preempt_swap", "Preemptions captured to the host tier"),
+                ("preempt_recompute",
+                 "Preemptions falling back to recompute-on-resume"),
                 ("quota_rejections", "Sheds caused by per-tenant quotas")):
-            out += _counter(f"serve_sched_{key}_total", help_, sched[key])
+            out += _counter(f"serve_sched_{key}_total", help_,
+                            sched.get(key, 0))
         out += _gauge("serve_pending_requests",
                       "Requests queued, not yet admitted", st["pending"])
         out += _gauge("serve_active_requests",
@@ -235,6 +287,31 @@ class GatewayMetrics:
                     ("inserted_pages", "Pages donated into the index"),
                     ("evicted_pages", "Pages LRU-reclaimed under pressure"),
                     ("cow_forks", "Copy-on-write boundary-page forks"),
-                    ("quarantines", "Index corruption quarantines")):
-                out += _counter(f"serve_prefix_{key}_total", help_, pfx[key])
+                    ("quarantines", "Index corruption quarantines"),
+                    ("demoted_pages",
+                     "Index pages demoted to the host tier under pressure"),
+                    ("promoted_pages",
+                     "Host-resident pages promoted back to HBM on a hit")):
+                out += _counter(f"serve_prefix_{key}_total", help_,
+                                pfx.get(key, 0))
+        swp = st.get("swap")
+        if swp is not None:
+            for key, help_ in (
+                    ("swap_outs", "Page-set captures written to host RAM"),
+                    ("swap_ins", "Page-set restores read back into HBM"),
+                    ("swap_out_bytes", "Bytes migrated HBM->host"),
+                    ("swap_in_bytes", "Bytes migrated host->HBM"),
+                    ("slot_alloc_failures",
+                     "Host slot allocations refused (budget/fault)")):
+                out += _counter(f"serve_{key}_total", help_, swp[key])
+            out += _gauge("serve_host_pages_total",
+                          "Host-tier page slots configured", swp["host_pages"])
+            out += _gauge("serve_host_pages_used",
+                          "Host-tier page slots holding data",
+                          swp["host_used"])
+            out += _gauge("serve_host_pages_free",
+                          "Host-tier page slots free now", swp["host_free"])
+            out += _gauge("serve_swap_page_bytes",
+                          "Bytes per page across all cache leaves",
+                          swp["page_bytes"])
         return out

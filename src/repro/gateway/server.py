@@ -86,13 +86,14 @@ _MAX_BODY = 10 * 1024 * 1024
 class _Track:
     """Per-request latency accounting owned by the step thread."""
 
-    __slots__ = ("handle", "submit_t", "seen", "last_t")
+    __slots__ = ("handle", "submit_t", "seen", "last_t", "tenant")
 
-    def __init__(self, handle, submit_t: float):
+    def __init__(self, handle, submit_t: float, tenant: str = "default"):
         self.handle = handle
         self.submit_t = submit_t
         self.seen = 0
         self.last_t = submit_t
+        self.tenant = tenant
 
 
 def parse_generate_body(body: dict) -> Tuple[np.ndarray, SamplingParams]:
@@ -152,9 +153,10 @@ class Gateway:
             try:
                 handle = self.session.submit(prompt, params)
             except ShedError as e:
-                self.metrics.observe_shed(e.reason)
+                self.metrics.observe_shed(e.reason, params.tenant)
                 raise
-            self._tracked[handle.rid] = _Track(handle, time.monotonic())
+            self._tracked[handle.rid] = _Track(handle, time.monotonic(),
+                                               params.tenant)
         self._wake.set()
         return handle
 
@@ -215,7 +217,8 @@ class Gateway:
             n = t.handle.tokens_ready
             if n > t.seen:
                 if t.seen == 0:
-                    self.metrics.observe_first_token(now - t.submit_t)
+                    self.metrics.observe_first_token(now - t.submit_t,
+                                                     t.tenant)
                     if n > 1:
                         self.metrics.observe_inter_token(0.0, n - 1)
                 else:
@@ -236,13 +239,13 @@ _REASONS_4XX = {"bad-request"}
 
 
 def _http_head(code: int, ctype: str, extra: Tuple[Tuple[str, str], ...] = (),
-               clen: Optional[int] = None) -> bytes:
+               clen: Optional[int] = None, keep: bool = False) -> bytes:
     phrase = {200: "OK", 400: "Bad Request", 404: "Not Found",
               405: "Method Not Allowed", 413: "Payload Too Large",
               429: "Too Many Requests", 500: "Internal Server Error",
               503: "Service Unavailable"}.get(code, "OK")
     lines = [f"HTTP/1.1 {code} {phrase}", f"Content-Type: {ctype}",
-             "Connection: close"]
+             f"Connection: {'keep-alive' if keep else 'close'}"]
     if clen is not None:
         lines.append(f"Content-Length: {clen}")
     lines += [f"{k}: {v}" for k, v in extra]
@@ -250,9 +253,11 @@ def _http_head(code: int, ctype: str, extra: Tuple[Tuple[str, str], ...] = (),
 
 
 def _json_response(code: int, obj: dict,
-                   extra: Tuple[Tuple[str, str], ...] = ()) -> bytes:
+                   extra: Tuple[Tuple[str, str], ...] = (),
+                   keep: bool = False) -> bytes:
     body = (json.dumps(obj) + "\n").encode()
-    return _http_head(code, "application/json", extra, len(body)) + body
+    return _http_head(code, "application/json", extra, len(body),
+                      keep=keep) + body
 
 
 def _sse_event(event: str, data) -> bytes:
@@ -352,9 +357,15 @@ class GatewayHTTP:
     # -- request handling ----------------------------------------------------
     async def _handle_conn(self, reader: asyncio.StreamReader,
                            writer: asyncio.StreamWriter) -> None:
+        """One TCP connection, possibly many requests: HTTP/1.1 default
+        keep-alive so /metrics and /healthz scrapers reuse connections.
+        ``Connection: close`` (or HTTP/1.0) is honored; SSE responses
+        always close — their framing is read-until-close."""
         try:
-            await self._handle_one(reader, writer)
-        except (ConnectionResetError, BrokenPipeError, asyncio.TimeoutError):
+            while await self._handle_one(reader, writer):
+                await writer.drain()
+        except (ConnectionResetError, BrokenPipeError, asyncio.TimeoutError,
+                asyncio.IncompleteReadError):
             pass
         finally:
             try:
@@ -363,15 +374,16 @@ class GatewayHTTP:
             except (ConnectionResetError, BrokenPipeError, OSError):
                 pass
 
-    async def _handle_one(self, reader, writer) -> None:
+    async def _handle_one(self, reader, writer) -> bool:
+        """Serve one request; True iff the connection stays open."""
         req_line = await asyncio.wait_for(reader.readline(), 30.0)
         if not req_line:
-            return
+            return False
         try:
-            method, path, _ = req_line.decode("latin1").split(" ", 2)
+            method, path, version = req_line.decode("latin1").split(" ", 2)
         except ValueError:
             writer.write(_json_response(400, {"error": "bad-request"}))
-            return
+            return False
         headers = {}
         while True:
             line = await asyncio.wait_for(reader.readline(), 30.0)
@@ -381,50 +393,60 @@ class GatewayHTTP:
                 k, v = line.split(b":", 1)
                 headers[k.decode("latin1").strip().lower()] = \
                     v.decode("latin1").strip()
+        keep = version.strip().upper() == "HTTP/1.1" \
+            and headers.get("connection", "").lower() != "close"
         path = path.split("?", 1)[0]
-        code = await self._route(method, path, headers, reader, writer)
+        code, keep = await self._route(method, path, headers, reader,
+                                       writer, keep)
         self.gateway.metrics.observe_http(path, code)
+        return keep
 
-    async def _route(self, method, path, headers, reader, writer) -> int:
+    async def _route(self, method, path, headers, reader, writer,
+                     keep: bool) -> Tuple[int, bool]:
         if path == "/healthz" and method == "GET":
             if self.gateway.draining:
-                writer.write(_json_response(503, {"status": "draining"}))
-                return 503
-            writer.write(_json_response(200, {"status": "ok"}))
-            return 200
+                writer.write(_json_response(503, {"status": "draining"},
+                                            keep=keep))
+                return 503, keep
+            writer.write(_json_response(200, {"status": "ok"}, keep=keep))
+            return 200, keep
         if path == "/metrics" and method == "GET":
             text = self.gateway.metrics.render(self.gateway.session.stats())
             body = text.encode()
             writer.write(_http_head(
                 200, "text/plain; version=0.0.4; charset=utf-8",
-                clen=len(body)) + body)
-            return 200
+                clen=len(body), keep=keep) + body)
+            return 200, keep
         if path == "/v1/generate":
             if method != "POST":
-                writer.write(_json_response(405, {"error": "use POST"}))
-                return 405
-            return await self._generate(headers, reader, writer)
-        writer.write(_json_response(404, {"error": f"no route {path}"}))
-        return 404
+                writer.write(_json_response(405, {"error": "use POST"},
+                                            keep=keep))
+                return 405, keep
+            return await self._generate(headers, reader, writer, keep)
+        writer.write(_json_response(404, {"error": f"no route {path}"},
+                                    keep=keep))
+        return 404, keep
 
-    async def _generate(self, headers, reader, writer) -> int:
+    async def _generate(self, headers, reader, writer,
+                        keep: bool) -> Tuple[int, bool]:
         try:
             clen = int(headers.get("content-length", "0"))
         except ValueError:
             clen = -1
         if clen <= 0 or clen > _MAX_BODY:
+            code = 413 if clen > _MAX_BODY else 400
+            # an unread body would desynchronize the next request's parse
             writer.write(_json_response(
-                413 if clen > _MAX_BODY else 400,
-                {"error": "body required (Content-Length)"}))
-            return 413 if clen > _MAX_BODY else 400
+                code, {"error": "body required (Content-Length)"}))
+            return code, False
         raw = await asyncio.wait_for(reader.readexactly(clen), 60.0)
         try:
             body = json.loads(raw)
             prompt, params = parse_generate_body(body)
         except (json.JSONDecodeError, ValueError) as e:
             writer.write(_json_response(400, {"error": "bad-request",
-                                              "detail": str(e)}))
-            return 400
+                                              "detail": str(e)}, keep=keep))
+            return 400, keep
         # -- admission: typed rejections map through serve/reasons.py -------
         try:
             handle = self.gateway.submit(prompt, params)
@@ -433,28 +455,34 @@ class GatewayHTTP:
             extra = (("Retry-After", str(retry)),) if retry is not None else ()
             writer.write(_json_response(
                 code, {"error": e.reason, "rid": e.rid, "detail": str(e)},
-                extra))
-            return code
+                extra, keep=keep))
+            return code, keep
         except RuntimeError:            # draining
             writer.write(_json_response(
-                503, {"error": "draining"}, (("Retry-After", "1"),)))
-            return 503
+                503, {"error": "draining"}, (("Retry-After", "1"),),
+                keep=keep))
+            return 503, keep
         except ValueError as e:         # capacity/validation: client error
             writer.write(_json_response(400, {"error": "bad-request",
-                                              "detail": str(e)}))
-            return 400
+                                              "detail": str(e)}, keep=keep))
+            return 400, keep
         if body.get("stream") is False:
-            return await self._respond_json(handle, writer)
-        return await self._respond_sse(handle, writer)
+            return await self._respond_json(handle, writer, keep), keep
+        # SSE framing is read-until-close: the stream always ends the conn
+        return await self._respond_sse(handle, writer), False
 
     @staticmethod
     def _terminal_payload(handle, sent: int) -> Tuple[str, dict]:
-        """``preempted`` rides along so stream-identity consumers (the
-        traffic-replay oracle gate) can tell bit-faithful streams from
-        recompute-resumed ones without server-side state."""
+        """The preemption counters ride along so stream-identity consumers
+        (the traffic-replay oracle gate) can tell bit-faithful streams
+        from recompute-resumed ones without server-side state: swap-
+        resumed streams (``preempted_swap``) ARE bit-faithful — only
+        ``preempted_recompute`` > 0 voids stream identity."""
         st = handle.status
         base = {"status": st.value, "tokens": sent,
-                "preempted": handle.preemptions}
+                "preempted": handle.preemptions,
+                "preempted_swap": handle.preempt_swap,
+                "preempted_recompute": handle.preempt_recompute}
         if st in (RequestStatus.DONE, RequestStatus.CANCELLED):
             return "end", base
         return "error", dict(base, reason=handle.error)
@@ -485,7 +513,7 @@ class GatewayHTTP:
             self.gateway.cancel(handle)
             raise
 
-    async def _respond_json(self, handle, writer) -> int:
+    async def _respond_json(self, handle, writer, keep: bool = False) -> int:
         """Non-streaming mode: wait for the terminal status, answer once."""
         try:
             while handle.status not in TERMINAL:
@@ -497,16 +525,19 @@ class GatewayHTTP:
         ev, payload = self._terminal_payload(handle, len(toks))
         payload["tokens"] = toks
         payload["event"] = ev
-        writer.write(_json_response(200, payload))
+        writer.write(_json_response(200, payload, keep=keep))
         return 200
 
 
 def run_gateway(engine, host: str = "127.0.0.1", port: int = 8080,
+                metrics_tenants: Optional[int] = None,
                 **session_kwargs) -> None:
     """Launcher entry: boot a gateway over ``engine`` and serve until
     SIGTERM/SIGINT, then drain gracefully (stop admitting, finish
     in-flight lanes, close every stream) before exiting."""
-    gw = Gateway(engine, **session_kwargs)
+    metrics = (GatewayMetrics(max_tenants=metrics_tenants)
+               if metrics_tenants is not None else None)
+    gw = Gateway(engine, metrics=metrics, **session_kwargs)
     http = GatewayHTTP(gw, host=host, port=port)
     try:
         http.serve_forever()

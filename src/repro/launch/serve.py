@@ -90,6 +90,15 @@ def main():
                     help="(--stream) per-request deadline budget in wall "
                          "ms: unmeetable at admission sheds, passing it "
                          "mid-flight expires the request")
+    ap.add_argument("--host-pages", type=int, default=None,
+                    help="(--stream/--http) host-RAM swap tier budget in "
+                         "pages: preempted lanes and cold prefix pages "
+                         "migrate to pinned host buffers instead of being "
+                         "recomputed/freed, and fault back in bit-identical")
+    ap.add_argument("--metrics-tenants", type=int, default=None,
+                    help="(--http) per-tenant /metrics label budget: first "
+                         "N distinct tenants get their own label, the rest "
+                         "aggregate under tenant=\"other\"")
     ap.add_argument("--http", type=int, default=None, metavar="PORT",
                     help="serve over HTTP on this port: POST /v1/generate "
                          "(JSON body; tokens stream back as SSE), GET "
@@ -151,7 +160,9 @@ def main():
         run_gateway(engine, host=args.host, port=args.http,
                     lanes=args.lanes, page_size=args.page_size,
                     segment=args.segment, prefix_cache=args.prefix_cache,
-                    max_pending=args.max_pending, audit=args.audit)
+                    max_pending=args.max_pending, audit=args.audit,
+                    host_page_budget=args.host_pages,
+                    metrics_tenants=args.metrics_tenants)
         print("[serve] gateway drained; exiting")
         return
 
@@ -189,7 +200,8 @@ def main():
                             segment=args.segment,
                             prefix_cache=args.prefix_cache,
                             max_pending=args.max_pending,
-                            audit=args.audit) as sess:
+                            audit=args.audit,
+                            host_page_budget=args.host_pages) as sess:
             def _submit(p, g):
                 try:
                     return sess.submit(p, SamplingParams(
@@ -246,6 +258,16 @@ def main():
                       f"{st['hit_tokens']} prompt tokens served from cache,"
                       f" {st['cow_forks']} CoW forks, "
                       f"{st['evicted_pages']} pages LRU-evicted)")
+            if args.host_pages is not None:
+                sw = sess.swap_mgr.stats_dict()
+                st = sess.sched.stats
+                print(f"[serve] swap tier: {sw['swap_outs']} captures / "
+                      f"{sw['swap_ins']} restores "
+                      f"({sw['swap_out_bytes']}B out, "
+                      f"{sw['swap_in_bytes']}B in; "
+                      f"{sw['host_used']}/{sw['host_pages']} host pages "
+                      f"used; preempt swap={st['preempt_swap']} "
+                      f"recompute={st['preempt_recompute']})")
         print(f"[serve] stream: {args.requests} requests over {args.lanes} "
               f"lanes in {dt:.2f}s ({total/dt:.1f} tok/s aggregate, "
               f"first tokens after {ttft:.2f}s — no wait for pool drain)")

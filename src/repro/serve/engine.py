@@ -193,6 +193,10 @@ class ServeEngine:
         # caches keyed by batch size, paged pools keyed by pool geometry —
         # one bounded pool abstraction instead of an unbounded per-shape dict
         self._caches = CachePool(limit=cache_pool_limit)
+        # host-parked prefix indexes (serve/swap.py): close() demotes a
+        # session's whole index to host and parks (PrefixCache, SwapManager)
+        # here keyed by geometry; the next same-key session adopts it
+        self._prefix_store = {}
         self._fns = {}      # compile-shape key -> jitted fn (FIFO-bounded)
         # (temperature is a TRACED argument, deliberately not a compile key)
         self._prefill = jax.jit(
@@ -480,7 +484,7 @@ class ServeEngine:
         cross-request prompt-page sharing — serve/prefix_cache.py).
         ``**robustness`` forwards the overload/fault knobs (``max_pending``,
         ``tenant_page_quota``, ``tenant_lane_quota``, ``faults``,
-        ``audit``, ``clock`` — see ServeSession)."""
+        ``audit``, ``clock``, ``host_page_budget`` — see ServeSession)."""
         use_pfx = self.prefix_cache if prefix_cache is None else prefix_cache
         if use_pfx and self.mesh is not None:
             raise NotImplementedError(

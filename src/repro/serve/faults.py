@@ -26,6 +26,16 @@ stack polls ``should_fire(site)`` at four choke points:
   prefix_index     corrupts one radix node in place before the step; the
                    next lookup's checksum walk detects it and QUARANTINES
                    the index (bypass to cold admission — never wrong bytes)
+  swap_out         device→host page migration (``serve/swap.py`` bridge:
+                   preemption capture, prefix demotion) — contained by
+                   FALLING BACK (recompute preempt / plain eviction), so
+                   there is no victim
+  swap_in          host→device migration (swap-resume restore, prefix
+                   fault-in) — contained by falling back to the recompute
+                   prefill / cold-admission path; the host copy survives
+  host_pool        host slot allocation (``SwapManager.alloc_slots``) —
+                   atomic like ``page_alloc``: fires before the free list
+                   moves, callers fall back as for ``swap_out``
   ===============  ========================================================
 
 Injection is counted per site: ``arm(site, at=2)`` fires on the third
@@ -43,7 +53,8 @@ from __future__ import annotations
 import os
 from typing import Dict, List, Optional, Tuple
 
-SITES = ("page_alloc", "fork_page", "kernel_dispatch", "prefix_index")
+SITES = ("page_alloc", "fork_page", "kernel_dispatch", "prefix_index",
+         "swap_out", "swap_in", "host_pool")
 
 
 class InjectedFault(RuntimeError):

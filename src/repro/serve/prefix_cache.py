@@ -45,6 +45,18 @@ reads), so its tokens follow the serve-over-cache semantics rather than
 being bit-equal to a cold full prefill; EXACT hits re-read identical
 bytes end to end and are bit-identical (tests/test_prefix_cache.py).
 
+  * HOST DEMOTION (serve/swap.py, attached as ``self.swap``): with a swap
+    tier, LRU reclaim DEMOTES cold unpinned pages to pinned host buffers
+    instead of freeing them — the entry stays in the index with each
+    host-resident page encoded IN PLACE as ``-(slot+1)`` (lengths and
+    checksums survive; the allocator never sees a negative id). A later
+    hit on a host-resident path is promoted back onto fresh device pages
+    (``promote``) before admission ever sees it, byte-identical to the
+    cold-stored bytes, so exact hits stay bit-identical end to end.
+    ``demote_all`` parks the ENTIRE index (pages, boundary records, SSM
+    snapshots, end logits) on host so it survives ``CachePool``
+    hand-back between sessions.
+
 Pure host bookkeeping — no jax here. Device work (page fork, lane state
 write, tail prefill) lives in serve/engine.py builders driven by the
 session; this index only moves page ids and opaque device trees around.
@@ -136,10 +148,15 @@ class PrefixCache:
         self.records: Dict[bytes, _Record] = {}
         self._tick = 0
         self.quarantined = False
+        # host tier (serve/swap.py SwapBridge) — attached by the session;
+        # None keeps every path below on the free-instead-of-demote
+        # behavior, bit-for-bit the pre-swap semantics
+        self.swap = None
         self.stats = {"lookups": 0, "exact_hits": 0, "partial_hits": 0,
                       "misses": 0, "hit_tokens": 0, "prompt_tokens": 0,
                       "inserted_pages": 0, "evicted_pages": 0,
-                      "cow_forks": 0, "quarantines": 0}
+                      "cow_forks": 0, "quarantines": 0,
+                      "demoted_pages": 0, "promoted_pages": 0}
 
     # -- path helpers --------------------------------------------------------
     def _chain(self, node: _Node) -> List[_Node]:
@@ -328,13 +345,19 @@ class PrefixCache:
         return consumed
 
     def _evict_record(self, kb: bytes, alloc) -> bool:
-        """Drop one record: unpin its path, release its boundary page.
-        Returns True iff a page actually freed."""
+        """Drop one record: unpin its path, release its boundary page —
+        a host-resident boundary (negative id) frees its SLOT instead.
+        Returns True iff a DEVICE page actually freed."""
         rec = self.records.pop(kb)
         self.unpin(rec.node)
-        if rec.page is not None and alloc.decref(rec.page):
-            self.stats["evicted_pages"] += 1
-            return True
+        if rec.page is not None:
+            if rec.page < 0:
+                if self.swap is not None:
+                    self.swap.free_slots([-rec.page - 1])
+                return False
+            if alloc.decref(rec.page):
+                self.stats["evicted_pages"] += 1
+                return True
         return False
 
     def _evict_lru_record(self, alloc) -> None:
@@ -360,17 +383,19 @@ class PrefixCache:
         return out
 
     def _reclaimable(self, alloc) -> int:
-        """Pages a full sweep COULD free right now: record boundary pages
-        with no extra holders, plus every node whose pass-through ref is
-        entirely record pins (pins are transitive, so a node with zero
-        non-record refs heads a fully drainable subtree once its records
-        go)."""
+        """DEVICE pages a full sweep COULD free right now: record boundary
+        pages with no extra holders, plus every node whose pass-through
+        ref is entirely record pins (pins are transitive, so a node with
+        zero non-record refs heads a fully drainable subtree once its
+        records go). Host-resident ids (negative) occupy no device page
+        and count for nothing."""
         rec_pins: Dict[int, int] = {}
         n = 0
         for rec in self.records.values():
             for node in self._chain(rec.node):
                 rec_pins[id(node)] = rec_pins.get(id(node), 0) + 1
-            if rec.page is not None and alloc.refs[rec.page] == 1:
+            if rec.page is not None and rec.page >= 0 \
+                    and alloc.refs[rec.page] == 1:
                 n += 1
         stack = [self.root]
         while stack:
@@ -378,54 +403,270 @@ class PrefixCache:
             stack.extend(node.children.values())
             if node is not self.root \
                     and node.ref == rec_pins.get(id(node), 0):
-                n += len(node.pages)
+                n += sum(1 for p in node.pages if p >= 0)
         return n
 
+    def _demote_record(self, rec: _Record, alloc) -> bool:
+        """Move one record's boundary page to host IN PLACE: the record
+        stays in the index as a host-resident exact hit. True on success;
+        False (host budget / injected fault / extra holders) means the
+        caller falls back to plain eviction."""
+        if self.swap is None or rec.page is None or rec.page < 0 \
+                or alloc.refs[rec.page] != 1:
+            return False
+        slots = self.swap.demote([rec.page])
+        if slots is None:
+            return False
+        page, rec.page = rec.page, -(slots[0] + 1)
+        alloc.decref(page)
+        self.stats["demoted_pages"] += 1
+        return True
+
+    def _demote_node(self, node: _Node, alloc) -> int:
+        """Move a node's device pages to host IN PLACE (the node survives,
+        its ids rewritten to encoded slots, resealed). Returns the number
+        of device pages freed; 0 means fall back to plain eviction."""
+        pos = [p for p in node.pages if p >= 0]
+        if self.swap is None or not pos \
+                or any(alloc.refs[p] != 1 for p in pos):
+            return 0
+        slots = self.swap.demote(pos)
+        if slots is None:
+            return 0
+        it = iter(slots)
+        node.pages = [(-(next(it) + 1) if p >= 0 else p)
+                      for p in node.pages]
+        node.seal()                     # legitimate mutation: re-checksum
+        for p in pos:
+            alloc.decref(p)
+        self.stats["demoted_pages"] += len(pos)
+        return len(pos)
+
+    def _evict_node(self, node: _Node, alloc) -> int:
+        """Plain leaf eviction; host-resident entries free their slots.
+        Returns the number of device pages freed."""
+        node.parent.children.pop(node.key[:self.page_size].tobytes())
+        freed = 0
+        for p in node.pages:
+            if p < 0:
+                if self.swap is not None:
+                    self.swap.free_slots([-p - 1])
+            elif alloc.decref(p):
+                freed += 1
+                self.stats["evicted_pages"] += 1
+        return freed
+
+    def _reclaim_candidates(self, alloc) -> List[Tuple[int, int, Any]]:
+        """LRU-ordered entries whose demotion/eviction frees DEVICE
+        pages. Records: a device boundary page. Nodes: >= 1 device page
+        AND either unpinned leaves (evictable, the no-swap-tier shape) or
+        — with a swap tier — nodes whose every pin is a RECORD pin:
+        pins forbid EVICTION (the record's path must survive), not
+        demote-in-place, and no live request is reading the pages.
+        Host-only entries are never candidates: touching them frees no
+        device page, it only destroys the host tier's hit potential."""
+        rec_pins: Dict[int, int] = {}
+        for rec in self.records.values():
+            for node in self._chain(rec.node):
+                rec_pins[id(node)] = rec_pins.get(id(node), 0) + 1
+        cands: List[Tuple[int, int, Any]] = []
+        for kb, rec in self.records.items():
+            if rec.page is not None and rec.page >= 0:
+                cands.append((rec.tick, 0, (kb, rec)))
+            elif self.swap is None and rec.page is None:
+                # no swap tier: a boundary-less record frees nothing
+                # itself but eviction unpins its path, surfacing the
+                # chain's nodes as evictable leaves on later rounds
+                cands.append((rec.tick, 0, (kb, rec)))
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n is self.root or not any(p >= 0 for p in n.pages):
+                continue
+            if n.ref == 0 and not n.children:
+                cands.append((n.tick, 1, n))
+            elif self.swap is not None \
+                    and n.ref == rec_pins.get(id(n), 0):
+                cands.append((n.tick, 1, n))
+        cands.sort(key=lambda c: (c[0], c[1]))
+        return cands
+
     def reclaim(self, alloc, need: int) -> bool:
-        """Free >= ``need`` pages by evicting LRU records and unpinned
-        leaf nodes (evicting a record unpins its path, surfacing its
-        leaves for the next round). Infeasible targets fail FAST — before
-        any eviction — so a transiently unadmittable request never flushes
-        the index for nothing; the caller's request waits, and it is never
-        deadlocked by cache-held pages since everything unpinned stays
-        reachable."""
+        """Free >= ``need`` DEVICE pages, LRU-first. With a swap tier,
+        demotion is tried before eviction: the entry stays serveable from
+        host RAM, its ids rewritten in place, and a later hit faults the
+        bytes back in. Plain eviction is the fallback when the host
+        budget is exhausted, a ``swap_out`` fault fires, or there is no
+        swap tier at all. A pinned node whose demote fails cannot be
+        evicted directly — its LRU pinning record is evicted instead,
+        unpinning the path so the node surfaces as an evictable leaf on a
+        later round (the pre-swap reclaim order, reached only under host
+        pressure). Infeasible targets fail FAST — before any eviction —
+        so a transiently unadmittable request never flushes the index for
+        nothing; the caller's request waits, and it is never deadlocked
+        by cache-held pages since everything unpinned stays reachable."""
         if need > self._reclaimable(alloc):
             return False
         freed = 0
         while freed < need:
-            cands: List[Tuple[int, int, Any]] = []
-            for kb, rec in self.records.items():
-                cands.append((rec.tick, 0, (kb, rec)))
-            for n in self._evictable_nodes():
-                cands.append((n.tick, 1, n))
+            cands = self._reclaim_candidates(alloc)
             if not cands:
                 return False
-            cands.sort(key=lambda c: (c[0], c[1]))
             _, kind, victim = cands[0]
             if kind == 0:
-                kb, _rec = victim
-                if self._evict_record(kb, alloc):
+                kb, rec = victim
+                if self._demote_record(rec, alloc):
+                    freed += 1
+                elif self._evict_record(kb, alloc):
                     freed += 1
             else:
-                victim.parent.children.pop(
-                    victim.key[:self.page_size].tobytes())
-                for p in victim.pages:
-                    if alloc.decref(p):
-                        freed += 1
-                        self.stats["evicted_pages"] += 1
+                n_demoted = self._demote_node(victim, alloc)
+                if n_demoted:
+                    freed += n_demoted
+                elif victim.ref == 0 and not victim.children:
+                    freed += self._evict_node(victim, alloc)
+                elif self.records:
+                    self._evict_lru_record(alloc)   # unpin, retry next round
+                else:
+                    return False
         return True
+
+    # -- host-tier promotion / parking ---------------------------------------
+    def promote(self, hit: Hit, new_pages: List[int]
+                ) -> List[Tuple[int, int]]:
+        """Rewrite a hit's host-resident ids with freshly allocated device
+        pages, root-first along the path (+ the exact record's boundary
+        page last). Returns the copy plan ``[(slot, page), ...]`` — the
+        bridge runs the actual ``swap_in`` against it; pure bookkeeping
+        here so a faulted copy can be undone with ``demote_back``. The
+        new pages' refcount-1 becomes the index ownership ref."""
+        plan: List[Tuple[int, int]] = []
+        it = iter(new_pages)
+        for n in self._chain(hit.node):
+            changed = False
+            for i, p in enumerate(n.pages):
+                if p < 0:
+                    q = next(it)
+                    plan.append((-p - 1, q))
+                    n.pages[i] = q
+                    changed = True
+            if changed:
+                n.seal()                # legitimate mutation: re-checksum
+        rec = hit.record
+        if rec is not None and rec.page is not None and rec.page < 0:
+            q = next(it)
+            plan.append((-rec.page - 1, q))
+            rec.page = q
+        hit.pages = self.path_pages(hit.node)
+        return plan
+
+    def demote_back(self, hit: Hit, plan: List[Tuple[int, int]]) -> None:
+        """Undo ``promote`` bookkeeping after a faulted copy: the device
+        pages were never written, so the host slots stay authoritative —
+        restore the encoded ids in place. The caller returns the pages."""
+        back = {page: -(slot + 1) for slot, page in plan}
+        for n in self._chain(hit.node):
+            changed = False
+            for i, p in enumerate(n.pages):
+                if p in back:
+                    n.pages[i] = back[p]
+                    changed = True
+            if changed:
+                n.seal()
+        rec = hit.record
+        if rec is not None and rec.page is not None and rec.page in back:
+            rec.page = back[rec.page]
+        hit.pages = self.path_pages(hit.node)
+
+    def _drop_subtree(self, node: _Node, alloc, dropped: set) -> None:
+        """Hard-evict a whole subtree mid-``demote_all`` (its pages could
+        not be parked): records anchored inside go first (their unpins
+        walk through live ancestors), then every page/slot releases and
+        the subtree detaches. ``dropped`` collects the node ids so the
+        caller's traversal skips them."""
+        sub = set()
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            sub.add(id(n))
+            stack.extend(n.children.values())
+        for kb in [kb for kb, rec in self.records.items()
+                   if id(rec.node) in sub]:
+            self._evict_record(kb, alloc)
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            for p in n.pages:
+                if p < 0:
+                    if self.swap is not None:
+                        self.swap.free_slots([-p - 1])
+                elif alloc.decref(p):
+                    self.stats["evicted_pages"] += 1
+        node.parent.children.pop(node.key[:self.page_size].tobytes(), None)
+        dropped.update(sub)
+
+    def demote_all(self, alloc) -> None:
+        """Park the ENTIRE index on host ahead of ``CachePool`` hand-back:
+        every device page demotes to a slot, record logits / SSM end
+        states / node boundary snapshots move to host arrays. Entries that
+        cannot park (host budget exhausted, injected ``swap_out`` fault,
+        unexpected extra page holders) are evicted instead — the parked
+        index is always internally consistent, just possibly smaller. The
+        caller hands the (now page-free) index to ``ServeEngine`` for the
+        next same-geometry session to adopt."""
+        if self.swap is None or self.quarantined:
+            return
+        for kb in list(self.records):
+            rec = self.records[kb]
+            if rec.page is not None and rec.page >= 0 \
+                    and not self._demote_record(rec, alloc):
+                self._evict_record(kb, alloc)
+                continue
+            rec.logits = self.swap.to_host(rec.logits)
+            rec.end_ssm = self.swap.to_host(rec.end_ssm)
+        dropped: set = set()
+        nodes, stack = [], [self.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n is not self.root:
+                nodes.append(n)
+        for n in nodes:
+            if id(n) in dropped:
+                continue
+            if any(p >= 0 for p in n.pages) \
+                    and not self._demote_node(n, alloc):
+                self._drop_subtree(n, alloc, dropped)
+                continue
+            n.snaps = [self.swap.to_host(s) for s in n.snaps]
 
     # -- integrity: verify / quarantine / audit ------------------------------
     def _owned_page_iter(self):
+        """Device pages the index owns a ref on — host-resident (negative)
+        ids are NOT pages and never reach the allocator."""
         for rec in self.records.values():
-            if rec.page is not None:
+            if rec.page is not None and rec.page >= 0:
                 yield rec.page
         stack = [self.root]
         while stack:
             n = stack.pop()
             stack.extend(n.children.values())
             if n is not self.root:
-                yield from n.pages
+                yield from (p for p in n.pages if p >= 0)
+
+    def _host_slot_iter(self):
+        """Host slots the index owns (record boundaries + node runs)."""
+        for rec in self.records.values():
+            if rec.page is not None and rec.page < 0:
+                yield -rec.page - 1
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n is not self.root:
+                yield from (-p - 1 for p in n.pages if p < 0)
 
     def verify(self) -> None:
         """Full-tree integrity walk; raises ``IndexCorruption`` on the
@@ -468,6 +709,10 @@ class PrefixCache:
         cannot release shows up in the allocator audit as a leak, counted
         here). Returns the number of pages actually freed."""
         freed = 0
+        if self.swap is not None:
+            slots = list(self._host_slot_iter())
+            if slots:
+                self.swap.free_slots(slots)
         for p in list(self._owned_page_iter()):
             try:
                 if alloc.decref(p):
@@ -500,11 +745,20 @@ class PrefixCache:
         it only the record-pin lower bound is checked), and the record map
         respects its LRU bound. Raises ``RuntimeError`` on violation."""
         self.verify()
+        def _host_ok(p: int) -> bool:
+            return self.swap is not None \
+                and 0 <= (-p - 1) < self.swap.host_pages
+
         rec_pins: Dict[int, int] = {}
         for rec in self.records.values():
             for n in self._chain(rec.node):
                 rec_pins[id(n)] = rec_pins.get(id(n), 0) + 1
-            if rec.page is not None and not (
+            if rec.page is not None and rec.page < 0:
+                if not _host_ok(rec.page):
+                    raise RuntimeError(
+                        f"audit: record host slot {-rec.page - 1} out of "
+                        "bounds / no swap tier")
+            elif rec.page is not None and not (
                     0 < rec.page < alloc.n_pages
                     and alloc.refs[rec.page] >= 1):
                 raise RuntimeError(
@@ -519,7 +773,12 @@ class PrefixCache:
             n_nodes += 1
             n_pages += len(n.pages)
             for p in n.pages:
-                if not (0 < p < alloc.n_pages and alloc.refs[p] >= 1):
+                if p < 0:
+                    if not _host_ok(p):
+                        raise RuntimeError(
+                            f"audit: indexed host slot {-p - 1} out of "
+                            "bounds / no swap tier")
+                elif not (0 < p < alloc.n_pages and alloc.refs[p] >= 1):
                     raise RuntimeError(
                         f"audit: indexed page {p} is free/garbage")
             want = rec_pins.get(id(n), 0)
@@ -543,13 +802,13 @@ class PrefixCache:
     # -- introspection -------------------------------------------------------
     @property
     def owned_pages(self) -> int:
-        n = sum(1 for r in self.records.values() if r.page is not None)
-        stack = [self.root]
-        while stack:
-            node = stack.pop()
-            stack.extend(node.children.values())
-            n += len(node.pages)
-        return n
+        """DEVICE pages owned (host-resident entries count under
+        ``host_resident_pages``)."""
+        return sum(1 for _ in self._owned_page_iter())
+
+    @property
+    def host_resident_pages(self) -> int:
+        return sum(1 for _ in self._host_slot_iter())
 
     @property
     def hit_rate(self) -> float:

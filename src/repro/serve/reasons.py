@@ -10,7 +10,8 @@ tests/test_gateway.py pins the HTTP mapping against it).
 Two shapes of reason appear in the wild:
 
   * bare reasons — ``queue-full``, ``tenant-quota``, ``page-budget``,
-    ``deadline``: produced by admission control and the deadline sweeps;
+    ``deadline``, ``host-budget``: produced by admission control and the
+    deadline sweeps;
   * prefixed reasons — ``injected:<site>``, ``pool-lost:<exc>``,
     ``bad-logits``: produced by fault containment, where the suffix
     carries the forensic detail. ``base_reason`` strips the detail so
@@ -25,6 +26,9 @@ HTTP mapping policy (the gateway's contract, ISSUE 8):
     pool can never fit the request; retrying verbatim is futile;
   * ``deadline`` (unmeetable at admission) → 429 with Retry-After —
     retry with a relaxed deadline or at lower load;
+  * ``host-budget`` (both memory tiers committed, ISSUE 9) → 429 with
+    Retry-After — transient: slots free as swapped requests resume and
+    cold index pages age out;
   * anything mid-flight (EXPIRED / FAILED after tokens may have
     streamed) is NOT an HTTP status: the stream already started, so the
     gateway emits a terminal SSE ``error`` event carrying the reason
@@ -39,6 +43,8 @@ QUEUE_FULL = "queue-full"        # bounded submit queue at max_pending
 TENANT_QUOTA = "tenant-quota"    # tenant over its worst-case page/lane quota
 PAGE_BUDGET = "page-budget"      # page budget can never fit this pool
 DEADLINE = "deadline"            # unmeetable at admission OR passed mid-flight
+HOST_BUDGET = "host-budget"      # both memory tiers (HBM pool + host swap
+                                 # slots) committed to earlier requests
 
 # -- prefixed reasons (fault containment; detail after the colon) ------------
 INJECTED = "injected"            # injected:<site> — deterministic fault drill
@@ -47,10 +53,11 @@ BAD_LOGITS = "bad-logits"        # non-finite prefill logits under audit
 
 #: every reason the serving stack can emit, bare or as a prefix.
 ALL_REASONS = frozenset({QUEUE_FULL, TENANT_QUOTA, PAGE_BUDGET, DEADLINE,
-                         INJECTED, POOL_LOST, BAD_LOGITS})
+                         HOST_BUDGET, INJECTED, POOL_LOST, BAD_LOGITS})
 
 #: reasons ``ShedError`` may carry (admission-time rejections only).
-SHED_REASONS = frozenset({QUEUE_FULL, TENANT_QUOTA, PAGE_BUDGET, DEADLINE})
+SHED_REASONS = frozenset({QUEUE_FULL, TENANT_QUOTA, PAGE_BUDGET, DEADLINE,
+                          HOST_BUDGET})
 
 
 def base_reason(reason: Optional[str]) -> Optional[str]:
@@ -75,6 +82,8 @@ HTTP_STATUS: dict = {
     TENANT_QUOTA: (429, 1),
     PAGE_BUDGET: (503, None),
     DEADLINE: (429, 1),
+    # transient like queue-full: both tiers drain as requests finish
+    HOST_BUDGET: (429, 1),
 }
 
 

@@ -19,14 +19,20 @@ under the same FCFS page-budget rule. Per step it can
   * finish — release a completed request's lane + pages;
   * evict  — preempt a running request, releasing lane + pages and
     requeueing it at the FRONT of the queue. Already-emitted tokens are
-    kept: on re-admission the effective prompt is prompt+emitted and the
-    cache state is recomputed by prefill. The recompute CONTRACT: the
-    resumed tail is exactly the stream the engine serves for the
-    effective prompt fresh — not necessarily bit-equal to the
-    uninterrupted stream, because prefill-computed and decode-computed
-    attention rows differ by bf16 reduction order (flash streaming-softmax
-    vs gathered decode) and B⊕LD's sign() activations amplify those ulps
-    into token flips (tests/test_serve_session.py pins the contract);
+    kept. With a swap tier attached (``swap=``, serve/swap.py) the
+    victim's page BYTES and lane state are captured to host first and
+    re-admission restores them — the resumed stream is BIT-identical to
+    the uninterrupted one (``Request.preempt_swap`` counts these;
+    tests/test_swap_tier.py pins the parity). Without the tier — or when
+    the host budget is exhausted / a swap fault fires — the cache state
+    is recomputed by prefilling prompt+emitted (``preempt_recompute``).
+    The recompute CONTRACT: the resumed tail is exactly the stream the
+    engine serves for the effective prompt fresh — not necessarily
+    bit-equal to the uninterrupted stream, because prefill-computed and
+    decode-computed attention rows differ by bf16 reduction order (flash
+    streaming-softmax vs gathered decode) and B⊕LD's sign() activations
+    amplify those ulps into token flips (tests/test_serve_session.py
+    pins the recompute contract);
   * cancel — drop a request wherever it is: pending requests leave the
     queue, active requests release lane + pages immediately (the evict
     path without the requeue), so a queued request can take the freed
@@ -185,13 +191,20 @@ class Request:
         self.seq = -1                 # global submit order (FCFS tiebreak)
         self.deadline: Optional[float] = None   # ABSOLUTE wall ms, or None
         self.fail_reason: Optional[str] = None  # why SHED/EXPIRED/FAILED
-        # times this request was evicted and resumed by recompute. The
-        # recompute contract makes a resumed stream oracle-consistent for
-        # its EFFECTIVE prompt, not bit-equal to the uninterrupted stream
-        # — consumers doing stream-identity checks (traffic replay's
-        # oracle gate) need to know, so the gateway surfaces this in the
-        # terminal SSE event.
-        self.preemptions = 0
+        # preemption counters, split by resume mechanism: a SWAP resume
+        # restores the identical page bytes and stays bit-equal to the
+        # uninterrupted stream; a RECOMPUTE resume is only
+        # oracle-consistent for its EFFECTIVE prompt (Boolean sign()
+        # amplifies prefill-vs-decode ulps into token flips). Consumers
+        # doing stream-identity checks (traffic replay's oracle gate)
+        # need the split, so the gateway surfaces both in the terminal
+        # SSE event and skips only recompute-resumed streams.
+        self.preempt_swap = 0
+        self.preempt_recompute = 0
+        # host-resident state of a swapped-out pending request (a
+        # serve/swap.py SwapRecord); consumed at re-admission, discarded
+        # on every terminal path (cancel / shed / admission fault).
+        self.swap = None
         # prefix-cache state (all vacuous when the cache is disabled):
         # pages = shared_pages + private_pages in logical (block-table)
         # order; hit is the pinned lookup this admission rode; cache_extras
@@ -219,6 +232,11 @@ class Request:
         return self.params.tenant
 
     @property
+    def preemptions(self) -> int:
+        """Total evictions, either resume mechanism."""
+        return self.preempt_swap + self.preempt_recompute
+
+    @property
     def done(self) -> bool:
         return self.stopped or len(self.emitted) >= self.params.max_tokens
 
@@ -243,7 +261,7 @@ class Scheduler:
                  prefix_cache=None, *, max_pending: Optional[int] = None,
                  tenant_page_quota: Optional[int] = None,
                  tenant_lane_quota: Optional[int] = None, faults=None,
-                 hit_first: bool = True):
+                 hit_first: bool = True, swap=None):
         if lanes < 1 or n_pages < 2:
             raise ValueError("need >=1 lane and >=2 pages (page 0 is the "
                              "reserved garbage page)")
@@ -268,13 +286,20 @@ class Scheduler:
         # not an input to any request's own computation; pinned in
         # tests/test_overload.py).
         self.hit_first = hit_first
+        # host swap tier (serve/swap.py SwapBridge, or None): preemption
+        # captures page bytes instead of recomputing, prefix reclaim
+        # demotes instead of evicting, admission faults host-resident
+        # hits back in, and submit accounts BOTH memory tiers. The bridge
+        # owns all device work — this core stays jax-free.
+        self.swap = swap
         self._seq = 0
         # drained by the session after every scheduling phase:
         self.freed_lanes: List[int] = []   # lanes _release'd since last drain
         self.faulted: List[Request] = []   # FAILED at admission (contained)
         self.shed_log: List[Request] = []  # SHED after entering the queue
         self.stats = {"admitted": 0, "shed": 0, "expired": 0, "failed": 0,
-                      "preemptions": 0, "quota_rejections": 0}
+                      "preemptions": 0, "preempt_swap": 0,
+                      "preempt_recompute": 0, "quota_rejections": 0}
 
     @property
     def free_pages(self):
@@ -293,7 +318,15 @@ class Scheduler:
         reqs += [r for r in self.active.values() if r.tenant == tenant]
         return len(reqs), sum(self.pages_needed(r) for r in reqs)
 
+    def _discard_swap(self, req: Request) -> None:
+        """Free a swapped-out pending request's host slots — called on
+        every path that terminates it before re-admission."""
+        if req.swap is not None and self.swap is not None:
+            self.swap.discard(req.swap)
+            req.swap = None
+
     def _shed(self, req: Request, reason: str) -> None:
+        self._discard_swap(req)
         req.status = RequestStatus.SHED
         req.fail_reason = reason
         self.stats["shed"] += 1
@@ -330,6 +363,22 @@ class Scheduler:
                 f"request {req.rid}: tenant {req.tenant!r} worst-case "
                 f"footprint {n_pages}+{self.pages_needed(req)} pages "
                 f"exceeds quota {self.tenant_page_quota}")
+        if self.swap is not None:
+            # two-tier admission accounting: the worst-case footprint of
+            # everything committed (pending + active + swapped-out) must
+            # fit HBM pool + host slot budget combined — beyond that the
+            # request could neither run nor park, so shed it now.
+            cap = (self.n_pages - 1) + self.swap.host_pages
+            committed = sum(self.pages_needed(r) for r in self.pending) \
+                + sum(self.pages_needed(r) for r in self.active.values())
+            if committed + self.pages_needed(req) > cap:
+                self._shed(req, reasons.HOST_BUDGET)
+                raise ShedError(
+                    reasons.HOST_BUDGET, req.rid,
+                    f"request {req.rid}: {committed}+"
+                    f"{self.pages_needed(req)} worst-case pages exceeds "
+                    f"the two-tier capacity {cap} ({self.n_pages - 1} "
+                    f"pool + {self.swap.host_pages} host slots)")
         if self.max_pending is not None \
                 and len(self.pending) >= self.max_pending:
             victim = None
@@ -453,6 +502,45 @@ class Scheduler:
             self.prefix_cache.quarantine(self.alloc)
             return None
 
+    def _ensure_resident(self, hit):
+        """Fault a host-resident hit's pages back onto device BEFORE the
+        admission accounting sees it, so block tables only ever hold real
+        page ids. Returns the hit (now fully device-resident) or None —
+        the cold-admission fallback, taken when the tier is missing, the
+        fault-in pages cannot be found, or an injected ``page_alloc`` /
+        ``swap_in`` fault fires. Cold admission is always correct and the
+        host copy stays intact for the next attempt."""
+        n_fault = sum(1 for p in hit.pages if p < 0)
+        if hit.exact and hit.record.page is not None \
+                and hit.record.page < 0:
+            n_fault += 1
+        if n_fault == 0:
+            return hit
+        if self.swap is None:
+            return None
+        if n_fault > self.alloc.n_free and self.prefix_cache is not None:
+            # pin the hit's own path so the reclaim sweep cannot demote
+            # or evict the very entry being promoted
+            self.prefix_cache.pin(hit.node)
+            self.prefix_cache.reclaim(self.alloc,
+                                      n_fault - self.alloc.n_free)
+            self.prefix_cache.unpin(hit.node)
+        if n_fault > self.alloc.n_free:
+            return None
+        try:
+            pages = self.alloc.alloc(n_fault)
+        except InjectedFault:
+            return None
+        try:
+            self.swap.promote_hit(hit, pages)
+        except InjectedFault:
+            # promote_hit demoted the index back in place; the fresh
+            # pages were never written, so just return them
+            for p in pages:
+                self.alloc.decref(p)
+            return None
+        return hit
+
     def admit(self) -> List[Request]:
         """Admit the highest-priority pending class FCFS while a lane and
         the UNSHARED page budget are free. Head-of-line blocking WITHIN a
@@ -486,7 +574,12 @@ class Scheduler:
             except ShedError:
                 self.pending.remove(head)
                 raise
-            hit = self._lookup(head.effective_prompt)
+            # a swap-resume restores its own byte-exact pages — the index
+            # walk would at best duplicate them, so skip it entirely
+            hit = None if head.swap is not None \
+                else self._lookup(head.effective_prompt)
+            if hit is not None:
+                hit = self._ensure_resident(hit)
             shared = list(hit.pages) if hit is not None else []
             private_need = need - len(shared)
 
@@ -533,6 +626,7 @@ class Scheduler:
             except InjectedFault as e:
                 if hit is not None:
                     _drop()
+                self._discard_swap(head)
                 self.pending.remove(head)
                 head.status = RequestStatus.FAILED
                 head.fail_reason = reasons.format_reason(reasons.INJECTED, e.site)
@@ -578,12 +672,33 @@ class Scheduler:
         return req
 
     def evict(self, lane: int) -> Request:
+        # capture BEFORE _release: swap-out needs req.pages and the live
+        # lane mirrors; a failed capture (host budget, injected fault)
+        # falls back to the recompute-preempt contract unchanged
+        req = self.active[lane]
+        rec = self.swap.capture(req) if self.swap is not None else None
         req = self._release(lane)
         req.status = RequestStatus.PREEMPTED
-        req.preemptions += 1
+        if rec is not None:
+            req.swap = rec
+            req.preempt_swap += 1
+            self.stats["preempt_swap"] += 1
+        else:
+            req.preempt_recompute += 1
+            self.stats["preempt_recompute"] += 1
         self.pending.appendleft(req)     # preempted work resumes first
         self.stats["preemptions"] += 1
         return req
+
+    def swap_resume_failed(self, req: Request) -> None:
+        """Reclassify a preemption whose swap-resume hit an injected
+        ``swap_in`` fault: the session falls through to the recompute
+        prefill path, so the end-to-end counters must say recompute —
+        they report the mechanism that actually produced the tokens."""
+        req.preempt_swap -= 1
+        req.preempt_recompute += 1
+        self.stats["preempt_swap"] -= 1
+        self.stats["preempt_recompute"] += 1
 
     def fail(self, lane: int, reason: str) -> Request:
         """Contain a fault into the lane's request: release lane + pages
@@ -656,6 +771,7 @@ class Scheduler:
             self._release(req.lane)
         elif req in self.pending:
             self.pending.remove(req)
+            self._discard_swap(req)   # cancelled before resume: free slots
         else:
             return False
         req.status = RequestStatus.CANCELLED

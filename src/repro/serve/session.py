@@ -71,6 +71,7 @@ from .prefix_cache import PrefixCache
 from .sampling import logits_all_finite, sample_tokens
 from .scheduler import (TERMINAL, Request, RequestStatus, SamplingParams,
                         Scheduler)
+from .swap import SwapBridge, SwapManager
 
 
 def _default_bucket(S: int, floor: int = 8) -> int:
@@ -127,12 +128,25 @@ class RequestHandle:
 
     @property
     def preemptions(self) -> int:
-        """Times this request was evicted and resumed by recompute —
-        nonzero means its stream is oracle-consistent for the EFFECTIVE
-        prompt at each resume, not bit-equal to an uninterrupted run
-        (the documented recompute contract). Stream-identity consumers
-        (traffic replay) skip such requests."""
+        """Total times this request was evicted (swap + recompute)."""
         return self._req.preemptions
+
+    @property
+    def preempt_swap(self) -> int:
+        """Evictions resumed by host-RAM page swap: the restored bytes
+        are identical, so the stream stays BIT-identical to an
+        uninterrupted run — swap-resumed streams need no special
+        handling from identity consumers."""
+        return self._req.preempt_swap
+
+    @property
+    def preempt_recompute(self) -> int:
+        """Evictions resumed by recompute — nonzero means the stream is
+        oracle-consistent for the EFFECTIVE prompt at each resume, not
+        bit-equal to an uninterrupted run (the documented recompute
+        contract). Stream-identity consumers (traffic replay) skip
+        such requests."""
+        return self._req.preempt_recompute
 
     def tokens(self) -> Iterator[int]:
         """Yield this request's tokens as decode segments complete.
@@ -203,7 +217,8 @@ class ServeSession:
                  tenant_lane_quota: Optional[int] = None,
                  faults: Optional[FaultInjector] = None,
                  audit: bool = False, clock=None,
-                 hit_first: bool = True):
+                 hit_first: bool = True,
+                 host_page_budget: Optional[int] = None):
         """Overload/robustness knobs (all default off — the pre-hardening
         behavior): ``max_pending`` bounds the submit queue (overflow sheds
         with ``ShedError``), ``tenant_*_quota`` bound each tenant's
@@ -211,7 +226,12 @@ class ServeSession:
         set ``REPRO_FAULTS`` in the env — chaos mode), ``audit=True`` runs
         the allocator + prefix-index invariant audit after every step,
         ``clock`` (→ wall milliseconds, default ``time.monotonic``) is the
-        deadline clock — injectable so tests drive time by hand."""
+        deadline clock — injectable so tests drive time by hand.
+        ``host_page_budget`` attaches the host-RAM swap tier
+        (serve/swap.py): that many host page slots back swap-out
+        preemption (bit-exact resume), prefix-cache demotion, and index
+        persistence across ``close()`` — and admission accounts BOTH
+        tiers (``host-budget`` sheds)."""
         if segment < 1 or page_size < 1 or lanes < 1:
             raise ValueError("segment, page_size and lanes must be >= 1")
         self.engine = engine
@@ -233,12 +253,40 @@ class ServeSession:
         self._clock = clock if clock is not None \
             else (lambda: time.monotonic() * 1000.0)
         self._est_admit_ms = 0.0    # EMA of admission+prefill wall time
+        self.swap_mgr = None
+        self._swap = None
+        self._store_key = None
+        if host_page_budget is not None:
+            if getattr(engine, "mesh", None) is not None:
+                raise NotImplementedError(
+                    "host_page_budget under a serve mesh is not supported "
+                    "yet: sharded attention leaves need per-shard host "
+                    "slices (ROADMAP follow-up)")
+            if host_page_budget < 0:
+                raise ValueError("host_page_budget must be >= 0")
+            # a same-geometry index parked by a previous session's close()
+            # is ADOPTED — its host-resident entries (and their slots)
+            # carry over; the bridge below rebinds it to this session
+            self._store_key = ("pfx", page_size, int(host_page_budget))
+            parked = engine._prefix_store.pop(self._store_key, None) \
+                if self.prefix is not None else None
+            if parked is not None:
+                self.prefix, self.swap_mgr = parked
+                self.swap_mgr.faults = self.faults
+            else:
+                self.swap_mgr = SwapManager(engine.cfg,
+                                            int(host_page_budget),
+                                            faults=self.faults)
+            self._swap = SwapBridge(self, self.swap_mgr)
+            if self.prefix is not None:
+                self.prefix.swap = self._swap
         self.sched = Scheduler(lanes, n_pages, page_size,
                                prefix_cache=self.prefix,
                                max_pending=max_pending,
                                tenant_page_quota=tenant_page_quota,
                                tenant_lane_quota=tenant_lane_quota,
-                               faults=self.faults, hit_first=hit_first)
+                               faults=self.faults, hit_first=hit_first,
+                               swap=self._swap)
         self.key = _raw_key(key) if key is not None else jax.random.PRNGKey(0)
         self.buckets = tuple(sorted(int(b) for b in buckets)) \
             if buckets else None
@@ -324,13 +372,17 @@ class ServeSession:
             pass
 
     def preempt(self, handle: RequestHandle) -> bool:
-        """Evict a live request: its lane and pages free immediately, the
-        request requeues at the FRONT of the queue (status PREEMPTED), and
-        re-admission recomputes its cache by prefilling prompt+emitted.
-        The resumed tail is exactly the stream the engine would serve for
-        that effective prompt fresh (see scheduler.py on why recompute is
-        oracle-consistent rather than bit-equal to the uninterrupted
-        stream under Boolean numerics)."""
+        """Evict a live request: its lane and pages free immediately and
+        the request requeues at the FRONT of the queue (status PREEMPTED).
+        With the swap tier (``host_page_budget=``) its page bytes + lane
+        state park on host and re-admission restores them — the resumed
+        greedy stream is BIT-identical to the uninterrupted one. Without
+        the tier (or when it cannot take the pages) re-admission
+        recomputes the cache by prefilling prompt+emitted; the resumed
+        tail is exactly the stream the engine would serve for that
+        effective prompt fresh (see scheduler.py on why recompute is
+        oracle-consistent rather than bit-equal under Boolean
+        numerics)."""
         req = handle._req
         if req.lane < 0 or self.sched.active.get(req.lane) is not req:
             return False
@@ -378,6 +430,16 @@ class ServeSession:
                                               external_pins=dict(pins))
         out["alloc"] = self.sched.alloc.audit(holds=dict(holds))
         out["sched"] = dict(self.sched.stats)
+        if self.swap_mgr is not None:
+            slots: Counter = Counter()  # slot -> holders, from their books
+            for req in self.sched.pending:
+                if req.swap is not None:
+                    for sl in req.swap.slots:
+                        slots[sl] += 1
+            if self.prefix is not None:
+                for sl in self.prefix._host_slot_iter():
+                    slots[sl] += 1
+            out["swap"] = self.swap_mgr.audit(dict(slots))
         return out
 
     def stats(self) -> dict:
@@ -396,6 +458,8 @@ class ServeSession:
                      "n_owned": alloc.n_pages - 1 - alloc.n_free},
             "prefix": dict(self.prefix.stats)
             if self.prefix is not None else None,
+            "swap": self.swap_mgr.stats_dict()
+            if self.swap_mgr is not None else None,
         }
 
     @property
@@ -404,11 +468,19 @@ class ServeSession:
 
     def close(self) -> None:
         """Cancel anything outstanding and return the paged pool to the
-        engine's cache pool for the next session of this geometry."""
+        engine's cache pool for the next session of this geometry. With
+        the swap tier + prefix cache, the index is first demoted WHOLE to
+        host and parked on the engine — the next same-geometry session
+        adopts it, so the prefix cache survives pool hand-back."""
         if self._closed:
             return
         for h in list(self._handles.values()):
             h.cancel()
+        if self._swap is not None and self.prefix is not None \
+                and not self.prefix.quarantined:
+            self.prefix.demote_all(self.sched.alloc)
+            self.engine._prefix_store[self._store_key] = (self.prefix,
+                                                          self.swap_mgr)
         if self._pool is not None:
             self.engine._caches.put(self._pool_key, self._pool)
             self._pool = None
@@ -585,6 +657,32 @@ class ServeSession:
                                               and o > 0)}
         return logits
 
+    def _resume_swapped(self, req: Request) -> bool:
+        """Swap-resume a re-admitted preempted request: scatter its host
+        slots into the freshly granted pages, restore the lane mirrors
+        captured at eviction, and continue decoding — the resumed stream
+        is bit-identical to the uninterrupted one. False = an injected
+        ``swap_in`` fault fired: the record is discarded (host slots
+        freed), the preemption reclassified as recompute, and the caller
+        falls through to the recompute prefill path, which is always
+        correct."""
+        rec, req.swap = req.swap, None
+        if self.faults is not None and self.faults.should_fire("swap_in"):
+            self._swap.discard(rec)
+            self.sched.swap_resume_failed(req)
+            return False
+        self._swap.restore(req, rec)
+        lane = req.lane
+        self._bt[lane] = 0
+        self._bt[lane, :len(req.pages)] = req.pages
+        self._pos[lane] = rec.pos
+        self._cur[lane, 0] = rec.cur
+        self._steps[lane] = rec.steps
+        self._temps[lane] = req.params.temperature
+        self._keys[lane] = self._lane_key(req)
+        req.status = RequestStatus.DECODING
+        return True
+
     def _admit_and_prefill(self):
         """Pop pending requests into free lanes, produce each one's
         end-of-prompt logits (full prefill, tail prefill, or an exact-hit
@@ -601,6 +699,10 @@ class ServeSession:
         for req in self.sched.drain_faulted() + self.sched.drain_shed():
             self._handles.pop(req.rid, None)
         for req in admitted:
+            if req.swap is not None and self._resume_swapped(req):
+                # bytes + lane state restored; decode continues exactly
+                # where it stopped — no prefill, no token emitted here
+                continue
             eff = req.effective_prompt
             S = int(eff.shape[0])
             try:

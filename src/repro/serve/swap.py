@@ -1,0 +1,481 @@
+"""Host-RAM page-swap tier: the memory hierarchy below the HBM paged pool.
+
+BOLD's complexity model says serving cost is data movement across the
+memory hierarchy, not arithmetic — so the stack's effective capacity
+should be bounded by HOST memory, not by the HBM page pool. This module
+is that tier: a pinned host buffer pool mirroring the device pool's
+attention page leaves, plus the device<->host copy machinery, so that
+
+  * PREEMPTION swaps a victim's page BYTES out instead of discarding
+    them — resume restores the identical bytes and the resumed greedy
+    stream is BIT-identical to the uninterrupted one. Recompute-resume
+    can never promise that: prefill-computed and decode-computed rows
+    differ by bf16 reduction order and ``sign()`` amplifies the ulps
+    into token flips. Byte-preserving swap is the only bit-exact resume
+    under Boolean numerics (tests/test_swap_tier.py pins it), and
+    recompute stays as the explicit fallback when the host budget is
+    exhausted;
+  * the PREFIX INDEX demotes cold unpinned pages to host under LRU
+    pressure instead of evicting them — a host-resident hit faults its
+    pages back in at admission (a few page copies, no prefill) and
+    serves bytes identical to the cold run, making the effective prefix
+    cache host-RAM-sized;
+  * the index SURVIVES ``CachePool`` hand-back: ``close()`` demotes the
+    whole index to host and parks it on the engine; the next session of
+    the same geometry adopts it against a fresh allocator.
+
+RESIDENCY ENCODING: a host-resident page is referenced *in place* by the
+existing page-id lists (radix-node runs, record boundary pages) as the
+negative id ``-(slot + 1)`` — ``len(key) == len(pages) * page_size`` and
+node checksums keep holding, allocator-facing code never sees a negative
+id (promotion rewrites them before any block table is built), and the
+audits cross-check slots exactly like device pages.
+
+COPY PATH: gathers/scatters are tiny jitted fns bucketed by page count
+(pow-2, bounding compiles at O(log pool)). The default path is
+double-buffered: page chunks pipeline so the NEXT chunk's device gather
+is dispatched before the CURRENT chunk's host copy blocks on it (jax
+async dispatch overlaps them — the same overlap pattern as the Pallas
+kernels' page-DMA loop, carried from the PR 5 follow-ups). Setting
+``REPRO_SWAP_DMA=0`` falls back to one plain ``device_get``/``device_put``
+round trip; both paths are pinned byte-identical. Scatter pads with the
+garbage page 0, whose bytes are never live (positions mask it), so
+bucketing costs no correctness.
+
+SSM state is lane-indexed, never paged: preemption captures the mamba
+(h, conv) lane state alongside the page bytes in the ``SwapRecord`` and
+restores it with a donating lane write at resume. For pure-SSM configs
+the page bytes are empty and the record IS the state — the same machinery
+serves every model family.
+
+FAULT SITES (serve/faults.py): ``swap_out`` / ``swap_in`` are polled by
+the bridge before any pool movement, ``host_pool`` inside slot
+allocation. Containment is by FALLBACK, never a victim: a failed
+swap-out preempts by recompute, a failed swap-in at resume falls back to
+the recompute prefill path, a failed fault-in at admission falls back to
+cold admission — all always-correct paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.models import block_roles
+
+from .faults import InjectedFault
+
+
+class HostBudgetExceeded(RuntimeError):
+    """The host slot pool cannot cover the requested pages. Callers fall
+    back to the always-correct paths (recompute resume, plain eviction,
+    cold admission) — never an error the request sees."""
+
+
+def encode_slot(slot: int) -> int:
+    """Host slot -> negative in-place page id."""
+    return -(slot + 1)
+
+
+def decode_slot(page_id: int) -> int:
+    """Negative in-place page id -> host slot."""
+    assert page_id < 0, page_id
+    return -page_id - 1
+
+
+@dataclasses.dataclass
+class SwapRecord:
+    """Everything a preempted request needs to resume bit-exactly:
+    its page bytes (as host slots, logical order), the lane mirrors at
+    the segment boundary, and the mamba lane state (host tree, or None
+    for attention-only configs)."""
+    slots: List[int]
+    pos: int                        # _pos[lane] at capture
+    steps: int                      # _steps[lane] at capture
+    cur: int                        # _cur[lane, 0] — last emitted token
+    ssm: Any                        # host {bi: state} tree | None
+
+
+def _bucket(n: int) -> int:
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
+
+
+class SwapManager:
+    """The host tier itself: slot bookkeeping + device<->host copies.
+
+    Host storage is lazily shaped from the first gathered chunk (one
+    numpy buffer per attention pool leaf, ``(budget,) + per-page shape``)
+    — pure-SSM configs shape to an empty tree and the tier degenerates
+    to slot accounting, which is exactly right: their swappable state
+    rides the ``SwapRecord``'s lane tree.
+    """
+
+    #: pages per pipelined copy chunk on the double-buffered path.
+    CHUNK = 8
+
+    def __init__(self, cfg, host_pages: int, faults=None,
+                 dma: Optional[bool] = None):
+        if host_pages < 0:
+            raise ValueError("host_pages must be >= 0")
+        self.cfg = cfg
+        self.host_pages = int(host_pages)
+        self.faults = faults
+        if dma is None:
+            dma = os.environ.get("REPRO_SWAP_DMA", "1") != "0"
+        self.dma = bool(dma)
+        self._attn = [f"b{i}" for i, r in enumerate(block_roles(cfg))
+                      if r["mixer"] != "mamba"]
+        self._mamba = [f"b{i}" for i, r in enumerate(block_roles(cfg))
+                       if r["mixer"] == "mamba"]
+        self._free: deque = deque(range(self.host_pages))
+        self._used: set = set()
+        self._host: Optional[Dict[str, Dict[str, np.ndarray]]] = None
+        self._fns: Dict[Any, Any] = {}      # (kind, bucket) -> jitted fn
+        self.page_bytes = 0                 # known after first shaping
+        self.stats = {"swap_outs": 0, "swap_ins": 0,
+                      "swap_out_bytes": 0, "swap_in_bytes": 0,
+                      "slot_alloc_failures": 0}
+
+    # -- slot bookkeeping ----------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._used)
+
+    def alloc_slots(self, n: int) -> List[int]:
+        """Take ``n`` host slots. Atomic like ``PageAllocator.alloc``: the
+        ``host_pool`` fault site and the budget check both fire BEFORE the
+        free list moves, so a failed grant leaves nothing to unwind."""
+        if self.faults is not None and n > 0 \
+                and self.faults.should_fire("host_pool"):
+            raise InjectedFault("host_pool", f"alloc_slots({n})")
+        if n > len(self._free):
+            self.stats["slot_alloc_failures"] += 1
+            raise HostBudgetExceeded(
+                f"need {n} host slots, {len(self._free)} free "
+                f"of {self.host_pages}")
+        slots = [self._free.popleft() for _ in range(n)]
+        self._used.update(slots)
+        return slots
+
+    def free_slots(self, slots) -> None:
+        for s in slots:
+            if s in self._used:
+                self._used.discard(s)
+                self._free.append(s)
+
+    def audit(self, claimed: Optional[Dict[int, int]] = None) -> dict:
+        """Slot invariants; ``claimed`` is a {slot: holders} census from
+        the holders' own books (swapped-out pending requests + the
+        prefix index's host-resident entries). Raises on a slot leaked,
+        double-claimed, or simultaneously free and used."""
+        if self._used & set(self._free):
+            raise RuntimeError("swap audit: slot both used and free")
+        if len(self._used) + len(self._free) != self.host_pages:
+            raise RuntimeError(
+                f"swap audit: used {len(self._used)} + free "
+                f"{len(self._free)} != budget {self.host_pages}")
+        if claimed is not None:
+            for s, n in claimed.items():
+                if n != 1:
+                    raise RuntimeError(
+                        f"swap audit: slot {s} claimed by {n} holders")
+            if set(claimed) != self._used:
+                leak = self._used - set(claimed)
+                ghost = set(claimed) - self._used
+                raise RuntimeError(
+                    f"swap audit: leaked slots {sorted(leak)}, "
+                    f"unbacked claims {sorted(ghost)}")
+        return {"host_pages": self.host_pages, "used": len(self._used),
+                "free": len(self._free)}
+
+    def stats_dict(self) -> dict:
+        out = dict(self.stats)
+        out.update({"host_pages": self.host_pages,
+                    "host_used": len(self._used),
+                    "host_free": len(self._free),
+                    "page_bytes": self.page_bytes})
+        return out
+
+    # -- jitted copy fns -----------------------------------------------------
+    def _gather_fn(self, b: int):
+        key = ("gather", b)
+        fn = self._fns.get(key)
+        if fn is None:
+            import jax
+
+            def gather(attn, ids):
+                return jax.tree.map(lambda l: l[:, ids], attn)
+
+            fn = self._fns[key] = jax.jit(gather)
+        return fn
+
+    def _scatter_fn(self, b: int):
+        key = ("scatter", b)
+        fn = self._fns.get(key)
+        if fn is None:
+            import jax
+
+            def scatter(attn, chunk, ids):
+                return jax.tree.map(
+                    lambda l, h: l.at[:, ids].set(h.astype(l.dtype)),
+                    attn, chunk)
+
+            fn = self._fns[key] = jax.jit(scatter, donate_argnums=(0,))
+        return fn
+
+    def _lane_in_fn(self):
+        key = ("lane_in",)
+        fn = self._fns.get(key)
+        if fn is None:
+            import jax
+
+            def lane_in(mblocks, state, lane):
+                return jax.tree.map(
+                    lambda l, s: l.at[:, lane].set(s.astype(l.dtype)),
+                    mblocks, state)
+
+            fn = self._fns[key] = jax.jit(lane_in, donate_argnums=(0,))
+        return fn
+
+    # -- host buffer shaping -------------------------------------------------
+    def _ensure_host(self, chunk_tree) -> None:
+        """Shape the host buffers from a gathered chunk: device leaf
+        ``(G, B, page, ...)`` -> host buffer ``(budget, G, page, ...)``."""
+        if self._host is not None:
+            return
+        self._host = {}
+        nbytes = 0
+        for bi, leaves in chunk_tree.items():
+            self._host[bi] = {}
+            for name, a in leaves.items():
+                shp = (self.host_pages, a.shape[0]) + a.shape[2:]
+                self._host[bi][name] = np.zeros(shp, dtype=a.dtype)
+                nbytes += int(np.prod(shp[1:])) * a.dtype.itemsize
+        self.page_bytes = nbytes
+
+    def _chunks(self, seq: List[int]) -> List[List[int]]:
+        if not self.dma or len(seq) <= 1:
+            return [list(seq)]
+        c = self.CHUNK
+        return [list(seq[i:i + c]) for i in range(0, len(seq), c)]
+
+    # -- device -> host ------------------------------------------------------
+    def swap_out(self, pool, page_ids: List[int]) -> List[int]:
+        """Copy ``page_ids``' bytes (every attention leaf) into fresh host
+        slots; returns the slots in the same logical order. Non-donating:
+        the pool is only read. Double-buffered: the next chunk's gather
+        dispatches before the current chunk's host fetch blocks, so the
+        copies overlap (``dma=False`` collapses to one gather + one
+        ``device_get`` — byte-identical)."""
+        import jax
+
+        slots = self.alloc_slots(len(page_ids))
+        if not page_ids or not self._attn:
+            self.stats["swap_outs"] += 1
+            return slots
+        attn = {bi: pool[bi] for bi in self._attn}
+        fetched = []                    # (ids_chunk, slots_chunk, host tree)
+        prev = None
+        for ch in self._chunks(list(page_ids)):
+            b = _bucket(len(ch))
+            ids = np.zeros((b,), np.int32)
+            ids[:len(ch)] = ch          # pad with garbage page 0: dead bytes
+            dev = self._gather_fn(b)(attn, ids)
+            if prev is not None:        # fetch overlaps this chunk's gather
+                fetched.append((prev[0], jax.device_get(prev[1])))
+            prev = (len(ch), dev)
+        fetched.append((prev[0], jax.device_get(prev[1])))
+        j = 0
+        for n, host in fetched:
+            self._ensure_host(host)
+            for bi, leaves in host.items():
+                for name, a in leaves.items():
+                    for k in range(n):
+                        self._host[bi][name][slots[j + k]] = a[:, k]
+            j += n
+        self.stats["swap_outs"] += 1
+        self.stats["swap_out_bytes"] += self.page_bytes * len(page_ids)
+        return slots
+
+    # -- host -> device ------------------------------------------------------
+    def swap_in(self, pool, slots: List[int], page_ids: List[int],
+                free: bool = True):
+        """Scatter host ``slots``' bytes into device ``page_ids`` (same
+        logical order), DONATING the pool's attention leaves; returns the
+        new pool dict. Chunked scatters chain through the donated pool —
+        the natural double-buffer. ``free=True`` releases the slots once
+        the bytes are back on device."""
+        assert len(slots) == len(page_ids), (slots, page_ids)
+        if not page_ids or not self._attn or self._host is None:
+            if free:
+                self.free_slots(slots)
+            self.stats["swap_ins"] += 1
+            return pool
+        pool = dict(pool)
+        pairs = list(zip(slots, page_ids))
+        for ch in self._chunks(pairs):
+            b = _bucket(len(ch))
+            ids = np.zeros((b,), np.int32)
+            ids[:len(ch)] = [p for _, p in ch]   # pad -> garbage page 0
+            chunk = {}
+            for bi in self._attn:
+                chunk[bi] = {}
+                for name, buf in self._host[bi].items():
+                    a = np.stack([buf[s] for s, _ in ch], axis=1)
+                    if b > len(ch):
+                        pad = [(0, 0), (0, b - len(ch))] \
+                            + [(0, 0)] * (a.ndim - 2)
+                        a = np.pad(a, pad)
+                    chunk[bi][name] = a
+            attn = {bi: pool[bi] for bi in self._attn}
+            pool.update(self._scatter_fn(b)(attn, chunk, ids))
+        if free:
+            self.free_slots(slots)
+        self.stats["swap_ins"] += 1
+        self.stats["swap_in_bytes"] += self.page_bytes * len(page_ids)
+        return pool
+
+    def read_slots(self, slots: List[int]):
+        """Host bytes of ``slots`` (tests / diagnostics): {bi: {leaf:
+        (n, G, page, ...)}} — no device work."""
+        if self._host is None:
+            return {}
+        return {bi: {name: buf[np.asarray(slots, np.int64)]
+                     for name, buf in leaves.items()}
+                for bi, leaves in self._host.items()}
+
+    # -- mamba lane state ----------------------------------------------------
+    def lane_state_out(self, pool, lane: int):
+        """Snapshot the mamba lane state to host; None for attention-only
+        configs. O(1) state — the one host sync preemption pays."""
+        if not self._mamba:
+            return None
+        import jax
+
+        return jax.device_get(
+            {bi: jax.tree.map(lambda l: l[:, lane], pool[bi])
+             for bi in self._mamba})
+
+    def lane_state_in(self, pool, state, lane: int):
+        """Write a captured lane state back (donating the mamba leaves);
+        returns the new pool dict."""
+        if state is None or not self._mamba:
+            return pool
+        import jax
+        import jax.numpy as jnp
+
+        pool = dict(pool)
+        mblocks = {bi: pool[bi] for bi in self._mamba}
+        pool.update(self._lane_in_fn()(
+            mblocks, state, jnp.asarray(lane, jnp.int32)))
+        return pool
+
+    def to_host(self, tree):
+        """Materialize a device tree as host numpy (identity on host
+        trees) — record payloads crossing a session hand-back."""
+        if tree is None:
+            return None
+        import jax
+
+        return jax.device_get(tree)
+
+
+class SwapBridge:
+    """The session-side executor the (jax-free) scheduler and prefix
+    cache drive the tier through: it owns fault polling (always BEFORE
+    the pool moves) and the containment-by-fallback conversions, so its
+    callers only ever see "worked" or "use the fallback path".
+    """
+
+    def __init__(self, session, mgr: SwapManager):
+        self._session = session
+        self.mgr = mgr
+
+    @property
+    def host_pages(self) -> int:
+        return self.mgr.host_pages
+
+    # -- preemption ----------------------------------------------------------
+    def capture(self, req) -> Optional[SwapRecord]:
+        """Swap a victim's full page set + lane state out to host at
+        eviction. None → recompute fallback (budget exhausted or an
+        injected ``swap_out``/``host_pool`` fault — both contained with
+        no victim: recompute resume is always correct)."""
+        s = self._session
+        if s.faults is not None and s.faults.should_fire("swap_out"):
+            return None
+        s._ensure_pool()
+        try:
+            slots = self.mgr.swap_out(s._pool, list(req.pages))
+        except (HostBudgetExceeded, InjectedFault):
+            return None
+        lane = req.lane
+        return SwapRecord(
+            slots=slots,
+            pos=int(s._pos[lane]), steps=int(s._steps[lane]),
+            cur=int(s._cur[lane, 0]),
+            ssm=self.mgr.lane_state_out(s._pool, lane))
+
+    def restore(self, req, rec: SwapRecord) -> None:
+        """Scatter a captured request's bytes into its freshly allocated
+        pages + lane. Caller (``_resume_swapped``) polls the ``swap_in``
+        fault site first, so by here the copy is committed."""
+        s = self._session
+        assert len(rec.slots) == len(req.pages), (rec.slots, req.pages)
+        pool = self.mgr.swap_in(s._take_pool(), rec.slots, list(req.pages))
+        pool = self.mgr.lane_state_in(pool, rec.ssm, req.lane)
+        s._pool = pool
+
+    def discard(self, rec: SwapRecord) -> None:
+        self.mgr.free_slots(rec.slots)
+
+    def free_slots(self, slots) -> None:
+        self.mgr.free_slots(slots)
+
+    # -- prefix index --------------------------------------------------------
+    def demote(self, page_ids: List[int]) -> Optional[List[int]]:
+        """Copy index-owned device pages to host slots (the reclaim /
+        close demotion). None → plain-eviction fallback. Does NOT decref
+        — allocator bookkeeping stays with the caller."""
+        s = self._session
+        if s.faults is not None and s.faults.should_fire("swap_out"):
+            return None
+        s._ensure_pool()
+        try:
+            return self.mgr.swap_out(s._pool, list(page_ids))
+        except (HostBudgetExceeded, InjectedFault):
+            return None
+
+    def promote_hit(self, hit, pages: List[int]) -> None:
+        """Fault a host-resident hit back in: rewrite the index path onto
+        ``pages`` and scatter the slot bytes into them. On an injected
+        ``swap_in`` fault the index is demoted BACK (slots were not yet
+        freed) and the fault re-raised — the scheduler falls back to cold
+        admission with the host copy intact."""
+        s = self._session
+        prefix = s.prefix
+        plan = prefix.promote(hit, pages)   # [(slot, page)], path rewritten
+        if s.faults is not None and s.faults.should_fire("swap_in"):
+            prefix.demote_back(hit, plan)
+            raise InjectedFault("swap_in", f"promote({len(plan)} pages)")
+        pool = self.mgr.swap_in(s._take_pool(),
+                                [sl for sl, _ in plan],
+                                [p for _, p in plan])
+        s._pool = pool
+        prefix.stats["promoted_pages"] += len(plan)
+
+    def to_host(self, tree):
+        return self.mgr.to_host(tree)
+
+    def stats_dict(self) -> dict:
+        return self.mgr.stats_dict()

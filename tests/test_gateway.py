@@ -149,7 +149,9 @@ def test_sse_stream_matches_sequential(arch, packed, quant):
             np.testing.assert_array_equal(np.asarray(toks, np.int32), refs[i])
             assert terminals == [("end", {"status": "done",
                                           "tokens": ntoks[i],
-                                          "preempted": 0})]
+                                          "preempted": 0,
+                                          "preempted_swap": 0,
+                                          "preempted_recompute": 0})]
     finally:
         srv.stop()
         gw.close()
@@ -461,3 +463,117 @@ def test_parse_generate_body():
     for bad in ("x", {}, {"prompt": [0.5]}, {"prompt": [1], "nope": 2}):
         with pytest.raises(ValueError):
             parse_generate_body(bad if isinstance(bad, dict) else bad)
+
+
+# ---------------------------------------------------------------------------
+# 6. HTTP/1.1 keep-alive: scrape endpoints reuse one connection
+# ---------------------------------------------------------------------------
+def _raw_request(sock, path, extra_headers=""):
+    """One GET on an already-open socket; returns (status, headers, body).
+    Reads exactly Content-Length body bytes so the socket stays usable."""
+    import socket as _socket
+    sock.sendall((f"GET {path} HTTP/1.1\r\nHost: t\r\n"
+                  f"{extra_headers}\r\n").encode())
+    buf = b""
+    while b"\r\n\r\n" not in buf:
+        chunk = sock.recv(4096)
+        if not chunk:
+            raise ConnectionError("server closed before response head")
+        buf += chunk
+    head, _, rest = buf.partition(b"\r\n\r\n")
+    lines = head.decode().split("\r\n")
+    status = int(lines[0].split()[1])
+    headers = {k.strip().lower(): v.strip() for k, v in
+               (ln.split(":", 1) for ln in lines[1:])}
+    clen = int(headers["content-length"])
+    while len(rest) < clen:
+        chunk = sock.recv(4096)
+        if not chunk:
+            raise ConnectionError("server closed mid-body")
+        rest += chunk
+    return status, headers, rest[:clen].decode()
+
+
+def test_keepalive_reuses_one_connection():
+    """A Prometheus scraper's pattern: many GETs down ONE HTTP/1.1
+    connection. Every response must carry Connection: keep-alive and the
+    socket must survive across requests; a request carrying
+    ``Connection: close`` is honored with close + EOF."""
+    import socket
+
+    engine, _ = _engine()
+    gw, srv, host, port = _boot(engine, lanes=2, page_size=4)
+    try:
+        with socket.create_connection((host, port), timeout=30) as sock:
+            for path in ("/healthz", "/metrics", "/healthz", "/metrics"):
+                status, headers, body = _raw_request(sock, path)
+                assert status == 200
+                assert headers["connection"] == "keep-alive"
+                assert body
+            # Connection: close is honored: response then EOF
+            status, headers, _ = _raw_request(
+                sock, "/healthz", "Connection: close\r\n")
+            assert status == 200
+            assert headers["connection"] == "close"
+            sock.settimeout(10)
+            assert sock.recv(1) == b""      # server closed its side
+    finally:
+        srv.stop()
+        gw.close()
+
+
+def test_http10_connections_close():
+    """Pre-1.1 clients get one response per connection (no implicit
+    keep-alive), and SSE streams always close regardless of version."""
+    import socket
+
+    engine, _ = _engine()
+    gw, srv, host, port = _boot(engine, lanes=2, page_size=4)
+    try:
+        with socket.create_connection((host, port), timeout=30) as sock:
+            sock.sendall(b"GET /healthz HTTP/1.0\r\nHost: t\r\n\r\n")
+            buf = b""
+            while True:
+                chunk = sock.recv(4096)
+                if not chunk:
+                    break
+                buf += chunk
+            assert b" 200 " in buf.split(b"\r\n", 1)[0]
+            assert b"connection: close" in buf.lower()
+    finally:
+        srv.stop()
+        gw.close()
+
+
+# ---------------------------------------------------------------------------
+# 7. per-tenant metrics labels under a hard cardinality bound
+# ---------------------------------------------------------------------------
+def test_metrics_tenant_labels_bounded():
+    """Three tenants through a ``max_tenants=2`` registry: the first two
+    get their own ``tenant=`` label on the by-tenant series, the third
+    aggregates under ``tenant="other"`` — and the unlabelled aggregate
+    histogram still counts every request (existing dashboards keep
+    working)."""
+    from repro.gateway import GatewayMetrics
+
+    engine, cfg = _engine()
+    gw, srv, host, port = _boot(engine, lanes=2, page_size=4,
+                                metrics=GatewayMetrics(max_tenants=2))
+    try:
+        for tenant in ("acme", "globex", "initech"):
+            p = RNG.integers(0, cfg.vocab_size, (4,)).astype(np.int32)
+            status, _, _ = _post(host, port, {"prompt": p.tolist(),
+                                              "max_tokens": 2,
+                                              "tenant": tenant})
+            assert status == 200
+        _, text = _get(host, port, "/metrics")
+        assert 'gateway_ttft_by_tenant_seconds_count{tenant="acme"} 1' in text
+        assert ('gateway_ttft_by_tenant_seconds_count{tenant="globex"} 1'
+                in text)
+        assert ('gateway_ttft_by_tenant_seconds_count{tenant="other"} 1'
+                in text)
+        assert "initech" not in text        # bounded: never its own label
+        assert "gateway_ttft_seconds_count 3" in text
+    finally:
+        srv.stop()
+        gw.close()

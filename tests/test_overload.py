@@ -308,8 +308,10 @@ def test_reason_table_wire_strings_are_pinned():
     assert reasons.INJECTED == "injected"
     assert reasons.POOL_LOST == "pool-lost"
     assert reasons.BAD_LOGITS == "bad-logits"
+    assert reasons.HOST_BUDGET == "host-budget"
     assert reasons.SHED_REASONS == {"queue-full", "tenant-quota",
-                                    "page-budget", "deadline"}
+                                    "page-budget", "deadline",
+                                    "host-budget"}
     assert reasons.SHED_REASONS <= reasons.ALL_REASONS
     # prefixed composition round-trips, preserving colons in the detail
     composed = reasons.format_reason(reasons.POOL_LOST, "RuntimeError: x:y")
@@ -328,6 +330,7 @@ def test_reason_table_http_mapping():
     assert reasons.http_for_reason("tenant-quota") == (429, 1)
     assert reasons.http_for_reason("deadline") == (429, 1)
     assert reasons.http_for_reason("page-budget") == (503, None)
+    assert reasons.http_for_reason("host-budget") == (429, 1)
     assert reasons.http_for_reason("some-future-reason") == (503, None)
     assert set(reasons.HTTP_STATUS) == reasons.SHED_REASONS
 

@@ -1,0 +1,530 @@
+"""Tiered KV memory validation (``-m swap``).
+
+The PR contract for the host-RAM page tier, layer by layer:
+
+  1. BYTE identity at the copy layer — ``SwapManager.swap_out`` followed
+     by ``swap_in`` restores pages byte-for-byte across dense, kv-quant,
+     ssm and hybrid pool layouts, and the double-buffered DMA path is
+     byte-identical to the single-copy ``device_get`` fallback
+     (``dma=False``);
+  2. BIT identity at the stream layer — a request preempted mid-decode
+     and resumed through the swap tier emits a token stream bit-equal to
+     the uninterrupted run (recompute-resume cannot promise this: bf16
+     reduction-order ulps are amplified by ``sign()``); host budget
+     exhaustion falls back to recompute EXPLICITLY, split out in
+     ``preempt_swap`` / ``preempt_recompute``;
+  3. the prefix index survives pool pressure — LRU reclaim demotes cold
+     pages to host instead of freeing them, revisits promote them back
+     and serve bit-identically to a cold run, and the host-resident
+     index survives session close and is re-adopted by the next
+     same-geometry session;
+  4. admission accounts BOTH tiers — committed worst-case footprint over
+     device + host capacity sheds with the typed ``host-budget`` reason;
+  5. containment — ``swap_out`` / ``swap_in`` / ``host_pool`` injected
+     faults never fail a request: every one degrades to the recompute or
+     cold-admission path, bit-consistent and audit-clean (binary outcome
+     contract from serve/faults.py);
+  6. allocator + slot invariants hold under randomized churn
+     (property-style seeded interleavings; the session-level churn runs
+     ``audit=True`` so the census is re-checked after every step).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import lm_init
+from repro.serve import (FaultInjector, RequestStatus, SamplingParams,
+                         ServeEngine, ShedError)
+from repro.serve.paged_cache import PageAllocator, paged_pool_init
+from repro.serve.swap import (HostBudgetExceeded, SwapManager, decode_slot,
+                              encode_slot)
+
+pytestmark = pytest.mark.swap
+
+RNG = np.random.default_rng(11)
+
+FAMILIES = [
+    pytest.param("gemma2-2b", False, False, id="dense"),
+    pytest.param("gemma2-2b", True, False, id="packed"),
+    pytest.param("gemma2-2b", False, True, id="kv-quant"),
+    pytest.param("falcon-mamba-7b", False, False, id="ssm"),
+    pytest.param("jamba-1.5-large-398b", False, False, id="hybrid"),
+]
+
+
+def _cfg(arch, quant=False):
+    cfg = get_smoke(arch)
+    if quant:
+        cfg = cfg.scaled(kv_cache_quant=True)
+    return cfg
+
+
+def _engine(arch="gemma2-2b", packed=False, quant=False, max_len=32):
+    cfg = _cfg(arch, quant)
+    params, _ = lm_init(jax.random.PRNGKey(0), cfg)
+    return ServeEngine(cfg, params, max_len=max_len, packed=packed), cfg
+
+
+def _ref(eng, p, n):
+    return np.asarray(eng.generate(jnp.asarray(p[None]), n)[0])
+
+
+def _random_pool(cfg, lanes=2, n_pages=24, page_size=4, seed=3):
+    """A paged pool with every byte randomized — zero-filled pages would
+    make byte-identity assertions vacuous."""
+    pool = paged_pool_init(cfg, lanes, n_pages, page_size)
+    rng = np.random.default_rng(seed)
+    leaves, treedef = jax.tree.flatten(pool)
+    filled = []
+    for a in leaves:
+        if jnp.issubdtype(a.dtype, jnp.floating):
+            filled.append(jnp.asarray(
+                rng.standard_normal(a.shape).astype(a.dtype)))
+        else:
+            info = jnp.iinfo(a.dtype)
+            filled.append(jnp.asarray(rng.integers(
+                max(info.min, -100), min(info.max, 100), a.shape,
+            ).astype(a.dtype)))
+    return jax.tree.unflatten(treedef, filled)
+
+
+def _page_bytes(mgr, pool, pages):
+    """Device bytes of ``pages`` across attention leaves, as host numpy
+    shaped like ``read_slots`` output: {bi: {leaf: (n, G, page, ...)}}."""
+    out = {}
+    for bi in mgr._attn:
+        out[bi] = {name: np.stack(
+            [np.asarray(leaf[:, p]) for p in pages])
+            for name, leaf in pool[bi].items()}
+    return out
+
+
+def _assert_tree_equal(a, b):
+    for bi in a:
+        for name in a[bi]:
+            np.testing.assert_array_equal(a[bi][name], b[bi][name])
+
+
+# ---------------------------------------------------------------------------
+# 1. byte identity at the copy layer
+# ---------------------------------------------------------------------------
+def test_slot_encoding_roundtrip():
+    for s in (0, 1, 7, 1023):
+        assert decode_slot(encode_slot(s)) == s
+        assert encode_slot(s) < 0
+
+
+@pytest.mark.parametrize("arch,packed,quant", FAMILIES)
+def test_swap_roundtrip_byte_identity(arch, packed, quant):
+    """swap_out -> host -> swap_in restores pages BYTE-for-byte, into the
+    same or different physical pages, across every pool layout."""
+    cfg = _cfg(arch, quant)
+    pool = _random_pool(cfg)
+    mgr = SwapManager(cfg, host_pages=16)
+    src, dst = [3, 5, 9, 11, 2], [17, 18, 19, 20, 21]
+    before = _page_bytes(mgr, pool, src)
+    slots = mgr.swap_out(pool, src)
+    assert len(slots) == len(src) and mgr.n_used == len(src)
+    if mgr._attn:                       # host copy matches device bytes
+        _assert_tree_equal(mgr.read_slots(slots), before)
+    pool = mgr.swap_in(pool, slots, dst)
+    _assert_tree_equal(_page_bytes(mgr, pool, dst), before)
+    assert mgr.n_used == 0              # free=True released the slots
+    st = mgr.stats_dict()
+    assert st["swap_outs"] == 1 and st["swap_ins"] == 1
+    if mgr._attn:
+        assert st["swap_out_bytes"] == st["swap_in_bytes"] > 0
+
+
+def test_dma_path_byte_identical_to_fallback():
+    """The double-buffered pipelined path and the single gather/device_get
+    fallback produce identical host bytes and identical restored pages —
+    enough pages to force several CHUNK-sized pipeline stages."""
+    cfg = _cfg("gemma2-2b", quant=False)
+    pages = list(range(2, 2 + 2 * SwapManager.CHUNK + 3))   # 3 chunks
+    n_pages = max(pages) + len(pages) + 2
+    restored = {}
+    for dma in (True, False):
+        pool = _random_pool(cfg, n_pages=n_pages, seed=5)
+        mgr = SwapManager(cfg, host_pages=len(pages) + 2, dma=dma)
+        slots = mgr.swap_out(pool, pages)
+        restored[dma] = mgr.read_slots(slots)
+        dst = list(range(max(pages) + 1, max(pages) + 1 + len(pages)))
+        pool = mgr.swap_in(pool, slots, dst)
+        restored[(dma, "dev")] = _page_bytes(mgr, pool, dst)
+    _assert_tree_equal(restored[True], restored[False])
+    _assert_tree_equal(restored[(True, "dev")], restored[(False, "dev")])
+
+
+def test_ssm_lane_state_roundtrip():
+    """Pure-SSM pools have no attention leaves — the page tier degenerates
+    to slot accounting and the swappable state is the O(1) mamba lane
+    tree, restored exactly."""
+    cfg = _cfg("falcon-mamba-7b")
+    pool = _random_pool(cfg)
+    mgr = SwapManager(cfg, host_pages=4)
+    assert not mgr._attn and mgr._mamba
+    state = mgr.lane_state_out(pool, 0)
+    before = {bi: jax.tree.map(lambda l: np.asarray(l[:, 0]), pool[bi])
+              for bi in mgr._mamba}
+    pool = mgr.lane_state_in(pool, state, 1)    # write into another lane
+    for bi in mgr._mamba:
+        got = jax.tree.map(lambda l: np.asarray(l[:, 1]), pool[bi])
+        jax.tree.map(np.testing.assert_array_equal, got, before[bi])
+
+
+def test_host_budget_is_atomic():
+    cfg = _cfg("gemma2-2b")
+    mgr = SwapManager(cfg, host_pages=3)
+    got = mgr.alloc_slots(2)
+    with pytest.raises(HostBudgetExceeded):
+        mgr.alloc_slots(2)              # over-ask: nothing granted
+    assert mgr.n_used == 2 and mgr.n_free == 1
+    assert mgr.stats_dict()["slot_alloc_failures"] == 1
+    mgr.free_slots(got)
+    mgr.audit({})                       # empty census == nothing used
+
+
+# ---------------------------------------------------------------------------
+# 2. bit identity: preempt -> swap -> resume == uninterrupted
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch,packed,quant", FAMILIES)
+def test_preempt_swap_resume_bit_identical(arch, packed, quant):
+    eng, cfg = _engine(arch, packed, quant)
+    prompts = [RNG.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in (7, 9)]
+    refs = [_ref(eng, p, 10) for p in prompts]
+    with eng.session(lanes=2, page_size=4, segment=2, audit=True,
+                     host_page_budget=16) as sess:
+        hs = [sess.submit(p, SamplingParams(max_tokens=10))
+              for p in prompts]
+        while hs[0].tokens_ready < 4:   # mid-decode, tokens already out
+            sess.step()
+        assert sess.preempt(hs[0])
+        sess.run_until_idle()
+        assert hs[0].preempt_swap == 1
+        assert hs[0].preempt_recompute == 0
+        assert hs[0].preemptions == 1
+        for h, ref in zip(hs, refs):
+            assert h.status is RequestStatus.DONE
+            np.testing.assert_array_equal(h.tokens_so_far(), ref)
+        st = sess.stats()
+        assert st["swap"]["swap_outs"] >= 1
+        assert st["swap"]["swap_ins"] >= 1
+        assert st["sched"]["preempt_swap"] == 1
+        assert st["swap"]["host_used"] == 0      # everything restored
+        sess.audit()
+
+
+def test_budget_exhausted_falls_back_to_recompute():
+    """host_page_budget=0: capture cannot take the pages, preemption
+    degrades to the explicit recompute path — counted separately, and the
+    resumed tail is oracle-consistent for the effective prompt."""
+    eng, cfg = _engine()
+    p = RNG.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+    with eng.session(lanes=2, page_size=4, segment=2, audit=True,
+                     host_page_budget=0) as sess:
+        h = sess.submit(p, SamplingParams(max_tokens=10))
+        while h.tokens_ready < 4:
+            sess.step()
+        assert sess.preempt(h)
+        sess.run_until_idle()
+        assert h.preempt_swap == 0 and h.preempt_recompute == 1
+        assert h.status is RequestStatus.DONE
+        emitted = h.tokens_so_far()
+        eff = np.concatenate([p, np.asarray(emitted[:4], np.int32)])
+        np.testing.assert_array_equal(
+            emitted[4:], _ref(eng, eff, 10 - 4))
+        sess.audit()
+
+
+def test_double_preempt_same_request_swaps_twice():
+    eng, cfg = _engine()
+    p = RNG.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    ref = _ref(eng, p, 12)
+    with eng.session(lanes=1, page_size=4, segment=1, audit=True,
+                     host_page_budget=16) as sess:
+        h = sess.submit(p, SamplingParams(max_tokens=12))
+        for target in (3, 7):
+            while h.tokens_ready < target:
+                sess.step()
+            assert sess.preempt(h)
+        sess.run_until_idle()
+        assert h.preempt_swap == 2 and h.preempt_recompute == 0
+        np.testing.assert_array_equal(h.tokens_so_far(), ref)
+        sess.audit()
+
+
+# ---------------------------------------------------------------------------
+# 3. prefix index: demote under pressure, promote on hit, survive close
+# ---------------------------------------------------------------------------
+def _longtail_session(eng, n_req_pages, budget=32):
+    """Device pool sized for ONE active request + <2 prefixes of index
+    headroom, so a tail of distinct prefixes MUST demote."""
+    return eng.session(lanes=1, page_size=4, segment=2, audit=True,
+                       n_pages=1 + n_req_pages + n_req_pages // 2,
+                       prefix_cache=True, host_page_budget=budget)
+
+
+def test_host_resident_prefix_hit_bit_identical():
+    eng, cfg = _engine(max_len=28)
+    n_req_pages = 28 // 4
+    prompts = [RNG.integers(0, cfg.vocab_size, (20,)).astype(np.int32)
+               for _ in range(3)]
+    refs = [_ref(eng, p, 8) for p in prompts]
+
+    def serve(sess, p):
+        h = sess.submit(p, SamplingParams(max_tokens=8))
+        sess.run_until_idle()
+        assert h.status is RequestStatus.DONE
+        return h.tokens_so_far()
+
+    with _longtail_session(eng, n_req_pages) as sess:
+        for p, ref in zip(prompts, refs):       # pass 1: cold, demotes
+            np.testing.assert_array_equal(serve(sess, p), ref)
+        st = dict(sess.prefix.stats)
+        assert st["demoted_pages"] > 0
+        assert sess.prefix.host_resident_pages > 0
+        for p, ref in zip(prompts, refs):       # pass 2: host-resident hits
+            np.testing.assert_array_equal(serve(sess, p), ref)
+        st = dict(sess.prefix.stats)
+        assert st["promoted_pages"] > 0
+        assert st["exact_hits"] >= len(prompts)
+        sess.audit()
+
+
+def test_index_survives_close_and_adoption():
+    """close() demotes the whole index to host and parks it; the next
+    same-geometry session adopts it and serves host-resident hits
+    bit-identically — the index OUTLIVES the device pool."""
+    eng, cfg = _engine(max_len=28)
+    n_req_pages = 28 // 4
+    prompts = [RNG.integers(0, cfg.vocab_size, (18,)).astype(np.int32)
+               for _ in range(2)]
+    refs = [_ref(eng, p, 8) for p in prompts]
+    with _longtail_session(eng, n_req_pages) as sess:
+        for p in prompts:
+            sess.submit(p, SamplingParams(max_tokens=8))
+            sess.run_until_idle()
+    assert eng._prefix_store                 # parked, not dropped
+    with _longtail_session(eng, n_req_pages) as sess:
+        assert sess.prefix.host_resident_pages > 0    # adopted warm
+        base = sess.prefix.stats["exact_hits"]
+        for p, ref in zip(prompts, refs):
+            h = sess.submit(p, SamplingParams(max_tokens=8))
+            sess.run_until_idle()
+            np.testing.assert_array_equal(h.tokens_so_far(), ref)
+        assert sess.prefix.stats["exact_hits"] >= base + len(prompts)
+        sess.audit()
+
+
+# ---------------------------------------------------------------------------
+# 4. two-tier admission
+# ---------------------------------------------------------------------------
+def test_host_budget_shed_reason():
+    """Committed worst-case footprint spans device + host capacity: the
+    submit that would exceed BOTH tiers sheds with the typed reason (and
+    its HTTP mapping is pinned in reasons.py)."""
+    from repro.serve import reasons
+
+    eng, cfg = _engine(max_len=16)
+    assert reasons.HTTP_STATUS[reasons.HOST_BUDGET][0] == 429
+    with eng.session(lanes=1, page_size=4, n_pages=5,
+                     host_page_budget=4, audit=True) as sess:
+        hs = []
+        with pytest.raises(ShedError) as ei:
+            for _ in range(8):          # worst case 4 pages per request
+                hs.append(sess.submit(
+                    RNG.integers(0, cfg.vocab_size, (8,)).astype(np.int32),
+                    SamplingParams(max_tokens=8)))
+        assert ei.value.reason == reasons.HOST_BUDGET
+        assert len(hs) == 2             # (4 dev) + (4 host) admitted
+        sess.run_until_idle()
+        for h in hs:
+            assert h.status is RequestStatus.DONE
+        sess.audit()
+
+
+# ---------------------------------------------------------------------------
+# 5. fault containment: swap faults degrade, never fail a request
+# ---------------------------------------------------------------------------
+@pytest.mark.faultinject
+def test_swap_out_fault_degrades_to_recompute():
+    eng, cfg = _engine()
+    p = RNG.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+    inj = FaultInjector({"swap_out": [0]})
+    with eng.session(lanes=2, page_size=4, segment=2, audit=True,
+                     host_page_budget=16, faults=inj,
+                     prefix_cache=False) as sess:
+        h = sess.submit(p, SamplingParams(max_tokens=10))
+        while h.tokens_ready < 4:
+            sess.step()
+        assert sess.preempt(h)
+        sess.run_until_idle()
+        assert inj.fired == [("swap_out", 0)]
+        assert h.preempt_swap == 0 and h.preempt_recompute == 1
+        assert h.status is RequestStatus.DONE
+        sess.audit()
+
+
+@pytest.mark.faultinject
+def test_host_pool_fault_degrades_to_recompute():
+    eng, cfg = _engine()
+    p = RNG.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+    inj = FaultInjector({"host_pool": [0]})
+    with eng.session(lanes=2, page_size=4, segment=2, audit=True,
+                     host_page_budget=16, faults=inj,
+                     prefix_cache=False) as sess:
+        h = sess.submit(p, SamplingParams(max_tokens=10))
+        while h.tokens_ready < 4:
+            sess.step()
+        assert sess.preempt(h)
+        sess.run_until_idle()
+        assert inj.fired == [("host_pool", 0)]
+        assert h.preempt_swap == 0 and h.preempt_recompute == 1
+        assert h.status is RequestStatus.DONE
+        sess.audit()
+
+
+@pytest.mark.faultinject
+def test_swap_in_fault_at_resume_degrades_to_recompute():
+    """The capture succeeds; the RESTORE faults. The record is discarded
+    (slots freed), the preemption is re-classified recompute, and the
+    request still completes oracle-consistently."""
+    eng, cfg = _engine()
+    p = RNG.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+    inj = FaultInjector({"swap_in": [0]})
+    with eng.session(lanes=2, page_size=4, segment=2, audit=True,
+                     host_page_budget=16, faults=inj,
+                     prefix_cache=False) as sess:
+        h = sess.submit(p, SamplingParams(max_tokens=10))
+        while h.tokens_ready < 4:
+            sess.step()
+        assert sess.preempt(h)
+        assert h.preempt_swap == 1      # capture DID succeed
+        sess.run_until_idle()
+        assert inj.fired == [("swap_in", 0)]
+        assert h.preempt_swap == 0 and h.preempt_recompute == 1
+        assert h.status is RequestStatus.DONE
+        st = sess.stats()
+        assert st["swap"]["host_used"] == 0      # discarded slots freed
+        sess.audit()
+
+
+@pytest.mark.faultinject
+def test_swap_in_fault_at_promote_degrades_to_cold():
+    """A host-resident prefix hit whose promotion copy faults admits COLD
+    instead (demote_back undoes the plan) — correct tokens, no failure,
+    and the host copy survives for the next hit."""
+    eng, cfg = _engine(max_len=28)
+    n_req_pages = 28 // 4
+    prompts = [RNG.integers(0, cfg.vocab_size, (20,)).astype(np.int32)
+               for _ in range(2)]
+    refs = [_ref(eng, p, 8) for p in prompts]
+    inj = FaultInjector({})
+    with eng.session(lanes=1, page_size=4, segment=2, audit=True,
+                     n_pages=1 + n_req_pages + n_req_pages // 2,
+                     prefix_cache=True, host_page_budget=32,
+                     faults=inj) as sess:
+        for p in prompts:               # pass 1: fill + demote
+            sess.submit(p, SamplingParams(max_tokens=8))
+            sess.run_until_idle()
+        assert sess.prefix.host_resident_pages > 0
+        inj.arm("swap_in", at=0)        # next promote copy faults
+        h = sess.submit(prompts[0], SamplingParams(max_tokens=8))
+        sess.run_until_idle()
+        assert ("swap_in", 0) in inj.fired
+        assert h.status is RequestStatus.DONE
+        np.testing.assert_array_equal(h.tokens_so_far(), refs[0])
+        # the host tier survived the fault: the SAME hit promotes now
+        before = sess.prefix.stats["promoted_pages"]
+        h = sess.submit(prompts[0], SamplingParams(max_tokens=8))
+        sess.run_until_idle()
+        np.testing.assert_array_equal(h.tokens_so_far(), refs[0])
+        assert sess.prefix.stats["promoted_pages"] > before
+        sess.audit()
+
+
+# ---------------------------------------------------------------------------
+# 6. invariants under randomized churn
+# ---------------------------------------------------------------------------
+def test_allocator_and_slots_under_randomized_churn():
+    """Property-style: random interleavings of page alloc/incref/decref
+    with slot alloc/free must keep both allocators' censuses exact at
+    every step. Plain seeded loops (hypothesis is stubbed in CI)."""
+    cfg = _cfg("gemma2-2b")
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        alloc = PageAllocator(24)
+        mgr = SwapManager(cfg, host_pages=12)
+        pages, slots = [], []
+        for _ in range(300):
+            op = rng.integers(0, 5)
+            if op == 0 and alloc.n_free:
+                pages += alloc.alloc(int(rng.integers(
+                    1, alloc.n_free + 1)))
+            elif op == 1 and pages:
+                p = pages[rng.integers(len(pages))]
+                alloc.incref(p)
+                pages.append(p)
+            elif op == 2 and pages:
+                alloc.decref(pages.pop(rng.integers(len(pages))))
+            elif op == 3 and mgr.n_free:
+                slots += mgr.alloc_slots(int(rng.integers(
+                    1, mgr.n_free + 1)))
+            elif op == 4 and slots:
+                k = rng.integers(1, len(slots) + 1)
+                rng.shuffle(slots)
+                take, slots = slots[:k], slots[k:]
+                mgr.free_slots(take)
+            holds = {}
+            for p in pages:
+                holds[p] = holds.get(p, 0) + 1
+            alloc.audit(holds)
+            mgr.audit({s: 1 for s in slots})
+        for p in pages:
+            alloc.decref(p)
+        mgr.free_slots(slots)
+        alloc.audit({})
+        mgr.audit({})
+
+
+def test_session_churn_with_swap_audits_clean():
+    """Randomized submit / preempt / cancel over a prefix+swap session
+    with ``audit=True``: the full two-tier census (pages + slots + index)
+    is re-verified after EVERY step, and all survivors complete."""
+    eng, cfg = _engine(max_len=24)
+    rng = np.random.default_rng(4)
+    sys_p = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+    with eng.session(lanes=2, page_size=4, segment=1, audit=True,
+                     prefix_cache=True, host_page_budget=24) as sess:
+        live = []
+        for i in range(10):
+            tail = rng.integers(0, cfg.vocab_size, (
+                int(rng.integers(2, 6)),)).astype(np.int32)
+            prompt = np.concatenate([sys_p, tail]) if rng.random() < 0.6 \
+                else tail
+            live.append(sess.submit(
+                prompt, SamplingParams(max_tokens=int(
+                    rng.integers(3, 9)))))
+            for _ in range(int(rng.integers(1, 4))):
+                sess.step()
+            decoding = [h for h in live
+                        if h.status is RequestStatus.DECODING]
+            if decoding and rng.random() < 0.5:
+                sess.preempt(decoding[int(rng.integers(len(decoding)))])
+            if live and rng.random() < 0.2:
+                live.pop(int(rng.integers(len(live)))).cancel()
+        sess.run_until_idle()
+        for h in live:
+            assert h.status in (RequestStatus.DONE,
+                                RequestStatus.CANCELLED)
+        st = sess.stats()
+        assert st["sched"]["preempt_swap"] \
+            + st["sched"]["preempt_recompute"] \
+            == st["sched"]["preemptions"]
+        sess.audit()
