@@ -44,6 +44,15 @@ echo "== fault-injection + overload-control gate =="
 python -m pytest -q -m faultinject tests/test_serve_faults.py
 python -m pytest -q tests/test_overload.py
 
+echo "== chaos-soak gate (seeded random fault schedules) =="
+# FaultSchedule.random compiles per-site firing probabilities into
+# concrete site@poll plans; each schedule runs a live session to drain
+# with post-step audits: every handle terminal + typed, allocator/index
+# books clean, DONE greedy streams bit-identical to the fault-free
+# oracle. A failing schedule dumps its plan JSON to chaos_failures/ and
+# names the replay seed. REPRO_SOAK_SCHEDULES scales N (CI runs more).
+python -m pytest -q -m soak
+
 echo "== tiered-KV swap gate (host page tier) =="
 # HBM<->host page-swap subsystem: byte-identity round-trips across the
 # model-family matrix, preempt->swap->resume BIT-exactness (vs the

@@ -1,1 +1,2 @@
-from .manager import CheckpointManager, save_pytree, restore_pytree
+from .manager import (CheckpointCorruption, CheckpointManager, restore_pytree,
+                      save_pytree)

@@ -18,6 +18,14 @@ Design points for 1000+-node operation:
   * BOOLEAN-COMPACT: int8 Boolean leaves are bit-packed 8:1 on disk
     (uint8 bitmaps), so a 480B-param Boolean checkpoint is ~60 GB.
   * KEEP-N: older steps pruned after a successful commit.
+  * CHECKSUMMED: every leaf's on-disk bytes carry a crc32 in the
+    manifest; restore verifies BEFORE deserializing and raises a typed
+    ``CheckpointCorruption`` on mismatch. B⊕LD makes this non-optional:
+    a flipped bit in a packed Boolean leaf is a sign flip that ``sign()``
+    amplifies into confidently wrong outputs, not noise — silently-wrong
+    weights are the one failure mode a restore must never have.
+    (Pre-checksum checkpoints restore with a skipped verify — the
+    manifest entry simply has no ``crc32`` key.)
 
 (On real multi-host pods each host writes its addressable shards and the
 manifest records the global shape; this container is single-process so
@@ -25,9 +33,11 @@ leaves are full arrays — the manifest format already carries shard info.)
 """
 from __future__ import annotations
 
+import io
 import json
 import shutil
 import threading
+import zlib
 from pathlib import Path
 from typing import Any, Optional
 
@@ -35,6 +45,23 @@ import jax
 import numpy as np
 
 SEP = "/"
+
+
+class CheckpointCorruption(RuntimeError):
+    """A leaf's on-disk bytes fail their manifest checksum. Typed so a
+    restore caller can distinguish "this checkpoint is damaged — fall
+    back to an older step" from a programming error; it must NEVER be
+    swallowed into a partially-restored tree."""
+
+    def __init__(self, step: int, key: str, fname: str,
+                 want: int, got: int):
+        self.step = step
+        self.key = key
+        self.file = fname
+        super().__init__(
+            f"checkpoint step {step}: leaf {key!r} ({fname}) checksum "
+            f"mismatch (manifest crc32={want:#010x}, bytes={got:#010x}) "
+            "— refusing to deserialize corrupted weights")
 
 
 def _flatten(tree) -> dict:
@@ -79,14 +106,21 @@ def save_pytree(tree, directory: Path, step: int,
                      "shape": list(arr.shape)}
             if arr.dtype == np.int8 and arr.size and \
                     set(np.unique(arr[..., :1])) <= {-1, 1}:
-                np.save(tmp / fname, _pack_bool(arr))
+                save_arr = _pack_bool(arr)
                 entry["packed_boolean"] = True
             else:
                 save_arr = arr
                 if arr.dtype == jax.numpy.bfloat16:
                     save_arr = arr.view(np.uint16)
                     entry["bf16_as_u16"] = True
-                np.save(tmp / fname, save_arr)
+            # serialize to memory first: the crc covers the EXACT bytes
+            # that land on disk (.npy header included), so any later
+            # corruption — bit rot, truncation, a bad copy — is caught
+            buf = io.BytesIO()
+            np.save(buf, save_arr)
+            raw = buf.getvalue()
+            entry["crc32"] = zlib.crc32(raw) & 0xFFFFFFFF
+            (tmp / fname).write_bytes(raw)
             manifest["leaves"][key] = entry
         (tmp / "manifest.json").write_text(json.dumps(manifest))
         if final.exists():
@@ -120,9 +154,17 @@ def latest_step(directory: Path) -> Optional[int]:
 
 
 def restore_pytree(template, directory: Path, step: Optional[int] = None,
-                   shardings=None):
+                   shardings=None, faults=None):
     """Restore into the structure of ``template``; re-shards onto the live
-    mesh when ``shardings`` (a matching tree of NamedSharding) is given."""
+    mesh when ``shardings`` (a matching tree of NamedSharding) is given.
+
+    Every leaf's raw bytes are checksum-verified against the manifest
+    BEFORE ``np.load`` touches them; a mismatch raises
+    ``CheckpointCorruption`` naming the step/leaf/file. ``faults`` (a
+    ``serve.FaultInjector``) arms the ``ckpt_corrupt`` drill: when it
+    fires for a leaf, one byte of the in-memory stream is flipped before
+    the verify — proving the checksum walk turns disk corruption into the
+    typed error rather than silently-wrong weights."""
     directory = Path(directory)
     if step is None:
         step = latest_step(directory)
@@ -137,7 +179,21 @@ def restore_pytree(template, directory: Path, step: Optional[int] = None,
     for key, entry in manifest["leaves"].items():
         if key not in flat_tpl:
             continue
-        raw = np.load(src / entry["file"])
+        raw_bytes = (src / entry["file"]).read_bytes()
+        if faults is not None and faults.should_fire("ckpt_corrupt"):
+            # flip one payload byte past the .npy header — the exact
+            # stand-in for bit rot / a torn copy on the real artifact
+            pos = min(len(raw_bytes) - 1, 128)
+            raw_bytes = (raw_bytes[:pos]
+                         + bytes([raw_bytes[pos] ^ 0x01])
+                         + raw_bytes[pos + 1:])
+        want = entry.get("crc32")
+        if want is not None:
+            got = zlib.crc32(raw_bytes) & 0xFFFFFFFF
+            if got != int(want):
+                raise CheckpointCorruption(step, key, entry["file"],
+                                           int(want), got)
+        raw = np.load(io.BytesIO(raw_bytes))
         if entry.get("packed_boolean"):
             arr = _unpack_bool(raw, entry["shape"],
                                int(np.prod(entry["shape"])))
@@ -182,8 +238,9 @@ class CheckpointManager:
             self._inflight.join()
             self._inflight = None
 
-    def restore_latest(self, template, shardings=None):
-        return restore_pytree(template, self.directory, shardings=shardings)
+    def restore_latest(self, template, shardings=None, faults=None):
+        return restore_pytree(template, self.directory,
+                              shardings=shardings, faults=faults)
 
     def latest_step(self):
         return latest_step(self.directory)

@@ -146,6 +146,9 @@ class GatewayMetrics:
         self.shed_tenant: Counter = Counter()       # (reason, tenant) -> n
         self.streams: Counter = Counter()           # (outcome,) -> n
         self.tokens_streamed = 0
+        self.watchdog_trips = 0
+        self.requests_with_id = 0
+        self.request_id_conflicts = 0
         self.ttft = Histogram(TTFT_BUCKETS)
         self.ttft_tenant: Dict[str, Histogram] = {}
         self.inter_token = Histogram(ITL_BUCKETS)
@@ -175,6 +178,18 @@ class GatewayMetrics:
     def observe_stream_end(self, outcome: str) -> None:
         with self._lock:
             self.streams[(outcome,)] += 1
+
+    def observe_watchdog_trip(self) -> None:
+        with self._lock:
+            self.watchdog_trips += 1
+
+    def observe_request_id(self) -> None:
+        with self._lock:
+            self.requests_with_id += 1
+
+    def observe_request_id_conflict(self) -> None:
+        with self._lock:
+            self.request_id_conflicts += 1
 
     def observe_ttft(self, seconds: float,
                      tenant: Optional[str] = None) -> None:
@@ -221,6 +236,15 @@ class GatewayMetrics:
             out += _counter("gateway_tokens_streamed_total",
                             "Tokens emitted across all SSE streams",
                             self.tokens_streamed)
+            out += _counter("gateway_watchdog_trips_total",
+                            "Step-driver watchdog trips (degraded mode)",
+                            self.watchdog_trips)
+            out += _counter("gateway_requests_with_id_total",
+                            "Submits carrying a client request_id",
+                            self.requests_with_id)
+            out += _counter("gateway_request_id_conflicts_total",
+                            "Duplicate request_id submits refused with 409",
+                            self.request_id_conflicts)
             out += self.ttft.render(
                 "gateway_ttft_seconds",
                 "Submit-to-first-token latency (emission at admission)")
@@ -314,4 +338,15 @@ class GatewayMetrics:
             out += _gauge("serve_swap_page_bytes",
                           "Bytes per page across all cache leaves",
                           swp["page_bytes"])
+        mesh = st.get("mesh")
+        if mesh is not None:
+            out += _gauge("serve_mesh_shards_total",
+                          "Tensor-parallel shards in the serve mesh",
+                          mesh["shards"])
+            out += _counter("serve_mesh_shard_loss_events_total",
+                            "Simulated shard-loss drills contained",
+                            mesh["shard_loss_events"])
+            out += _gauge("serve_mesh_healthy",
+                          "1 while no shard has been lost, else 0",
+                          1 if mesh["healthy"] else 0)
         return out

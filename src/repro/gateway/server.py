@@ -27,8 +27,15 @@ Endpoints
     reason maps through the ONE serve-wide table (serve/reasons.py) to a
     stable status — ``queue-full``/``tenant-quota``/``deadline`` → 429
     with ``Retry-After``, ``page-budget`` → 503 — with the reason echoed
-    in a JSON body. Malformed bodies and never-fitting capacity
-    violations (``ValueError`` from submit validation) are 400s.
+    in a JSON body. For ``queue-full``/``host-budget`` the Retry-After
+    is LIVE: derived from queue depth via ``stats()`` (capped), not a
+    constant. Malformed bodies and never-fitting capacity violations
+    (``ValueError`` from submit validation) are 400s.
+
+    An optional ``"request_id"`` (client idempotency token) is echoed in
+    the terminal payload; re-submitting an id while the original is
+    still live returns 409 with the original's server rid instead of
+    double-running the work.
 
 ``GET /metrics``
     Prometheus text (version 0.0.4): gateway HTTP/stream counters, TTFT
@@ -39,7 +46,11 @@ Endpoints
 
 ``GET /healthz``
     200 ``{"status": "ok"}`` while serving; 503 ``{"status":
-    "draining"}`` once drain begins (load balancers eject the instance).
+    "draining"}`` once drain begins (load balancers eject the instance);
+    503 ``{"status": "degraded", "reason": "watchdog"}`` after the step
+    watchdog trips — a stalled/crashed ``session.step()`` loop flips
+    health, refuses new submits, and terminates every live stream with a
+    typed ``watchdog`` SSE error instead of leaving clients hung.
 
 Graceful drain: SIGTERM (or ``Gateway.begin_drain()``) stops admitting —
 new ``/v1/generate`` requests get 503 ``draining`` — while in-flight
@@ -83,6 +94,20 @@ _PARAM_FIELDS = ("max_tokens", "temperature", "seed", "stop_token",
 _MAX_BODY = 10 * 1024 * 1024
 
 
+class DuplicateRequestId(ValueError):
+    """A client-supplied ``request_id`` collided with one still live.
+    Carries the ORIGINAL submission's server rid so the 409 response can
+    point the client at the stream it already owns — the first slice of
+    idempotent retry: a client that re-POSTs after a timeout learns its
+    request is running instead of double-submitting work."""
+
+    def __init__(self, request_id: str, rid: int):
+        self.request_id = request_id
+        self.rid = rid
+        super().__init__(
+            f"request_id {request_id!r} is already live (rid {rid})")
+
+
 class _Track:
     """Per-request latency accounting owned by the step thread."""
 
@@ -96,19 +121,29 @@ class _Track:
         self.tenant = tenant
 
 
-def parse_generate_body(body: dict) -> Tuple[np.ndarray, SamplingParams]:
-    """Validate a /v1/generate JSON body into (prompt, SamplingParams).
-    Raises ``ValueError`` with a client-facing message on any bad field —
-    the gateway maps that to a 400, never a stack trace."""
+def parse_generate_body(body: dict
+                        ) -> Tuple[np.ndarray, SamplingParams, Optional[str]]:
+    """Validate a /v1/generate JSON body into
+    (prompt, SamplingParams, request_id). Raises ``ValueError`` with a
+    client-facing message on any bad field — the gateway maps that to a
+    400, never a stack trace. ``request_id`` is the optional
+    client-supplied idempotency token (1–128 chars): echoed in the
+    terminal payload, deduplicated while live (409)."""
     if not isinstance(body, dict):
         raise ValueError("body must be a JSON object")
     prompt = body.get("prompt")
     if not isinstance(prompt, list) or not prompt \
             or not all(isinstance(t, int) and t >= 0 for t in prompt):
         raise ValueError("'prompt' must be a non-empty list of token ids")
-    unknown = set(body) - set(_PARAM_FIELDS) - {"prompt", "stream"}
+    unknown = set(body) - set(_PARAM_FIELDS) - {"prompt", "stream",
+                                                "request_id"}
     if unknown:
         raise ValueError(f"unknown fields: {sorted(unknown)}")
+    request_id = body.get("request_id")
+    if request_id is not None:
+        if not isinstance(request_id, str) or not 1 <= len(request_id) <= 128:
+            raise ValueError(
+                "'request_id' must be a string of 1..128 characters")
     kw = {}
     for f in _PARAM_FIELDS:
         if body.get(f) is not None:
@@ -120,7 +155,7 @@ def parse_generate_body(body: dict) -> Tuple[np.ndarray, SamplingParams]:
             for k, v in kw.items()})
     except (TypeError, ValueError) as e:
         raise ValueError(f"bad sampling params: {e}") from None
-    return np.asarray(prompt, np.int32), params
+    return np.asarray(prompt, np.int32), params, request_id
 
 
 class Gateway:
@@ -129,40 +164,98 @@ class Gateway:
     replay driver (benchmarks/traffic_replay.py) both sit on this."""
 
     def __init__(self, engine, *, metrics: Optional[GatewayMetrics] = None,
-                 **session_kwargs):
+                 watchdog_timeout: float = 300.0, **session_kwargs):
+        """``watchdog_timeout`` (seconds) bounds how long one
+        ``session.step()`` round may run before the watchdog declares the
+        step driver stalled and trips self-healing (degraded ``/healthz``,
+        typed ``watchdog`` error on every live stream). The default is
+        deliberately generous: a cold XLA compile inside the first step of
+        a new pool geometry legitimately takes tens of seconds."""
         self.session = engine.session(**session_kwargs)
         self.metrics = metrics if metrics is not None else GatewayMetrics()
         self.lock = threading.RLock()
         self.draining = False
         self._tracked: Dict[int, _Track] = {}
+        #: live client request_id → server rid (duplicate detection);
+        #: released when the request leaves ``_harvest`` terminally.
+        self._live_ids: Dict[str, int] = {}
         self._listeners = []
         self._wake = threading.Event()
         self._stop = threading.Event()
+        self.watchdog_timeout = float(watchdog_timeout)
+        self.watchdog_tripped = False
+        self.watchdog_reason: Optional[str] = None
+        self._step_error: Optional[BaseException] = None
+        self._beat = time.monotonic()
         self._stepper = threading.Thread(target=self._step_loop,
                                          name="gateway-step", daemon=True)
         self._stepper.start()
+        self._watchdog = threading.Thread(target=self._watchdog_loop,
+                                          name="gateway-watchdog",
+                                          daemon=True)
+        self._watchdog.start()
 
     # -- request lifecycle (called from the serving front-end) ---------------
-    def submit(self, prompt: np.ndarray, params: SamplingParams):
+    def _acquire(self) -> None:
+        """Take the gateway lock WITHOUT deadlocking on a wedged step
+        thread: if the watchdog trips while we wait, give up with the
+        degraded error instead of joining the pile-up behind a stuck
+        ``session.step()``."""
+        while not self.lock.acquire(timeout=0.5):
+            if self.watchdog_tripped:
+                raise RuntimeError("degraded")
+
+    def submit(self, prompt: np.ndarray, params: SamplingParams,
+               request_id: Optional[str] = None):
         """Submit under the gateway lock; raises ``ShedError`` (typed,
-        mapped to 429/503 by the front-end) or ``ValueError`` (400).
-        Draining gateways refuse before touching the session."""
+        mapped to 429/503 by the front-end), ``DuplicateRequestId``
+        (409), or ``ValueError`` (400). Draining and watchdog-degraded
+        gateways refuse before touching the session."""
         if self.draining:
             raise RuntimeError("draining")
-        with self.lock:
+        if self.watchdog_tripped:
+            raise RuntimeError("degraded")
+        self._acquire()
+        try:
+            if request_id is not None and request_id in self._live_ids:
+                self.metrics.observe_request_id_conflict()
+                raise DuplicateRequestId(request_id,
+                                         self._live_ids[request_id])
             try:
                 handle = self.session.submit(prompt, params)
             except ShedError as e:
                 self.metrics.observe_shed(e.reason, params.tenant)
                 raise
+            handle.client_request_id = request_id
+            if request_id is not None:
+                self._live_ids[request_id] = handle.rid
+                self.metrics.observe_request_id()
             self._tracked[handle.rid] = _Track(handle, time.monotonic(),
                                                params.tenant)
+        finally:
+            self.lock.release()
         self._wake.set()
         return handle
 
+    def retry_after(self, reason: str) -> Optional[int]:
+        """Live ``Retry-After`` hint for a shed: depth-scaled from a
+        ``stats()`` snapshot for ``queue-full``/``host-budget`` (how many
+        admission rounds until the retry can land), the static table
+        value otherwise. Never raises — a stats hiccup falls back to the
+        table floor."""
+        try:
+            return reasons.retry_after_seconds(reason, self.session.stats())
+        except Exception:                             # noqa: BLE001
+            return reasons.http_for_reason(reason)[1]
+
     def cancel(self, handle) -> bool:
-        with self.lock:
+        if self.watchdog_tripped:
+            return False
+        self._acquire()
+        try:
             ok = handle.cancel()
+        finally:
+            self.lock.release()
         self._wake.set()
         return ok
 
@@ -182,27 +275,72 @@ class Gateway:
         return self.draining and self.session.idle and not self._tracked
 
     def close(self) -> None:
-        """Stop the step thread and release the session's pool. In-flight
-        requests are cancelled (``session.close`` contract)."""
+        """Stop the step + watchdog threads and release the session's
+        pool. In-flight requests are cancelled (``session.close``
+        contract). A wedged step thread (the watchdog-trip case) cannot
+        be joined — the session close is skipped rather than deadlocking
+        shutdown on a lock the stuck thread still holds."""
         self._stop.set()
         self._wake.set()
         self._stepper.join(timeout=10.0)
+        if self._watchdog is not None:
+            self._watchdog.join(timeout=10.0)
+        if self._stepper.is_alive():
+            return
         with self.lock:
             self.session.close()
 
-    # -- step driver ---------------------------------------------------------
+    # -- step driver + watchdog ----------------------------------------------
     def _step_loop(self) -> None:
-        while not self._stop.is_set():
-            with self.lock:
-                idle = self.session.idle
-                if not idle:
-                    self.session.step()
-                self._harvest()
-            for cb in self._listeners:
+        try:
+            while not self._stop.is_set():
+                self._beat = time.monotonic()
+                with self.lock:
+                    idle = self.session.idle
+                    if not idle:
+                        self.session.step()
+                    self._harvest()
+                self._beat = time.monotonic()
+                for cb in self._listeners:
+                    cb()
+                if idle:
+                    self._wake.wait(0.05)
+                    self._wake.clear()
+        except BaseException as e:                    # noqa: BLE001
+            # a crashed step driver is a dead gateway wearing a 200:
+            # record and trip NOW rather than waiting out the heartbeat
+            self._step_error = e
+            self._trip(f"step driver crashed: {type(e).__name__}: {e}")
+
+    def _watchdog_loop(self) -> None:
+        poll = min(max(self.watchdog_timeout / 4.0, 0.01), 1.0)
+        while not self._stop.wait(poll):
+            if self.watchdog_tripped:
+                return
+            if not self._stepper.is_alive():
+                self._trip("step driver thread died")
+                return
+            stalled = time.monotonic() - self._beat
+            if stalled > self.watchdog_timeout:
+                self._trip(f"step driver stalled {stalled:.1f}s "
+                           f"(timeout {self.watchdog_timeout:.1f}s)")
+                return
+
+    def _trip(self, detail: str) -> None:
+        """Enter degraded mode, once: flip the health flag, bump the
+        metric, and wake every front-end listener so live SSE writers
+        observe the trip and terminate their streams with the typed
+        ``watchdog`` error instead of hanging until client timeout."""
+        if self.watchdog_tripped:
+            return
+        self.watchdog_tripped = True
+        self.watchdog_reason = detail
+        self.metrics.observe_watchdog_trip()
+        for cb in self._listeners:
+            try:
                 cb()
-            if idle:
-                self._wake.wait(0.05)
-                self._wake.clear()
+            except Exception:                         # noqa: BLE001
+                pass
 
     def _harvest(self) -> None:
         """Fold this round's progress into the latency histograms: first
@@ -229,7 +367,13 @@ class Gateway:
                 self.metrics.observe_stream_end(t.handle.status.value)
                 done.append(rid)
         for rid in done:
-            del self._tracked[rid]
+            t = self._tracked.pop(rid)
+            # duplicate detection covers LIVE requests only: once
+            # terminal, the same request_id is submittable again (the
+            # handle keeps its echo copy — SSE payloads stay correct)
+            cid = getattr(t.handle, "client_request_id", None)
+            if cid is not None and self._live_ids.get(cid) == rid:
+                del self._live_ids[cid]
 
 
 # --------------------------------------------------------------------------
@@ -241,8 +385,9 @@ _REASONS_4XX = {"bad-request"}
 def _http_head(code: int, ctype: str, extra: Tuple[Tuple[str, str], ...] = (),
                clen: Optional[int] = None, keep: bool = False) -> bytes:
     phrase = {200: "OK", 400: "Bad Request", 404: "Not Found",
-              405: "Method Not Allowed", 413: "Payload Too Large",
-              429: "Too Many Requests", 500: "Internal Server Error",
+              405: "Method Not Allowed", 409: "Conflict",
+              413: "Payload Too Large", 429: "Too Many Requests",
+              500: "Internal Server Error",
               503: "Service Unavailable"}.get(code, "OK")
     lines = [f"HTTP/1.1 {code} {phrase}", f"Content-Type: {ctype}",
              f"Connection: {'keep-alive' if keep else 'close'}"]
@@ -404,6 +549,12 @@ class GatewayHTTP:
     async def _route(self, method, path, headers, reader, writer,
                      keep: bool) -> Tuple[int, bool]:
         if path == "/healthz" and method == "GET":
+            if self.gateway.watchdog_tripped:
+                writer.write(_json_response(
+                    503, {"status": "degraded", "reason": "watchdog",
+                          "detail": self.gateway.watchdog_reason},
+                    keep=keep))
+                return 503, keep
             if self.gateway.draining:
                 writer.write(_json_response(503, {"status": "draining"},
                                             keep=keep))
@@ -442,24 +593,37 @@ class GatewayHTTP:
         raw = await asyncio.wait_for(reader.readexactly(clen), 60.0)
         try:
             body = json.loads(raw)
-            prompt, params = parse_generate_body(body)
+            prompt, params, request_id = parse_generate_body(body)
         except (json.JSONDecodeError, ValueError) as e:
             writer.write(_json_response(400, {"error": "bad-request",
                                               "detail": str(e)}, keep=keep))
             return 400, keep
         # -- admission: typed rejections map through serve/reasons.py -------
         try:
-            handle = self.gateway.submit(prompt, params)
+            handle = self.gateway.submit(prompt, params,
+                                         request_id=request_id)
+        except DuplicateRequestId as e:
+            # before the ValueError arm: DuplicateRequestId IS a
+            # ValueError, but it is the client's own live request, not a
+            # malformed body — 409 pointing at the original stream
+            writer.write(_json_response(
+                409, {"error": "duplicate-request-id",
+                      "request_id": e.request_id, "rid": e.rid,
+                      "detail": str(e)}, keep=keep))
+            return 409, keep
         except ShedError as e:
-            code, retry = reasons.http_for_reason(e.reason)
+            code, _ = reasons.http_for_reason(e.reason)
+            retry = self.gateway.retry_after(e.reason)
             extra = (("Retry-After", str(retry)),) if retry is not None else ()
             writer.write(_json_response(
                 code, {"error": e.reason, "rid": e.rid, "detail": str(e)},
                 extra, keep=keep))
             return code, keep
-        except RuntimeError:            # draining
+        except RuntimeError as e:       # draining / watchdog-degraded
+            degraded = str(e) == "degraded"
             writer.write(_json_response(
-                503, {"error": "draining"}, (("Retry-After", "1"),),
+                503, {"error": "degraded" if degraded else "draining"},
+                () if degraded else (("Retry-After", "1"),),
                 keep=keep))
             return 503, keep
         except ValueError as e:         # capacity/validation: client error
@@ -483,9 +647,28 @@ class GatewayHTTP:
                 "preempted": handle.preemptions,
                 "preempted_swap": handle.preempt_swap,
                 "preempted_recompute": handle.preempt_recompute}
+        cid = getattr(handle, "client_request_id", None)
+        if cid is not None:
+            base["request_id"] = cid
         if st in (RequestStatus.DONE, RequestStatus.CANCELLED):
             return "end", base
         return "error", dict(base, reason=handle.error)
+
+    @staticmethod
+    def _watchdog_payload(handle, sent: int, gateway: Gateway
+                          ) -> Tuple[str, dict]:
+        """Terminal event for a stream orphaned by a step-driver trip:
+        the request never reached a terminal status (its driver is gone),
+        so the stream ends with the typed ``watchdog`` reason — partial
+        tokens already sent stay valid, the client knows to retry against
+        a healthy instance."""
+        base = {"status": "failed", "tokens": sent,
+                "reason": reasons.WATCHDOG,
+                "detail": gateway.watchdog_reason}
+        cid = getattr(handle, "client_request_id", None)
+        if cid is not None:
+            base["request_id"] = cid
+        return "error", base
 
     async def _respond_sse(self, handle, writer) -> int:
         """One SSE event per token, 1:1 with ``RequestHandle.tokens()``,
@@ -507,6 +690,14 @@ class GatewayHTTP:
                     writer.write(_sse_event(ev, json.dumps(payload)))
                     await writer.drain()
                     return 200
+                if self.gateway.watchdog_tripped:
+                    # tripped AFTER the terminal check: a request that
+                    # finished before the trip still ends normally above
+                    ev, payload = self._watchdog_payload(
+                        handle, sent, self.gateway)
+                    writer.write(_sse_event(ev, json.dumps(payload)))
+                    await writer.drain()
+                    return 200
                 await writer.drain()
                 await self._next_tick()
         except (ConnectionResetError, BrokenPipeError, OSError):
@@ -517,6 +708,14 @@ class GatewayHTTP:
         """Non-streaming mode: wait for the terminal status, answer once."""
         try:
             while handle.status not in TERMINAL:
+                if self.gateway.watchdog_tripped:
+                    toks = [int(t) for t in handle.tokens_so_far()]
+                    ev, payload = self._watchdog_payload(
+                        handle, len(toks), self.gateway)
+                    payload["tokens"] = toks
+                    payload["event"] = ev
+                    writer.write(_json_response(200, payload, keep=keep))
+                    return 200
                 await self._next_tick()
         except (ConnectionResetError, BrokenPipeError, OSError):
             self.gateway.cancel(handle)

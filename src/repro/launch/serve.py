@@ -39,6 +39,13 @@ drains gracefully — in-flight streams finish, new work gets 503):
     curl -N localhost:8080/v1/generate \
         -d '{"prompt": [3, 1, 4, 1, 5], "max_tokens": 8}'
     curl localhost:8080/metrics
+
+Chaos soak (N seeded random fault schedules run to drain against fresh
+sessions with post-step audits; a failing schedule prints its seed and
+plan JSON and replays byte-for-byte):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --smoke \
+        --chaos-soak 25 --requests 6 --lanes 2 --gen 8
 """
 from __future__ import annotations
 
@@ -106,6 +113,26 @@ def main():
                          "Honors --lanes/--page-size/--segment/"
                          "--prefix-cache/--max-pending/--audit; SIGTERM "
                          "drains gracefully")
+    ap.add_argument("--watchdog-timeout", type=float, default=300.0,
+                    help="(--http) seconds one session.step() round may "
+                         "run before the gateway watchdog declares the "
+                         "step driver stalled: /healthz flips to degraded "
+                         "and live SSE streams end with a typed 'watchdog' "
+                         "error instead of hanging")
+    ap.add_argument("--chaos-soak", type=int, default=0, metavar="N",
+                    help="run N seeded random fault schedules against "
+                         "fresh sessions (serve/chaos.py) instead of "
+                         "serving; prints each schedule's report and exits "
+                         "nonzero if any containment check fails — a "
+                         "failing seed reproduces byte-for-byte via "
+                         "--chaos-seed")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="(--chaos-soak) base seed: schedule i uses "
+                         "seed+i; pass a failing run's printed seed with "
+                         "--chaos-soak 1 to replay it exactly")
+    ap.add_argument("--chaos-rate", type=float, default=None,
+                    help="(--chaos-soak) override every default per-site "
+                         "firing probability with one value in [0,1]")
     ap.add_argument("--host", default="127.0.0.1",
                     help="(--http) bind address")
     ap.add_argument("--shards", type=int, default=0,
@@ -147,6 +174,50 @@ def main():
     engine = ServeEngine(cfg, params, max_len=args.prompt_len + args.gen,
                          packed=args.packed, mesh=mesh)
 
+    if args.chaos_soak:
+        import numpy as np
+
+        from repro.serve import (DEFAULT_RATES, FaultSchedule,
+                                 SamplingParams, soak_session)
+
+        rates = dict(DEFAULT_RATES) if args.chaos_rate is None else \
+            {s: args.chaos_rate for s in DEFAULT_RATES}
+        rng = np.random.default_rng(12345)
+        prompts = [rng.integers(0, cfg.vocab_size,
+                                (int(rng.integers(4, args.prompt_len + 1)),)
+                                ).astype(np.int32)
+                   for _ in range(args.requests)]
+
+        def make(inj):
+            return engine.session(lanes=args.lanes,
+                                  page_size=args.page_size,
+                                  segment=args.segment,
+                                  prefix_cache=args.prefix_cache,
+                                  audit=True, faults=inj)
+
+        failed = 0
+        for i in range(args.chaos_soak):
+            seed = args.chaos_seed + i
+            sched = FaultSchedule.random(seed, rates)
+            rep = soak_session(
+                make, prompts, sched,
+                params_for=lambda i: SamplingParams(max_tokens=args.gen),
+                preempt_period=7)
+            print(f"[chaos] {rep.summary()}")
+            if not rep.ok:
+                failed += 1
+                print(f"[chaos] FAILING SCHEDULE seed={seed} — replay with "
+                      f"--chaos-soak 1 --chaos-seed {seed}")
+                print(f"[chaos] plan: {sched.to_json()}")
+                for f in rep.failures:
+                    print(f"[chaos]   {f}")
+        if failed:
+            raise SystemExit(
+                f"[chaos] {failed}/{args.chaos_soak} schedules FAILED")
+        print(f"[chaos] {args.chaos_soak} schedules drained clean "
+              "(audit, terminal statuses, bit-identity)")
+        return
+
     if args.http is not None:
         from repro.gateway import run_gateway
 
@@ -162,7 +233,8 @@ def main():
                     segment=args.segment, prefix_cache=args.prefix_cache,
                     max_pending=args.max_pending, audit=args.audit,
                     host_page_budget=args.host_pages,
-                    metrics_tenants=args.metrics_tenants)
+                    metrics_tenants=args.metrics_tenants,
+                    watchdog_timeout=args.watchdog_timeout)
         print("[serve] gateway drained; exiting")
         return
 

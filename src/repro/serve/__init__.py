@@ -1,4 +1,5 @@
 from . import reasons
+from .chaos import DEFAULT_RATES, FaultSchedule, SoakReport, soak_session
 from .engine import ServeEngine, pack_weights
 from .faults import FaultInjector, InjectedFault, corrupt_prefix_index
 from .paged_cache import (CachePool, PageAllocator, commit_prefill,

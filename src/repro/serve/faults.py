@@ -36,6 +36,22 @@ stack polls ``should_fire(site)`` at four choke points:
   host_pool        host slot allocation (``SwapManager.alloc_slots``) —
                    atomic like ``page_alloc``: fires before the free list
                    moves, callers fall back as for ``swap_out``
+  device_oom       simulated RESOURCE_EXHAUSTED at the decode-segment
+                   dispatch (``ServeSession``) — polled host-side BEFORE
+                   the pool is donated, so containment fails ONE victim
+                   (the newest active request: freeing its pages models
+                   the headroom the retry needs) and co-resident lanes
+                   keep decoding bit-identically
+  shard_loss       a mesh device dropping mid-segment (``ServeSession``
+                   under a serve mesh; never polled single-device) —
+                   fail-fast drain of every affected lane with the typed
+                   ``shard-lost`` reason; mesh health surfaces in
+                   ``stats()["mesh"]``
+  ckpt_corrupt     checkpoint-load byte corruption (``checkpoint/``):
+                   flips bytes in a leaf's raw stream before the
+                   checksum walk — the crc32 verify turns it into a
+                   typed ``CheckpointCorruption``, never silently-wrong
+                   weights
   ===============  ========================================================
 
 Injection is counted per site: ``arm(site, at=2)`` fires on the third
@@ -54,7 +70,8 @@ import os
 from typing import Dict, List, Optional, Tuple
 
 SITES = ("page_alloc", "fork_page", "kernel_dispatch", "prefix_index",
-         "swap_out", "swap_in", "host_pool")
+         "swap_out", "swap_in", "host_pool", "device_oom", "shard_loss",
+         "ckpt_corrupt")
 
 
 class InjectedFault(RuntimeError):
@@ -104,15 +121,42 @@ class FaultInjector:
     def from_env(cls, env: Optional[str] = None) -> Optional["FaultInjector"]:
         """Parse ``REPRO_FAULTS="site@idx,site@idx"`` (``@idx`` optional,
         default 0). Returns None when unset/empty — the common case costs
-        one getenv per session, nothing per step."""
+        one getenv per session, nothing per step.
+
+        Parsing is STRICT: an unknown site name, an empty entry, or a
+        malformed poll index raises ``ValueError`` naming the offending
+        entry. A chaos plan with a typo'd site would otherwise compile to
+        a plan that silently never fires — the drill would "pass" without
+        ever drilling anything."""
         spec = os.environ.get("REPRO_FAULTS", "") if env is None else env
         spec = spec.strip()
         if not spec:
             return None
         inj = cls()
         for part in spec.split(","):
-            site, _, idx = part.strip().partition("@")
-            inj.arm(site, at=int(idx) if idx else 0)
+            part = part.strip()
+            if not part:
+                raise ValueError(
+                    f"REPRO_FAULTS: empty entry in {spec!r} "
+                    "(format: 'site@idx,site@idx')")
+            site, _, idx = part.partition("@")
+            site = site.strip()
+            if site not in SITES:
+                raise ValueError(
+                    f"REPRO_FAULTS: unknown fault site {site!r} in entry "
+                    f"{part!r} — refusing a plan that would silently never "
+                    f"fire (have {SITES})")
+            try:
+                at = int(idx) if idx else 0
+            except ValueError:
+                raise ValueError(
+                    f"REPRO_FAULTS: bad poll index {idx!r} in entry "
+                    f"{part!r} (format: 'site@idx', idx a non-negative "
+                    "integer)") from None
+            if at < 0:
+                raise ValueError(
+                    f"REPRO_FAULTS: negative poll index in entry {part!r}")
+            inj.arm(site, at=at)
         return inj
 
 

@@ -430,6 +430,10 @@ class PrefixCache:
         if self.swap is None or not pos \
                 or any(alloc.refs[p] != 1 for p in pos):
             return 0
+        if not node.ok():
+            # demote reseals the node — silently re-checksumming corrupted
+            # content would LAUNDER the corruption into a valid seal
+            raise IndexCorruption("demote victim failed its checksum")
         slots = self.swap.demote(pos)
         if slots is None:
             return 0
@@ -444,8 +448,17 @@ class PrefixCache:
 
     def _evict_node(self, node: _Node, alloc) -> int:
         """Plain leaf eviction; host-resident entries free their slots.
-        Returns the number of device pages freed."""
-        node.parent.children.pop(node.key[:self.page_size].tobytes())
+        Returns the number of device pages freed. The victim is
+        integrity-checked FIRST: corruption nobody has looked up yet
+        (``corrupt_prefix_index`` flips key bytes in place) would
+        otherwise make the keyed pop below remove the wrong sibling — or
+        KeyError out of the containment path itself. A mismatch raises
+        ``IndexCorruption``, the reclaim caller's cue to quarantine."""
+        kb = node.key[:self.page_size].tobytes()
+        if not node.ok() or node.parent.children.get(kb) is not node:
+            raise IndexCorruption(
+                "reclaim victim failed its integrity check")
+        node.parent.children.pop(kb)
         freed = 0
         for p in node.pages:
             if p < 0:

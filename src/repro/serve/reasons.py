@@ -50,10 +50,21 @@ HOST_BUDGET = "host-budget"      # both memory tiers (HBM pool + host swap
 INJECTED = "injected"            # injected:<site> — deterministic fault drill
 POOL_LOST = "pool-lost"          # pool-lost:<exc> — dispatch died post-donation
 BAD_LOGITS = "bad-logits"        # non-finite prefill logits under audit
+OOM = "oom"                      # oom:<where> — simulated RESOURCE_EXHAUSTED
+                                 # at dispatch; the victim FAILs, co-residents
+                                 # keep decoding bit-identically
+SHARD_LOST = "shard-lost"        # shard-lost:<shard> — a mesh device dropped
+                                 # mid-segment; every affected lane fail-fast
+                                 # drains (TP shards heads, so one lane spans
+                                 # all shards — all lanes are affected)
+WATCHDOG = "watchdog"            # the gateway step driver stalled/crashed;
+                                 # live SSE streams end with this typed error
+                                 # instead of hanging
 
 #: every reason the serving stack can emit, bare or as a prefix.
 ALL_REASONS = frozenset({QUEUE_FULL, TENANT_QUOTA, PAGE_BUDGET, DEADLINE,
-                         HOST_BUDGET, INJECTED, POOL_LOST, BAD_LOGITS})
+                         HOST_BUDGET, INJECTED, POOL_LOST, BAD_LOGITS,
+                         OOM, SHARD_LOST, WATCHDOG})
 
 #: reasons ``ShedError`` may carry (admission-time rejections only).
 SHED_REASONS = frozenset({QUEUE_FULL, TENANT_QUOTA, PAGE_BUDGET, DEADLINE,
@@ -92,3 +103,38 @@ def http_for_reason(reason: str) -> Tuple[int, Optional[int]]:
     Unknown reasons map to a plain 503 — fail safe, never crash the
     gateway over a new reason string the table hasn't learned yet."""
     return HTTP_STATUS.get(base_reason(reason), (503, None))
+
+
+#: ceiling for the live Retry-After hint — past this the client should be
+#: backing off on its own schedule, not ours.
+RETRY_AFTER_CAP = 30
+
+#: reasons whose Retry-After scales with live queue depth: both drain as
+#: requests finish, so the honest hint is "how long until my turn", not a
+#: constant. tenant-quota and deadline stay at the table floor — their
+#: clearing time depends on the CLIENT's own traffic, not the queue.
+_DEPTH_SCALED = frozenset({QUEUE_FULL, HOST_BUDGET})
+
+
+def retry_after_seconds(reason: str, stats: Optional[dict] = None,
+                        floor: Optional[int] = None) -> Optional[int]:
+    """Live ``Retry-After`` hint for a shed, derived from a
+    ``ServeSession.stats()`` snapshot: queue depth (pending + active) in
+    units of lane-batches approximates how many admission rounds must
+    drain before the retry can land. Falls back to the static table value
+    when no snapshot is given, the reason isn't depth-scaled, or the
+    snapshot is malformed; returns None exactly when the table says no
+    Retry-After (``page-budget`` — retrying verbatim is futile)."""
+    table = http_for_reason(reason)[1]
+    if floor is None:
+        floor = table
+    if floor is None:
+        return None
+    if stats is None or base_reason(reason) not in _DEPTH_SCALED:
+        return floor
+    try:
+        lanes = max(int(stats.get("lanes", 1)), 1)
+        depth = int(stats.get("pending", 0)) + int(stats.get("active", 0))
+    except (TypeError, ValueError):
+        return floor
+    return max(floor, min(RETRY_AFTER_CAP, -(-depth // lanes)))

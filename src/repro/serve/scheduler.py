@@ -522,8 +522,15 @@ class Scheduler:
             # pin the hit's own path so the reclaim sweep cannot demote
             # or evict the very entry being promoted
             self.prefix_cache.pin(hit.node)
-            self.prefix_cache.reclaim(self.alloc,
-                                      n_fault - self.alloc.n_free)
+            try:
+                self.prefix_cache.reclaim(self.alloc,
+                                          n_fault - self.alloc.n_free)
+            except IndexCorruption:
+                # sweep walked a corrupted node before any lookup did:
+                # same containment as _lookup — quarantine + cold path
+                self.prefix_cache.unpin(hit.node)
+                self.prefix_cache.quarantine(self.alloc)
+                return None
             self.prefix_cache.unpin(hit.node)
         if n_fault > self.alloc.n_free:
             return None
@@ -602,19 +609,32 @@ class Scheduler:
                 if self.prefix_cache is not None:
                     if hit is not None:
                         _hold()
-                    ok = self.prefix_cache.reclaim(
-                        self.alloc, private_need - self.alloc.n_free)
-                    if not ok and hit is not None:
-                        # the hit itself may pin the last reclaimable pages
-                        # (e.g. its own CoW fork source, at minimum pool
-                        # size): fall back to a COLD admission — dropping
-                        # the hit makes the whole unpinned index
-                        # reclaimable, so an otherwise-idle pool can never
-                        # livelock on its own cache
-                        _drop()
-                        hit, shared, private_need = None, [], need
+                    try:
                         ok = self.prefix_cache.reclaim(
-                            self.alloc, need - self.alloc.n_free)
+                            self.alloc, private_need - self.alloc.n_free)
+                        if not ok and hit is not None:
+                            # the hit itself may pin the last reclaimable
+                            # pages (e.g. its own CoW fork source, at
+                            # minimum pool size): fall back to a COLD
+                            # admission — dropping the hit makes the whole
+                            # unpinned index reclaimable, so an
+                            # otherwise-idle pool can never livelock on
+                            # its own cache
+                            _drop()
+                            hit, shared, private_need = None, [], need
+                            ok = self.prefix_cache.reclaim(
+                                self.alloc, need - self.alloc.n_free)
+                    except IndexCorruption:
+                        # the reclaim sweep itself walked a corrupted node
+                        # (possible when corruption lands after this
+                        # round's lookups — no lookup ever verified it):
+                        # same containment as _lookup — quarantine, then
+                        # admit COLD against whatever the flush freed
+                        if hit is not None:
+                            _drop()
+                        self.prefix_cache.quarantine(self.alloc)
+                        hit, shared, private_need = None, [], need
+                        ok = need <= self.alloc.n_free
                 if not ok:
                     if self._preempt_for(head):
                         continue
@@ -699,6 +719,16 @@ class Scheduler:
         req.preempt_recompute += 1
         self.stats["preempt_swap"] -= 1
         self.stats["preempt_recompute"] += 1
+
+    def oom_victim(self) -> Optional[int]:
+        """Lane of the NEWEST active request (max submit ``seq``) — the
+        device-OOM containment victim. Failing the newest frees pages while
+        the longest-waited streams keep decoding; it is also the request a
+        client is most likely to simply retry. None when nothing is
+        active."""
+        if not self.active:
+            return None
+        return max(self.active, key=lambda ln: self.active[ln].seq)
 
     def fail(self, lane: int, reason: str) -> Request:
         """Contain a fault into the lane's request: release lane + pages

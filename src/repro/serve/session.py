@@ -67,7 +67,7 @@ from repro.models.attention import paged_kernel_enabled, paged_kernel_override
 from .faults import FaultInjector, InjectedFault, corrupt_prefix_index
 from . import reasons
 from .paged_cache import pages_for
-from .prefix_cache import PrefixCache
+from .prefix_cache import IndexCorruption, PrefixCache
 from .sampling import logits_all_finite, sample_tokens
 from .scheduler import (TERMINAL, Request, RequestStatus, SamplingParams,
                         Scheduler)
@@ -293,6 +293,10 @@ class ServeSession:
         self._pool = None
         self._pool_key = ("paged", lanes, page_size, n_pages)
         self._closed = False
+        # shard-loss drill history (mesh sessions only): shard ids whose
+        # simulated drop was contained by a fail-fast lane drain. Surfaced
+        # via stats()["mesh"] so operators see the events.
+        self._lost_shards: list = []
         self._next_rid = 0
         self._handles = {}
         self._last_toks = None
@@ -364,7 +368,15 @@ class ServeSession:
             elif self._decode_segment():
                 self._drain_finished()
         if self.audit_mode:
-            self.audit()
+            try:
+                self.audit()
+            except IndexCorruption:
+                # the post-step audit is a DETECTOR, same as the lookup
+                # walk: corruption it finds quarantines the index (cold
+                # admission — always correct) instead of crashing the
+                # session; the re-audit below must then come back clean
+                self.prefix.quarantine(self.sched.alloc)
+                self.audit()
         return True
 
     def run_until_idle(self) -> None:
@@ -460,7 +472,21 @@ class ServeSession:
             if self.prefix is not None else None,
             "swap": self.swap_mgr.stats_dict()
             if self.swap_mgr is not None else None,
+            "mesh": self._mesh_stats(),
         }
+
+    def _mesh_stats(self) -> Optional[dict]:
+        """Mesh health snapshot (None single-device). ``healthy`` goes —
+        and stays — False after a contained shard-loss event: in a real
+        deployment the mesh must be rebuilt before the instance is fully
+        trusted again, so the flag is conservative even though this
+        simulation keeps serving on the (actually intact) devices."""
+        if getattr(self.engine, "mesh", None) is None:
+            return None
+        return {"shards": int(getattr(self.engine, "tp", 1)),
+                "shard_loss_events": len(self._lost_shards),
+                "lost": list(self._lost_shards),
+                "healthy": not self._lost_shards}
 
     @property
     def idle(self) -> bool:
@@ -799,6 +825,40 @@ class ServeSession:
         if self.prefix is not None:
             self.prefix.flush(self.sched.alloc)
 
+    def _contain_oom(self) -> None:
+        """Simulated RESOURCE_EXHAUSTED at the decode-segment dispatch,
+        polled host-side BEFORE ``_take_pool()`` — the pool never moves.
+        Containment fails ONE victim: the newest active request (freeing
+        its pages models the headroom the dispatch retry needs, and the
+        oldest streams — the ones a client has waited longest on — keep
+        their bit-identical decode)."""
+        lane = self.sched.oom_victim()
+        if lane is None:
+            return
+        req = self.sched.fail(lane, reasons.format_reason(
+            reasons.OOM, "decode-segment"))
+        self._handles.pop(req.rid, None)
+        for freed in self.sched.drain_freed_lanes():
+            self._reset_lane(freed)
+
+    def _contain_shard_loss(self) -> None:
+        """A mesh device dropped mid-segment. TP shards every head across
+        the mesh axis, so EVERY active lane's next segment would need the
+        lost shard: fail-fast drain them all with the typed ``shard-lost``
+        reason rather than stream bytes computed from a partial mesh.
+        Pending requests are untouched; the session keeps admitting (the
+        simulated mesh still dispatches), but ``stats()["mesh"]`` stays
+        degraded so operators see the event."""
+        shard = len(self._lost_shards) % max(
+            int(getattr(self.engine, "tp", 1)), 1)
+        reason = reasons.format_reason(reasons.SHARD_LOST, f"shard{shard}")
+        for lane in list(self.sched.active):
+            req = self.sched.fail(lane, reason)
+            self._handles.pop(req.rid, None)
+        for lane in self.sched.drain_freed_lanes():
+            self._reset_lane(lane)
+        self._lost_shards.append(shard)
+
     def _decode_segment(self) -> bool:
         """One fused ``segment``-step scan over the full lane pool; lanes
         whose request finished or was cancelled compute into the garbage
@@ -815,6 +875,18 @@ class ServeSession:
                 raise RuntimeError("scheduler deadlock: pending requests "
                                    "but nothing admissible")
             return False
+        if self.faults is not None \
+                and getattr(self.engine, "mesh", None) is not None \
+                and self.faults.should_fire("shard_loss"):
+            self._contain_shard_loss()
+            return False
+        if self.faults is not None \
+                and self.faults.should_fire("device_oom"):
+            # polled host-side BEFORE _take_pool(), like kernel_dispatch:
+            # the pool never moves, so containment costs one victim
+            self._contain_oom()
+            if not self.sched.active:
+                return False
         # the sampled/greedy split is per SEGMENT, from the lanes actually
         # live in it — all-greedy traffic never pays the per-step RNG work,
         # and both variants stay cached for a mixed session

@@ -1,0 +1,242 @@
+"""Chaos-soak suite (``-m soak``): seeded random fault storms to drain.
+
+Where tests/test_serve_faults.py pins ONE fault to one poll index and
+asserts its exact containment, this suite compiles per-site firing
+probabilities into concrete plans (``FaultSchedule.random``) and runs
+whole schedules against live sessions — the cross products of containment
+paths that hand-picked drills cannot enumerate. The acceptance contract
+per schedule: drain within the step cap (a hang IS a failure), every
+handle terminal, abnormal exits typed, allocator + index audits clean,
+and every DONE greedy stream with zero recompute resumes BIT-identical
+to the fault-free oracle.
+
+Reproducibility is the point: any failing schedule dumps its plan JSON
+under ``chaos_failures/`` (CI uploads it as an artifact) and names the
+seed in the assertion — ``FaultSchedule.random(seed, rates, horizon)``
+regenerates the identical plan, so one printed integer replays the
+failure byte-for-byte.
+
+``REPRO_SOAK_SCHEDULES`` scales N (default keeps the tier-1 run fast;
+the CI soak job and the acceptance run raise it).
+"""
+import json
+import os
+import threading
+import urllib.request
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import lm_init
+from repro.serve import (DEFAULT_RATES, FaultInjector, FaultSchedule,
+                         SamplingParams, ServeEngine, soak_session)
+
+pytestmark = pytest.mark.soak
+
+N_SCHEDULES = int(os.environ.get("REPRO_SOAK_SCHEDULES", "5"))
+BASE_SEED = int(os.environ.get("REPRO_SOAK_SEED", "1000"))
+FAILURE_DIR = Path(__file__).resolve().parent.parent / "chaos_failures"
+
+RNG = np.random.default_rng(11)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_smoke("gemma2-2b")
+    params, _ = lm_init(jax.random.PRNGKey(0), cfg)
+    return ServeEngine(cfg, params, max_len=32), cfg
+
+
+def _prompts(cfg, lens):
+    return [RNG.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+            for L in lens]
+
+
+# ---------------------------------------------------------------------------
+# schedule generation: deterministic, serializable, strict
+# ---------------------------------------------------------------------------
+def test_same_seed_compiles_the_identical_plan():
+    a = FaultSchedule.random(123, DEFAULT_RATES, horizon=64)
+    b = FaultSchedule.random(123, DEFAULT_RATES, horizon=64)
+    assert a.plan == b.plan and a == b
+    c = FaultSchedule.random(124, DEFAULT_RATES, horizon=64)
+    assert a.plan != c.plan            # astronomically unlikely collision
+
+
+def test_schedule_serialization_roundtrips():
+    s = FaultSchedule.random(7, DEFAULT_RATES, horizon=48)
+    assert FaultSchedule.from_json(s.to_json()) == s
+    assert json.loads(s.to_json())["seed"] == 7
+    # canonical: same schedule → byte-identical JSON (artifact diffing)
+    assert s.to_json() == FaultSchedule.from_json(s.to_json()).to_json()
+
+
+def test_schedule_spec_roundtrips_through_strict_from_env():
+    s = FaultSchedule.random(9, DEFAULT_RATES, horizon=48)
+    assert s.plan, "seed 9 must arm something for this test to bite"
+    inj = FaultInjector.from_env(s.spec())
+    assert inj._at == s.injector()._at
+
+
+def test_schedule_save_writes_the_plan(tmp_path):
+    s = FaultSchedule.random(5, DEFAULT_RATES)
+    path = tmp_path / "plan.json"
+    s.save(path)
+    assert FaultSchedule.from_json(path.read_text()) == s
+
+
+def test_schedule_validation_is_strict():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultSchedule({"typo_site": [1]})
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultSchedule.random(1, {"typo_site": 0.5})
+    with pytest.raises(ValueError, match="rate"):
+        FaultSchedule.random(1, {"page_alloc": 1.5})
+    with pytest.raises(ValueError, match="negative"):
+        FaultSchedule({"page_alloc": [-1]})
+    with pytest.raises(ValueError, match="horizon"):
+        FaultSchedule.random(1, DEFAULT_RATES, horizon=0)
+
+
+# ---------------------------------------------------------------------------
+# the soak itself: N seeded storms against live sessions
+# ---------------------------------------------------------------------------
+def _dump_failure(schedule, report):
+    FAILURE_DIR.mkdir(exist_ok=True)
+    path = FAILURE_DIR / f"seed_{schedule.seed}.json"
+    path.write_text(json.dumps(
+        {"schedule": json.loads(schedule.to_json()),
+         "failures": report.failures, "summary": report.summary()},
+        indent=2, sort_keys=True) + "\n")
+    return path
+
+
+def test_seeded_soak_schedules_drain_clean(engine):
+    eng, cfg = engine
+    lens = [9, 11, 7, 13, 10, 8]
+    prompts = _prompts(cfg, lens)
+    refs = {i: np.asarray(eng.generate(jnp.asarray(p[None]), 6)[0])
+            for i, p in enumerate(prompts)}
+
+    failures = []
+    for i in range(N_SCHEDULES):
+        seed = BASE_SEED + i
+        schedule = FaultSchedule.random(seed, DEFAULT_RATES, horizon=64)
+        # alternate the swap tier on and off so swap_out/swap_in/host_pool
+        # sites sit inside the storm half the time
+        host_budget = 16 if i % 2 else None
+
+        def make(inj, hb=host_budget):
+            return eng.session(lanes=2, page_size=8, segment=2, audit=True,
+                               faults=inj, prefix_cache=True,
+                               host_page_budget=hb)
+
+        report = soak_session(
+            make, prompts, schedule,
+            params_for=lambda i: SamplingParams(max_tokens=6),
+            oracle=lambda i: refs[i],
+            preempt_period=5, max_steps=500)
+        if not report.ok:
+            path = _dump_failure(schedule, report)
+            failures.append(
+                f"seed {seed} FAILED (replay: FaultSchedule.random({seed}, "
+                f"DEFAULT_RATES, horizon=64); plan dumped to {path}):\n  "
+                + "\n  ".join(report.failures))
+    assert not failures, "\n".join(failures)
+
+
+def test_failing_or_not_a_soak_replays_exactly(engine):
+    """Same seed → same storm, same wreckage: the whole debugging story
+    for a failing soak rests on this. Two runs of one schedule must agree
+    on every fired fault, every outcome, and every token count."""
+    eng, cfg = engine
+    prompts = _prompts(cfg, [9, 12, 7])
+    schedule = FaultSchedule.random(BASE_SEED, DEFAULT_RATES, horizon=64)
+
+    def run():
+        def make(inj):
+            return eng.session(lanes=2, page_size=8, segment=2, audit=True,
+                               faults=inj, prefix_cache=True)
+        return soak_session(
+            make, prompts, schedule,
+            params_for=lambda i: SamplingParams(max_tokens=5),
+            preempt_period=4, max_steps=500)
+
+    a, b = run(), run()
+    assert a.ok and b.ok, (a.failures, b.failures)
+    assert a.fired == b.fired
+    assert a.outcomes == b.outcomes
+    assert a.steps == b.steps
+    assert a.shed_submits == b.shed_submits
+
+
+# ---------------------------------------------------------------------------
+# gateway under storm: zero hung SSE streams
+# ---------------------------------------------------------------------------
+def test_gateway_soak_no_hung_sse_streams(engine):
+    """Every SSE stream opened against a gateway whose session is under a
+    fault storm must terminate — ``end`` or a typed ``error`` event —
+    within the socket deadline. A stream that neither ends nor errors is
+    a hung client, the exact failure the containment contract forbids."""
+    from repro.gateway import Gateway, GatewayHTTP
+
+    eng, cfg = engine
+    schedule = FaultSchedule.random(BASE_SEED + 77, DEFAULT_RATES,
+                                    horizon=48)
+    gw = Gateway(eng, lanes=2, page_size=8, segment=2, prefix_cache=True,
+                 audit=True, faults=schedule.injector(), max_pending=8)
+    http = GatewayHTTP(gw)
+    host, port = http.start_background()
+    url = f"http://{host}:{port}/v1/generate"
+    prompts = _prompts(cfg, [9, 11, 7, 13])
+
+    results = {}
+
+    def stream(i):
+        body = json.dumps({"prompt": [int(t) for t in prompts[i]],
+                           "max_tokens": 6,
+                           "request_id": f"soak-{i}"}).encode()
+        req = urllib.request.Request(
+            url, data=body, headers={"Content-Type": "application/json"})
+        try:
+            with urllib.request.urlopen(req, timeout=60) as r:
+                text = r.read().decode()     # read-until-close framing
+                results[i] = ("ok", text)
+        except Exception as e:               # noqa: BLE001
+            results[i] = ("exc", repr(e))
+
+    threads = [threading.Thread(target=stream, args=(i,))
+               for i in range(len(prompts))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+        assert not t.is_alive(), "hung SSE stream thread"
+    try:
+        terminal = 0
+        for i, (kind, text) in sorted(results.items()):
+            if kind == "exc":
+                # admission sheds surface as 429/503 — legal under storm
+                assert "429" in text or "503" in text, text
+                continue
+            assert ("event: end" in text) or ("event: error" in text), \
+                f"stream {i} got no terminal event: {text!r}"
+            # the client's request_id is echoed in the terminal payload
+            assert f'"request_id": "soak-{i}"' in text
+            terminal += 1
+        assert len(results) == len(prompts)
+        # after the storm drains, the session's books are clean
+        deadline = 50
+        while gw._tracked and deadline:
+            import time
+            time.sleep(0.1)
+            deadline -= 1
+        with gw.lock:
+            gw.session.audit()
+    finally:
+        http.stop()
+        gw.close()

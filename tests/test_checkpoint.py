@@ -1,0 +1,124 @@
+"""Checkpoint integrity suite: crc32-verified leaves, typed corruption.
+
+B⊕LD raises the stakes on checkpoint bit rot: a flipped bit in a packed
+Boolean leaf is a SIGN FLIP, and ``sign()`` activations amplify it into
+confidently wrong tokens — not noise, not a crash. So restore must be
+all-or-typed-error: every leaf's on-disk bytes verify against a manifest
+crc32 BEFORE deserialization, a mismatch raises ``CheckpointCorruption``
+naming the step/leaf/file, and pre-checksum checkpoints (no ``crc32``
+manifest key) still restore for back-compat. The ``ckpt_corrupt`` fault
+site drills the detector end-to-end through ``FaultInjector``.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointCorruption, CheckpointManager,
+                              restore_pytree, save_pytree)
+from repro.serve import FaultInjector
+
+
+def _tree():
+    """Mixed-dtype pytree exercising all three leaf encodings: packed
+    Boolean int8, bf16-as-u16, plain float32."""
+    return {
+        "w_bool": jnp.asarray(np.random.default_rng(0).choice(
+            [-1, 1], (16, 8)).astype(np.int8)),
+        "scale": jnp.asarray(np.random.default_rng(1).normal(
+            size=(8,)).astype(np.float32)),
+        "emb": jnp.asarray(np.random.default_rng(2).normal(
+            size=(4, 4)), jnp.bfloat16),
+    }
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_manifest_carries_crc32_and_roundtrips(tmp_path):
+    tree = _tree()
+    save_pytree(tree, tmp_path, step=5, sync=True)
+    manifest = json.loads(
+        (tmp_path / "step_000000005" / "manifest.json").read_text())
+    for key, entry in manifest["leaves"].items():
+        assert isinstance(entry["crc32"], int), key
+        assert 0 <= entry["crc32"] <= 0xFFFFFFFF
+    restored, step = restore_pytree(tree, tmp_path)
+    assert step == 5
+    _assert_trees_equal(tree, restored)
+
+
+def test_on_disk_corruption_raises_typed_error(tmp_path):
+    tree = _tree()
+    save_pytree(tree, tmp_path, step=1, sync=True)
+    src = tmp_path / "step_000000001"
+    # flip one payload byte in one leaf file — classic bit rot
+    victim = sorted(src.glob("leaf_*.npy"))[0]
+    raw = bytearray(victim.read_bytes())
+    raw[-1] ^= 0x01
+    victim.write_bytes(bytes(raw))
+    with pytest.raises(CheckpointCorruption) as ei:
+        restore_pytree(tree, tmp_path)
+    e = ei.value
+    assert e.step == 1 and e.file == victim.name
+    assert "refusing to deserialize" in str(e)
+    # typed, not a bare RuntimeError lookalike: callers can fall back
+    assert isinstance(e, RuntimeError)
+
+
+def test_truncation_detected_too(tmp_path):
+    tree = _tree()
+    save_pytree(tree, tmp_path, step=2, sync=True)
+    src = tmp_path / "step_000000002"
+    victim = sorted(src.glob("leaf_*.npy"))[-1]
+    victim.write_bytes(victim.read_bytes()[:-3])
+    with pytest.raises(CheckpointCorruption):
+        restore_pytree(tree, tmp_path)
+
+
+def test_ckpt_corrupt_fault_drills_the_detector(tmp_path):
+    """The chaos-site path: an armed ``ckpt_corrupt`` flips bytes in the
+    in-memory stream before the checksum walk — the on-disk artifact is
+    untouched, so the retry restores clean. Exactly the semantics a
+    transient read error should have."""
+    tree = _tree()
+    save_pytree(tree, tmp_path, step=3, sync=True)
+    inj = FaultInjector({"ckpt_corrupt": [0]})
+    with pytest.raises(CheckpointCorruption):
+        restore_pytree(tree, tmp_path, faults=inj)
+    assert inj.fired == [("ckpt_corrupt", 0)]
+    restored, step = restore_pytree(tree, tmp_path)   # artifact intact
+    assert step == 3
+    _assert_trees_equal(tree, restored)
+
+
+def test_pre_checksum_checkpoints_still_restore(tmp_path):
+    """Back-compat: a checkpoint written before checksums (no ``crc32``
+    manifest key) restores with the verify skipped, not a KeyError."""
+    tree = _tree()
+    save_pytree(tree, tmp_path, step=4, sync=True)
+    mpath = tmp_path / "step_000000004" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    for entry in manifest["leaves"].values():
+        del entry["crc32"]
+    mpath.write_text(json.dumps(manifest))
+    restored, step = restore_pytree(tree, tmp_path)
+    assert step == 4
+    _assert_trees_equal(tree, restored)
+
+
+def test_manager_restore_latest_passes_faults(tmp_path):
+    mgr = CheckpointManager(tmp_path, every=1)
+    tree = _tree()
+    mgr.save_now(7, tree)
+    inj = FaultInjector({"ckpt_corrupt": [1]})        # second leaf read
+    with pytest.raises(CheckpointCorruption):
+        mgr.restore_latest(tree, faults=inj)
+    restored, step = mgr.restore_latest(tree)
+    assert step == 7
+    _assert_trees_equal(tree, restored)

@@ -449,18 +449,22 @@ def test_client_disconnect_cancels_request():
 # ---------------------------------------------------------------------------
 def test_parse_generate_body():
     from repro.serve import SamplingParams
-    prompt, params = parse_generate_body(
+    prompt, params, request_id = parse_generate_body(
         {"prompt": [1, 2, 3], "max_tokens": 7, "temperature": 0.5,
          "seed": 9, "stop_token": 2, "deadline_ms": 100, "priority": 3,
-         "tenant": "acme", "stream": True})
+         "tenant": "acme", "stream": True, "request_id": "cli-1"})
     np.testing.assert_array_equal(prompt, np.asarray([1, 2, 3], np.int32))
     assert params == SamplingParams(max_tokens=7, temperature=0.5, seed=9,
                                     stop_token=2, deadline_ms=100.0,
                                     priority=3, tenant="acme")
-    # defaults pass through untouched
-    _, params = parse_generate_body({"prompt": [4]})
-    assert params == SamplingParams()
-    for bad in ("x", {}, {"prompt": [0.5]}, {"prompt": [1], "nope": 2}):
+    assert request_id == "cli-1"
+    # defaults pass through untouched; request_id stays optional
+    _, params, request_id = parse_generate_body({"prompt": [4]})
+    assert params == SamplingParams() and request_id is None
+    for bad in ("x", {}, {"prompt": [0.5]}, {"prompt": [1], "nope": 2},
+                {"prompt": [1], "request_id": 7},
+                {"prompt": [1], "request_id": ""},
+                {"prompt": [1], "request_id": "x" * 129}):
         with pytest.raises(ValueError):
             parse_generate_body(bad if isinstance(bad, dict) else bad)
 
@@ -574,6 +578,203 @@ def test_metrics_tenant_labels_bounded():
                 in text)
         assert "initech" not in text        # bounded: never its own label
         assert "gateway_ttft_seconds_count 3" in text
+    finally:
+        srv.stop()
+        gw.close()
+
+
+# ---------------------------------------------------------------------------
+# 8. client request_id: terminal echo, live-duplicate 409, reuse after drain
+# ---------------------------------------------------------------------------
+def test_request_id_echoed_in_terminal_payload():
+    """A client-supplied ``request_id`` comes back verbatim in the SSE
+    terminal payload (the idempotency receipt), and requests without one
+    get no ``request_id`` key at all — absent, not null."""
+    engine, cfg = _engine()
+    gw, srv, host, port = _boot(engine, lanes=2, page_size=4)
+    try:
+        p = RNG.integers(0, cfg.vocab_size, (4,)).astype(np.int32)
+        status, _, text = _post(host, port, {"prompt": p.tolist(),
+                                             "max_tokens": 3,
+                                             "request_id": "echo-1"})
+        _, terminals = _parse_sse(text)
+        assert status == 200 and terminals[0][0] == "end"
+        assert terminals[0][1]["request_id"] == "echo-1"
+        status, _, text = _post(host, port, {"prompt": p.tolist(),
+                                             "max_tokens": 3})
+        _, terminals = _parse_sse(text)
+        assert status == 200 and "request_id" not in terminals[0][1]
+        _, metrics = _get(host, port, "/metrics")
+        assert "gateway_requests_with_id_total 1" in metrics
+        assert "gateway_request_id_conflicts_total 0" in metrics
+    finally:
+        srv.stop()
+        gw.close()
+
+
+def test_duplicate_live_request_id_is_409_then_reusable():
+    """While request_id ``dup-1`` is live, a second submission with the
+    same id is refused with 409 naming the original rid — and once the
+    original drains, the id is submittable again (duplicate detection
+    covers LIVE requests only, per the idempotency-token contract)."""
+    engine, cfg = _engine()
+    gw, srv, host, port = _boot(engine, lanes=1, page_size=4, segment=1)
+    try:
+        p = RNG.integers(0, cfg.vocab_size, (5,)).astype(np.int32)
+        result = {}
+
+        def original():
+            result["r"] = _post(host, port, {"prompt": p.tolist(),
+                                             "max_tokens": 24,
+                                             "request_id": "dup-1"})
+
+        t = threading.Thread(target=original)
+        t.start()
+        _wait(lambda: "dup-1" in gw._live_ids, msg="original live")
+        rid = gw._live_ids["dup-1"]
+        status, _, body = _post(host, port, {"prompt": p.tolist(),
+                                             "max_tokens": 2,
+                                             "request_id": "dup-1"})
+        assert status == 409
+        err = json.loads(body)
+        assert err["error"] == "duplicate-request-id"
+        assert err["request_id"] == "dup-1" and err["rid"] == rid
+        # the original stream is untouched by the collision
+        t.join(timeout=120)
+        assert not t.is_alive()
+        status, _, text = result["r"]
+        toks, terminals = _parse_sse(text)
+        assert status == 200 and terminals[0][0] == "end"
+        assert terminals[0][1]["request_id"] == "dup-1"
+        assert len(toks) == 24
+        # terminal → the id is released and reusable
+        _wait(lambda: "dup-1" not in gw._live_ids, msg="id released")
+        status, _, text = _post(host, port, {"prompt": p.tolist(),
+                                             "max_tokens": 2,
+                                             "request_id": "dup-1"})
+        _, terminals = _parse_sse(text)
+        assert status == 200 and terminals[0][0] == "end"
+        assert terminals[0][1]["request_id"] == "dup-1"
+        _, metrics = _get(host, port, "/metrics")
+        assert "gateway_requests_with_id_total 2" in metrics
+        assert "gateway_request_id_conflicts_total 1" in metrics
+    finally:
+        srv.stop()
+        gw.close()
+
+
+# ---------------------------------------------------------------------------
+# 9. Retry-After derived from live queue depth
+# ---------------------------------------------------------------------------
+def test_retry_after_reflects_live_queue_depth():
+    """A queue-full shed against a backed-up gateway advertises a
+    depth-scaled Retry-After — ceil((pending + active) / lanes) admission
+    rounds — not the static floor of 1. Five in-flight requests on one
+    lane → ``Retry-After: 5``."""
+    from repro.serve import SamplingParams
+    engine, cfg = _engine()
+    gw, srv, host, port = _boot(engine, lanes=1, page_size=4, segment=1,
+                                max_pending=4)
+    try:
+        p = RNG.integers(0, cfg.vocab_size, (4,)).astype(np.int32)
+        handles = [gw.submit(p, SamplingParams(max_tokens=24))]
+        _wait(lambda: gw.session.stats()["active"] == 1, msg="lane busy")
+        for _ in range(4):                     # fill the pending queue
+            handles.append(gw.submit(p, SamplingParams(max_tokens=24)))
+        assert gw.session.stats()["pending"] == 4
+        status, headers, body = _post(host, port, {"prompt": p.tolist(),
+                                                   "max_tokens": 2})
+        assert status == 429
+        assert json.loads(body)["error"] == "queue-full"
+        # depth 5 (1 active + 4 pending) over 1 lane → 5 rounds
+        assert headers.get("Retry-After") == "5"
+        for h in handles:                      # don't drain 120 tokens
+            gw.cancel(h)
+    finally:
+        srv.stop()
+        gw.close()
+
+
+# ---------------------------------------------------------------------------
+# 10. watchdog self-healing: stalled/crashed step driver
+# ---------------------------------------------------------------------------
+def test_watchdog_trips_on_stalled_step_driver():
+    """Wedge the step driver mid-stream: the watchdog flips /healthz to
+    503 degraded, the live SSE stream ends with exactly one typed
+    ``watchdog`` error (request_id echoed, zero hung clients), new
+    submissions are refused with 503 degraded, and the trip is counted
+    in /metrics."""
+    engine, cfg = _engine()
+    gw, srv, host, port = _boot(engine, lanes=1, page_size=4, segment=1,
+                                watchdog_timeout=0.25)
+    try:
+        p = RNG.integers(0, cfg.vocab_size, (4,)).astype(np.int32)
+        result = {}
+
+        def stream():
+            result["r"] = _post(host, port, {"prompt": p.tolist(),
+                                             "max_tokens": 24,
+                                             "request_id": "wd-1"},
+                                timeout=60)
+
+        t = threading.Thread(target=stream)
+        t.start()
+        _wait(lambda: "wd-1" in gw._live_ids, msg="request live")
+        # every iteration now overruns the watchdog budget (but stays
+        # interruptible per-iteration, so close() can still join)
+        gw.session.step = lambda: time.sleep(0.5)
+        _wait(lambda: gw.watchdog_tripped, msg="watchdog trip")
+        assert "stalled" in gw.watchdog_reason
+        status, body = _get(host, port, "/healthz")
+        assert status == 503
+        health = json.loads(body)
+        assert health["status"] == "degraded"
+        assert health["reason"] == "watchdog"
+        # the live stream terminates with the typed watchdog error
+        t.join(timeout=60)
+        assert not t.is_alive(), "SSE stream hung after watchdog trip"
+        status, _, text = result["r"]
+        _, terminals = _parse_sse(text)
+        assert status == 200 and len(terminals) == 1
+        ev, payload = terminals[0]
+        assert ev == "error" and payload["reason"] == "watchdog"
+        assert payload["status"] == "failed"
+        assert payload["request_id"] == "wd-1"
+        # degraded gateways refuse new work — no Retry-After lie
+        status, headers, body = _post(host, port, {"prompt": p.tolist(),
+                                                   "max_tokens": 2})
+        assert status == 503
+        assert json.loads(body)["error"] == "degraded"
+        assert "Retry-After" not in headers
+        assert gw.cancel(None) is False        # cancels refuse too
+        _, metrics = _get(host, port, "/metrics")
+        assert "gateway_watchdog_trips_total 1" in metrics
+    finally:
+        srv.stop()
+        gw.close()
+
+
+def test_watchdog_trips_immediately_on_step_crash():
+    """A crashed step loop doesn't wait out the heartbeat: the exception
+    is recorded on the gateway and the trip happens from the driver's own
+    except handler, flipping /healthz to degraded."""
+    from repro.serve import SamplingParams
+    engine, cfg = _engine()
+    gw, srv, host, port = _boot(engine, lanes=1, page_size=4,
+                                watchdog_timeout=30.0)
+    try:
+        def boom():
+            raise RuntimeError("induced step crash")
+
+        gw.session.step = boom
+        # idle loops skip step(): submit to make the driver call it
+        p = RNG.integers(0, cfg.vocab_size, (4,)).astype(np.int32)
+        gw.submit(p, SamplingParams(max_tokens=2))
+        _wait(lambda: gw.watchdog_tripped, msg="trip on crash")
+        assert "induced step crash" in gw.watchdog_reason
+        assert isinstance(gw._step_error, RuntimeError)
+        status, body = _get(host, port, "/healthz")
+        assert status == 503 and json.loads(body)["reason"] == "watchdog"
     finally:
         srv.stop()
         gw.close()

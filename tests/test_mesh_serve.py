@@ -318,3 +318,69 @@ def test_overload_semantics_survive_sharding():
         print("OK")
     """))
     assert "OK" in out
+
+
+@pytest.mark.multidevice
+def test_shard_loss_fails_fast_and_reports_degraded_mesh():
+    """Chaos domain ``shard_loss`` under a real TP mesh: the armed fault
+    drops a device mid-segment — every active lane is FAILED with the
+    typed ``shard-lost:shardN`` reason (TP shards every head, so no lane
+    can make progress without the lost shard), the pool audits clean,
+    ``stats()["mesh"]`` flips to (and stays) ``healthy: False`` with the
+    event counted, and — the domain being simulated — a subsequent
+    request still streams token-identical to the unsharded oracle."""
+    out = _run(textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs import get_smoke
+        from repro.models import lm_init
+        from repro.serve import (FaultInjector, RequestStatus,
+                                 SamplingParams, ServeEngine)
+        from repro.launch.mesh import make_serve_mesh
+
+        n_dev = len(jax.devices())
+        cfg = get_smoke("gemma2-2b")
+        if n_dev > cfg.kv_heads_padded():
+            cfg = cfg.scaled(n_kv_heads=n_dev)
+        params, _ = lm_init(jax.random.PRNGKey(0), cfg)
+        mesh = make_serve_mesh(n_dev)
+
+        eng = ServeEngine(cfg, params, max_len=32, mesh=mesh)
+        ref = ServeEngine(cfg, params, max_len=32)
+        p1 = np.arange(5, dtype=np.int32) % cfg.vocab_size
+        p2 = (np.arange(8, dtype=np.int32) * 3 + 1) % cfg.vocab_size
+
+        inj = FaultInjector({"shard_loss": [0]})
+        with eng.session(lanes=2, page_size=4, segment=2, audit=True,
+                         faults=inj) as sess:
+            st = sess.stats()["mesh"]
+            assert st == {"shards": n_dev, "shard_loss_events": 0,
+                          "lost": [], "healthy": True}, st
+            h1 = sess.submit(p1, SamplingParams(max_tokens=6))
+            h2 = sess.submit(p2, SamplingParams(max_tokens=6))
+            sess.run_until_idle()
+
+            # fail-fast drain: BOTH lanes FAILED with the typed reason
+            assert inj.fired == [("shard_loss", 0)], inj.fired
+            for h in (h1, h2):
+                assert h.status is RequestStatus.FAILED, h.status
+                assert h.error == "shard-lost:shard0", h.error
+            sess.audit()                      # pool books balance
+
+            # mesh health is degraded — and stays degraded
+            st = sess.stats()["mesh"]
+            assert st["healthy"] is False and st["lost"] == [0], st
+            assert st["shard_loss_events"] == 1, st
+
+            # simulated domain: the engine still serves, token-identical
+            h3 = sess.submit(p1, SamplingParams(max_tokens=6))
+            sess.run_until_idle()
+            assert h3.status is RequestStatus.DONE, h3.status
+            got = np.asarray(h3.tokens_so_far(), np.int32)
+            st = sess.stats()["mesh"]
+            assert st["healthy"] is False and st["shard_loss_events"] == 1
+
+        want = np.asarray(ref.generate(jnp.asarray(p1[None]), 6)[0])
+        np.testing.assert_array_equal(got, want)
+        print("OK")
+    """))
+    assert "OK" in out

@@ -261,6 +261,67 @@ def test_preempted_request_keeps_its_quota_reservation():
     s.alloc.audit()
 
 
+class _FakeSwap:
+    """Host-only stand-in for serve/swap.py's SwapBridge: records every
+    capture/discard so the exactly-once contract is assertable without
+    device work."""
+
+    def __init__(self, host_pages=8):
+        self.host_pages = host_pages
+        self.captured = []
+        self.discarded = []
+        self._n = 0
+
+    def capture(self, req):
+        self._n += 1
+        rec = type("Rec", (), {"slots": (self._n,), "pos": 0, "cur": 0,
+                               "steps": 0})()
+        self.captured.append(rec)
+        return rec
+
+    def discard(self, rec):
+        self.discarded.append(rec)
+
+    def promote_hit(self, hit, pages):
+        raise AssertionError("no prefix cache in this test")
+
+
+def test_mid_swap_fail_returns_all_quota_exactly_once():
+    """The fault path the PR 8 exactly-once suite did not cover: a
+    request preempted WITH a swap capture whose re-admission then FAILs
+    (injected allocator fault). Its lane, pages, tenant reservation, and
+    host swap slots must each return exactly once — a leaked slot
+    starves the host tier, a double discard corrupts it."""
+    from repro.serve.faults import FaultInjector
+
+    fake = _FakeSwap()
+    s = Scheduler(lanes=1, n_pages=8, page_size=4, tenant_page_quota=4,
+                  faults=FaultInjector({"page_alloc": [1]}), swap=fake)
+    a = _req(0, tenant="a")                      # 2 pages worst case
+    s.submit(a)
+    assert s.admit() == [a]                      # alloc poll 0: clean
+    free_admitted = s.alloc.n_free
+    s.evict(0)                                   # capture → host slots
+    assert a.swap is fake.captured[0]
+    assert a.status is RequestStatus.PREEMPTED
+    assert s._tenant_load("a") == (1, 2)         # reservation rides along
+    assert s.admit() == []                       # alloc poll 1: FAILS
+    assert a.status is RequestStatus.FAILED
+    assert a.fail_reason == "injected:page_alloc"
+    assert s.drain_faulted() == [a]
+    # exactly-once, every resource class:
+    assert fake.discarded == [fake.captured[0]]  # host slots: once
+    assert a.swap is None                        # record consumed
+    assert list(s.free_lanes) == [0]             # lane back
+    assert s.alloc.n_free == free_admitted + 2   # pages back
+    assert s._tenant_load("a") == (0, 0)         # quota back
+    s.alloc.audit()
+    # the freed capacity is genuinely reusable
+    b = _req(1, tenant="a")
+    s.submit(b)
+    assert s.admit() == [b]
+
+
 # ---------------------------------------------------------------------------
 # deadlines (hand-driven clock at the scheduler level)
 # ---------------------------------------------------------------------------
@@ -309,10 +370,17 @@ def test_reason_table_wire_strings_are_pinned():
     assert reasons.POOL_LOST == "pool-lost"
     assert reasons.BAD_LOGITS == "bad-logits"
     assert reasons.HOST_BUDGET == "host-budget"
+    assert reasons.OOM == "oom"
+    assert reasons.SHARD_LOST == "shard-lost"
+    assert reasons.WATCHDOG == "watchdog"
     assert reasons.SHED_REASONS == {"queue-full", "tenant-quota",
                                     "page-budget", "deadline",
                                     "host-budget"}
     assert reasons.SHED_REASONS <= reasons.ALL_REASONS
+    # the chaos-era reasons are mid-flight only: SSE error events carry
+    # them, but they must never grow the admission-time HTTP table
+    assert {reasons.OOM, reasons.SHARD_LOST, reasons.WATCHDOG} \
+        <= reasons.ALL_REASONS - reasons.SHED_REASONS
     # prefixed composition round-trips, preserving colons in the detail
     composed = reasons.format_reason(reasons.POOL_LOST, "RuntimeError: x:y")
     assert composed == "pool-lost:RuntimeError: x:y"
@@ -333,6 +401,35 @@ def test_reason_table_http_mapping():
     assert reasons.http_for_reason("host-budget") == (429, 1)
     assert reasons.http_for_reason("some-future-reason") == (503, None)
     assert set(reasons.HTTP_STATUS) == reasons.SHED_REASONS
+
+
+def test_retry_after_scales_with_queue_depth():
+    """The live Retry-After contract: queue-full/host-budget hints scale
+    with (pending + active) in lane-batches, floored at the table value,
+    capped at RETRY_AFTER_CAP; page-budget stays None (futile retry);
+    tenant-quota/deadline stay at the table floor (their clearing time is
+    the client's own traffic, not the queue's); malformed snapshots fall
+    back to the floor rather than raising into the gateway."""
+    ra = reasons.retry_after_seconds
+    # no snapshot → static table values
+    assert ra("queue-full") == 1
+    assert ra("page-budget") is None
+    # depth scaling: ceil((pending + active) / lanes)
+    st = {"pending": 7, "active": 4, "lanes": 4}
+    assert ra("queue-full", st) == 3          # ceil(11/4)
+    assert ra("host-budget", st) == 3
+    assert ra("queue-full", {"pending": 0, "active": 0, "lanes": 4}) == 1
+    # non-scaled reasons ignore the snapshot entirely
+    assert ra("tenant-quota", st) == 1
+    assert ra("deadline", st) == 1
+    assert ra("page-budget", st) is None
+    # capped: an enormous backlog never tells clients to wait forever
+    deep = {"pending": 10_000, "active": 4, "lanes": 4}
+    assert ra("queue-full", deep) == reasons.RETRY_AFTER_CAP
+    # prefixed reasons key on the base
+    assert ra("queue-full", st) == ra(reasons.QUEUE_FULL, st)
+    # malformed snapshot → floor, never an exception
+    assert ra("queue-full", {"pending": "???", "lanes": 0}) == 1
 
 
 def test_shed_error_only_speaks_table_reasons():

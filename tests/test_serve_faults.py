@@ -157,6 +157,40 @@ def test_index_corruption_quarantines_and_serves_cold(engine):
         _assert_drained_clean(sess)
 
 
+def test_reclaim_sweep_contains_index_corruption(engine):
+    """Corruption nobody has looked up yet must not crash the RECLAIM
+    sweep (found by chaos seed 1016): ``prefix_index`` fires in the same
+    step as an admission whose lookup MISSES the corrupted node (cold
+    prompt, different first page) but whose reclaim sweep walks it to
+    free pages. The sweep must detect the bad node (not KeyError out of
+    the keyed eviction), quarantine, and admit cold against the flushed
+    pool — request served, tokens oracle-identical, zero leaks."""
+    eng, cfg = engine
+    a, b = _prompts(cfg, [12, 12])
+    b[0] = (a[0] + 1) % cfg.vocab_size   # different first page: no walk
+    inj = FaultInjector()
+    with eng.session(lanes=1, page_size=8, n_pages=4, segment=2,
+                     audit=True, faults=inj, prefix_cache=True) as sess:
+        first = sess.submit(a, SamplingParams(max_tokens=6))
+        sess.run_until_idle()            # index now holds a's prompt page
+        assert sess.prefix.owned_pages > 0
+        # b needs 3 pages; the index holds the pool's slack, so admission
+        # MUST reclaim (the path that crashed pre-fix)
+        assert sess.sched.alloc.n_free < 3
+        inj.arm("prefix_index", at=inj._count.get("prefix_index", 0))
+        second = sess.submit(b, SamplingParams(max_tokens=6))
+        sess.run_until_idle()
+        assert any(site == "prefix_index" for site, _ in inj.fired)
+        assert sess.prefix.quarantined
+        assert sess.prefix.stats["quarantines"] == 1
+        assert sess.prefix.owned_pages == 0          # flushed, zero leaks
+        assert second.status is RequestStatus.DONE
+        np.testing.assert_array_equal(second.tokens_so_far(),
+                                      _ref(eng, b, 6))
+        assert first.status is RequestStatus.DONE
+        _assert_drained_clean(sess)
+
+
 # ---------------------------------------------------------------------------
 # deadlines (fake clock drives time by hand)
 # ---------------------------------------------------------------------------
@@ -257,6 +291,84 @@ def test_pool_loss_contains_all_actives_then_recovers(engine, monkeypatch):
         np.testing.assert_array_equal(again.tokens_so_far(),
                                       _ref(eng, prompts[0], 6))
         _assert_drained_clean(sess)
+
+
+# ---------------------------------------------------------------------------
+# device OOM at decode dispatch: newest victim, co-residents bit-identical
+# ---------------------------------------------------------------------------
+def test_device_oom_fails_newest_keeps_coresidents_identical(engine):
+    eng, cfg = engine
+    prompts = _prompts(cfg, [9, 11])
+    inj = FaultInjector({"device_oom": [0]})
+    with eng.session(lanes=2, page_size=8, segment=2, audit=True,
+                     faults=inj, prefix_cache=False) as sess:
+        first = sess.submit(prompts[0], SamplingParams(max_tokens=6))
+        newest = sess.submit(prompts[1], SamplingParams(max_tokens=6))
+        sess.run_until_idle()
+        assert inj.fired == [("device_oom", 0)]
+        # victim policy: the NEWEST active request (its freed pages model
+        # the headroom a real RESOURCE_EXHAUSTED retry needs)
+        assert newest.status is RequestStatus.FAILED
+        assert newest.error == "oom:decode-segment"
+        assert len(newest.tokens_so_far()) == 1      # prefill token kept
+        # co-resident stream: bit-identical to the sequential oracle
+        assert first.status is RequestStatus.DONE
+        np.testing.assert_array_equal(first.tokens_so_far(),
+                                      _ref(eng, prompts[0], 6))
+        _assert_drained_clean(sess)
+        # the session keeps serving after containment
+        again = sess.submit(prompts[1], SamplingParams(max_tokens=6))
+        sess.run_until_idle()
+        assert again.status is RequestStatus.DONE
+        np.testing.assert_array_equal(again.tokens_so_far(),
+                                      _ref(eng, prompts[1], 6))
+        _assert_drained_clean(sess)
+
+
+def test_device_oom_sole_request_terminal_and_clean(engine):
+    eng, cfg = engine
+    (p,) = _prompts(cfg, [9])
+    inj = FaultInjector({"device_oom": [0]})
+    with eng.session(lanes=2, page_size=8, segment=2, audit=True,
+                     faults=inj, prefix_cache=False) as sess:
+        h = sess.submit(p, SamplingParams(max_tokens=6))
+        sess.run_until_idle()
+        assert h.status is RequestStatus.FAILED
+        assert h.error == "oom:decode-segment"
+        assert sess.idle
+        _assert_drained_clean(sess)
+    # never polled on the mesh-only site single-device
+    assert all(site != "shard_loss" for site, _ in inj.fired)
+
+
+# ---------------------------------------------------------------------------
+# strict REPRO_FAULTS parsing: a typo'd chaos plan must not silently no-op
+# ---------------------------------------------------------------------------
+def test_from_env_rejects_unknown_sites_and_bad_indices():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultInjector.from_env("page_alloc@1,not_a_site@0")
+    with pytest.raises(ValueError, match="empty entry"):
+        FaultInjector.from_env("page_alloc@1,,kernel_dispatch@0")
+    with pytest.raises(ValueError, match="bad poll index"):
+        FaultInjector.from_env("page_alloc@x")
+    with pytest.raises(ValueError, match="negative"):
+        FaultInjector.from_env("page_alloc@-3")
+    assert FaultInjector.from_env("") is None
+    assert FaultInjector.from_env("   ") is None
+    # the documented shorthand still parses: bare site means poll 0,
+    # whitespace around entries is tolerated
+    inj = FaultInjector.from_env(" kernel_dispatch , page_alloc@2 ")
+    assert inj.should_fire("kernel_dispatch")
+    assert not inj.should_fire("page_alloc")
+    assert not inj.should_fire("page_alloc")
+    assert inj.should_fire("page_alloc")
+
+
+def test_constructor_and_arm_reject_unknown_sites():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultInjector({"not_a_site": [0]})
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultInjector().arm("also_bad", at=1)
 
 
 # ---------------------------------------------------------------------------
